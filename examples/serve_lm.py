@@ -1,0 +1,27 @@
+"""Batched serving example: continuous-batching engine over prefill/decode
+with greedy and temperature sampling.
+
+    PYTHONPATH=src python examples/serve_lm.py [--arch qwen3-8b]
+"""
+
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.serve import serve
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-8b")
+    ap.add_argument("--requests", type=int, default=6)
+    args = ap.parse_args()
+    results = serve(args.arch, n_requests=args.requests, max_new=12)
+    for rid, toks in sorted(results.items()):
+        print(f"  request {rid}: {toks}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,83 @@
+"""Architecture registry: ``--arch <id>`` resolution + input specs.
+
+``input_specs(cfg, shape)`` returns ShapeDtypeStruct stand-ins for every
+input of the lowered step function — weak-type-correct, shardable, no
+device allocation (the dry-run pattern).
+"""
+
+from __future__ import annotations
+
+import importlib
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.shapes import SHAPES, Shape, applicable
+from repro.models.config import ModelConfig
+
+_MODULES = {
+    "llava-next-mistral-7b": "llava_next_mistral_7b",
+    "rwkv6-3b": "rwkv6_3b",
+    "internlm2-1.8b": "internlm2_1_8b",
+    "qwen3-8b": "qwen3_8b",
+    "gemma3-12b": "gemma3_12b",
+    "qwen3-32b": "qwen3_32b",
+    "olmoe-1b-7b": "olmoe_1b_7b",
+    "granite-moe-3b-a800m": "granite_moe_3b_a800m",
+    "hubert-xlarge": "hubert_xlarge",
+    "recurrentgemma-2b": "recurrentgemma_2b",
+}
+
+ARCH_IDS = tuple(_MODULES)
+
+
+def _mod(arch: str):
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(_MODULES)}")
+    return importlib.import_module(f"repro.configs.{_MODULES[arch]}")
+
+
+def get_config(arch: str) -> ModelConfig:
+    return _mod(arch).CONFIG
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    return _mod(arch).SMOKE
+
+
+def all_configs() -> Dict[str, ModelConfig]:
+    return {a: get_config(a) for a in ARCH_IDS}
+
+
+def batch_input_specs(cfg: ModelConfig, batch: int, seq: int):
+    """Training-batch ShapeDtypeStructs for one step."""
+    if cfg.input_kind == "tokens":
+        x = jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+    else:
+        x = jax.ShapeDtypeStruct((batch, seq, cfg.d_model), jnp.bfloat16)
+    labels = jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+    return {"x": x, "labels": labels}
+
+
+def decode_input_specs(cfg: ModelConfig, batch: int):
+    if cfg.input_kind == "tokens":
+        return {"token": jax.ShapeDtypeStruct((batch,), jnp.int32)}
+    # embeds-input backbones decode from frontend-embedded vectors
+    return {"token": jax.ShapeDtypeStruct((batch, cfg.d_model),
+                                          jnp.bfloat16)}
+
+
+def param_specs(cfg: ModelConfig):
+    """Parameter ShapeDtypeStructs via eval_shape (no allocation)."""
+    from repro.models.api import get_model
+    model = get_model(cfg)
+    return jax.eval_shape(
+        lambda k: model.init(k, cfg), jax.random.PRNGKey(0))
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_seq: int):
+    from repro.models.api import get_model
+    model = get_model(cfg)
+    return jax.eval_shape(
+        lambda: model.init_cache(cfg, batch, max_seq))

@@ -1,0 +1,270 @@
+"""A small constraint-programming solver (integer B&B + bounds propagation).
+
+The paper uses OR-Tools CP solvers for both optimization stages (§4).  That
+dependency is not available in this environment, so we implement the needed
+fragment ourselves:
+
+  * integer decision variables with finite domains,
+  * linear (in)equality constraints with float coefficients,
+  * a *makespan* objective  ``minimize  max_d  load_d(x)``  where every
+    ``load_d`` is linear (Eq. 2 makes match latencies linear in the tile
+    variables, which is exactly what keeps this tractable — §3.1),
+  * depth-first branch & bound with bounds-consistency propagation, a value
+    hint (warm start from a greedy heuristic) and node/time limits.
+
+Solutions report whether they are proven optimal.  Small instances (the
+MLPerf-Tiny graphs) solve to optimality in milliseconds; tests cross-check
+against brute-force enumeration on tiny models.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+EPS = 1e-6
+
+
+@dataclasses.dataclass
+class Solution:
+    values: List[int]
+    objective: float
+    optimal: bool
+    nodes: int
+    wall_s: float
+
+
+class Infeasible(Exception):
+    pass
+
+
+@dataclasses.dataclass
+class _Lin:
+    """sum(coeffs[i] * x[i]) + const  (<= 0  or  == 0)."""
+    coeffs: Dict[int, float]
+    const: float
+    is_eq: bool
+
+
+class CpModel:
+    def __init__(self) -> None:
+        self._lo: List[int] = []
+        self._hi: List[int] = []
+        self._names: List[str] = []
+        self._cons: List[_Lin] = []
+        self._loads: List[Tuple[Dict[int, float], float]] = []  # makespan terms
+
+    # -- model building -----------------------------------------------------
+    def new_int(self, lo: int, hi: int, name: str = "") -> int:
+        assert lo <= hi, f"empty domain for {name}"
+        self._lo.append(int(lo))
+        self._hi.append(int(hi))
+        self._names.append(name or f"x{len(self._lo) - 1}")
+        return len(self._lo) - 1
+
+    def add_le(self, coeffs: Dict[int, float], const: float = 0.0) -> None:
+        """sum(c_i * x_i) + const <= 0"""
+        self._cons.append(_Lin(dict(coeffs), float(const), False))
+
+    def add_ge(self, coeffs: Dict[int, float], const: float = 0.0) -> None:
+        self.add_le({i: -c for i, c in coeffs.items()}, -const)
+
+    def add_eq(self, coeffs: Dict[int, float], const: float = 0.0) -> None:
+        self._cons.append(_Lin(dict(coeffs), float(const), True))
+
+    def add_load(self, coeffs: Dict[int, float], const: float = 0.0) -> None:
+        """One makespan term: the objective is max over all added loads."""
+        self._loads.append((dict(coeffs), float(const)))
+
+    @property
+    def num_vars(self) -> int:
+        return len(self._lo)
+
+    # -- propagation ---------------------------------------------------------
+    @staticmethod
+    def _term_min(c: float, lo: int, hi: int) -> float:
+        return c * lo if c >= 0 else c * hi
+
+    @staticmethod
+    def _term_max(c: float, lo: int, hi: int) -> float:
+        return c * hi if c >= 0 else c * lo
+
+    def _propagate(self, lo: List[int], hi: List[int]) -> None:
+        """Bounds-consistency fixpoint; raises Infeasible."""
+        cons = self._cons
+        for _ in range(64):  # fixpoint iterations cap
+            changed = False
+            for con in cons:
+                rounds = (False, True) if con.is_eq else (False,)
+                for flipped in rounds:
+                    sgn = -1.0 if flipped else 1.0
+                    # constraint: sgn*(sum + const) <= 0
+                    smin = sgn * con.const
+                    smin_terms = {}
+                    for i, c in con.coeffs.items():
+                        t = self._term_min(sgn * c, lo[i], hi[i])
+                        smin_terms[i] = t
+                        smin += t
+                    if smin > EPS:
+                        raise Infeasible()
+                    for i, c in con.coeffs.items():
+                        cc = sgn * c
+                        if cc == 0.0:
+                            continue
+                        rest = smin - smin_terms[i]
+                        # cc * x_i <= -rest
+                        bound = -rest / cc
+                        if cc > 0:
+                            nb = math.floor(bound + EPS)
+                            if nb < hi[i]:
+                                hi[i] = nb
+                                changed = True
+                        else:
+                            nb = math.ceil(bound - EPS)
+                            if nb > lo[i]:
+                                lo[i] = nb
+                                changed = True
+                        if lo[i] > hi[i]:
+                            raise Infeasible()
+            if not changed:
+                return
+
+    def _obj_lb(self, lo: List[int], hi: List[int]) -> float:
+        if not self._loads:
+            return 0.0
+        best = -math.inf
+        for coeffs, const in self._loads:
+            v = const + sum(self._term_min(c, lo[i], hi[i])
+                            for i, c in coeffs.items())
+            best = max(best, v)
+        return best
+
+    def _obj_value(self, x: List[int]) -> float:
+        if not self._loads:
+            return 0.0
+        return max(const + sum(c * x[i] for i, c in coeffs.items())
+                   for coeffs, const in self._loads)
+
+    def _feasible(self, x: List[int]) -> bool:
+        for con in self._cons:
+            s = con.const + sum(c * x[i] for i, c in con.coeffs.items())
+            if con.is_eq:
+                if abs(s) > 1e-4:
+                    return False
+            elif s > 1e-4:
+                return False
+        return True
+
+    # -- search ---------------------------------------------------------------
+    def solve(self, hint: Optional[Sequence[int]] = None,
+              node_limit: int = 400_000,
+              time_budget_s: float = 20.0) -> Solution:
+        t0 = time.perf_counter()
+        lo, hi = list(self._lo), list(self._hi)
+        try:
+            self._propagate(lo, hi)
+        except Infeasible:
+            raise Infeasible("model infeasible at the root")
+
+        best_x: Optional[List[int]] = None
+        best_obj = math.inf
+        if hint is not None and len(hint) == self.num_vars:
+            hx = [min(max(int(v), self._lo[i]), self._hi[i])
+                  for i, v in enumerate(hint)]
+            if self._feasible(hx):
+                best_x, best_obj = hx, self._obj_value(hx)
+
+        nodes = 0
+        exhausted = True
+        # Branch on the variable with the widest domain weighted by its
+        # largest |coefficient| across makespan terms ("impact").
+        impact = [0.0] * self.num_vars
+        for coeffs, _ in self._loads:
+            for i, c in coeffs.items():
+                impact[i] = max(impact[i], abs(c))
+        for con in self._cons:
+            for i, c in con.coeffs.items():
+                impact[i] = max(impact[i], 1e-3 * abs(c))
+
+        hint_vals = list(hint) if hint is not None else None
+
+        stack: List[Tuple[List[int], List[int]]] = [(lo, hi)]
+        while stack:
+            if nodes >= node_limit or time.perf_counter() - t0 > time_budget_s:
+                exhausted = False
+                break
+            lo, hi = stack.pop()
+            nodes += 1
+            try:
+                self._propagate(lo, hi)
+            except Infeasible:
+                continue
+            if self._obj_lb(lo, hi) >= best_obj - 1e-7:
+                continue
+            free = [i for i in range(self.num_vars) if lo[i] < hi[i]]
+            if not free:
+                x = lo
+                if self._feasible(x):
+                    obj = self._obj_value(x)
+                    if obj < best_obj - 1e-9:
+                        best_obj, best_x = obj, list(x)
+                continue
+            i = max(free, key=lambda j: (hi[j] - lo[j]) * (impact[j] + 1e-9))
+            if hint_vals is not None and lo[i] <= hint_vals[i] <= hi[i]:
+                mid = hint_vals[i]
+                # children: x==mid first (dive to hint), then the two sides
+                l1, h1 = list(lo), list(hi)
+                h1[i] = mid - 1
+                l2, h2 = list(lo), list(hi)
+                l2[i] = mid + 1
+                l0, h0 = list(lo), list(hi)
+                l0[i] = h0[i] = mid
+                if mid + 1 <= hi[i]:
+                    stack.append((l2, h2))
+                if lo[i] <= mid - 1:
+                    stack.append((l1, h1))
+                stack.append((l0, h0))
+            else:
+                mid = (lo[i] + hi[i]) // 2
+                l1, h1 = list(lo), list(hi)
+                h1[i] = mid
+                l2, h2 = list(lo), list(hi)
+                l2[i] = mid + 1
+                stack.append((l2, h2))
+                stack.append((l1, h1))
+
+        if best_x is None:
+            raise Infeasible("no feasible solution found within limits")
+        return Solution(values=best_x, objective=best_obj,
+                        optimal=exhausted, nodes=nodes,
+                        wall_s=time.perf_counter() - t0)
+
+
+def brute_force(model: CpModel) -> Solution:
+    """Exhaustive search for tests (tiny domains only)."""
+    n = model.num_vars
+    best_x, best_obj = None, math.inf
+    x = [0] * n
+    total = 1
+    for i in range(n):
+        total *= model._hi[i] - model._lo[i] + 1
+    assert total <= 2_000_000, "brute_force domain too large"
+
+    def rec(i: int) -> None:
+        nonlocal best_x, best_obj
+        if i == n:
+            if model._feasible(x):
+                obj = model._obj_value(x)
+                if obj < best_obj:
+                    best_obj, best_x = obj, list(x)
+            return
+        for v in range(model._lo[i], model._hi[i] + 1):
+            x[i] = v
+            rec(i + 1)
+
+    rec(0)
+    if best_x is None:
+        raise Infeasible("brute force: infeasible")
+    return Solution(best_x, best_obj, True, total, 0.0)

@@ -1,0 +1,40 @@
+"""Sharding hints: meshplan decisions threaded into model internals.
+
+GSPMD propagates shardings from the jit boundary, but some interior
+tensors (the MoE dispatch buffers, decode cache updates) reshape/transpose
+enough that propagation picks pathological layouts (e.g. all-gathering an
+expert-parallel dispatch buffer, or re-gathering a sequence-sharded KV
+cache every decode step).  The mesh partitioner records the intended
+PartitionSpec for those tensors in ``plan.hints``; model code requests
+them by name via :func:`constraint` — a no-op when no plan is active
+(smoke tests, examples on one device).
+
+This is the MaxText "logical axis rules" pattern, and on the MATCHA side
+it is the moral equivalent of §3.2's device-specific scheduling refinement:
+the global CP decision gets enforced at the tensor level.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+
+_ACTIVE: Dict[str, Any] = {}
+
+
+def set_hints(hints: Optional[Dict[str, Any]]) -> None:
+    _ACTIVE.clear()
+    if hints:
+        _ACTIVE.update(hints)
+
+
+def get(name: str):
+    return _ACTIVE.get(name)
+
+
+def constraint(x, name: str):
+    spec = _ACTIVE.get(name)
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)

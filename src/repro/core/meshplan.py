@@ -1,0 +1,439 @@
+"""MeshPartitioner — MATCHA's tile-centric CP mapping, adapted to TPU pods.
+
+The paper assigns integer tile counts of each operator to heterogeneous
+*devices* to minimize a makespan over per-device loads (Eqs. 1-2).  On a
+homogeneous TPU mesh the heterogeneity moves into the *lanes* of each chip:
+MXU compute, HBM bandwidth, and ICI collectives each have their own "alpha"
+(inverse peak).  The partitioner keeps the same CP structure:
+
+  * "patterns"  -> candidate sharding strategies per tensor class
+                   (head-TP, ffn-TP, expert-parallel, sequence-shard, DP);
+  * "tiles"     -> the shardable extent (heads / ffn columns / experts /
+                   sequence blocks) split across the `model` axis;
+  * "devices"   -> the three lanes; the objective is the max over lanes of
+                   the summed per-step occupancy in seconds (the roofline
+                   makespan — exactly what §Roofline reports);
+  * Eq. (1)     -> each class selects exactly one strategy (coverage);
+                   divisibility constraints play the role of match
+                   feasibility (a 40-expert MoE cannot take EP=16, so the
+                   CP routes it to ffn-TP instead — granite vs olmoe).
+
+The output is a ShardingPlan: param-path -> PartitionSpec rules plus
+activation/cache specs, consumed by pjit in launch/{dryrun,train,serve}.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import cpsolver
+from repro.models.config import ModelConfig
+
+# TPU v5e lane constants (per chip)
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s/link
+# Effective per-chip collective bandwidth for the *planner*: a 2D-torus
+# chip runs bidirectional rings (2 links per AR direction), and XLA's
+# latency-hiding scheduler overlaps most collective time under compute —
+# pricing collectives at raw single-link cost makes the CP flee to
+# replicated layouts that waste MXU 16x.  §Roofline still reports the
+# conservative single-link occupancy.
+ICI_EFF = 2 * ICI_BW
+
+# perf-iteration knob: decode cache writes via scatter instead of select
+DECODE_SCATTER_UPDATE = False
+
+
+@dataclasses.dataclass
+class ShardingPlan:
+    arch: str
+    mode: str                                    # train | prefill | decode
+    rules: List[Tuple[str, P]]                   # path regex -> spec
+    data_axes: Tuple[str, ...]                   # batch sharding axes
+    model_axis: str
+    strategy: Dict[str, str]                     # class -> chosen strategy
+    lane_seconds: Dict[str, float]               # CP's predicted occupancy
+    notes: List[str] = dataclasses.field(default_factory=list)
+    # interior-tensor sharding hints (core.hints), e.g. MoE dispatch
+    hints: Dict[str, P] = dataclasses.field(default_factory=dict)
+
+    def spec_for(self, path: str, ndim: Optional[int] = None) -> P:
+        spec = P()
+        for pat, s in self.rules:
+            if re.search(pat, path):
+                spec = s
+                break
+        # stacked layer slots carry a leading (replicated) G axis
+        if ndim is not None and path.startswith("blocks/") \
+                and ndim == len(spec) + 1:
+            spec = P(*((None,) + tuple(spec)))
+        return spec
+
+    def sharding_for(self, mesh: Mesh, path: str,
+                     ndim: Optional[int] = None) -> NamedSharding:
+        return NamedSharding(mesh, self.spec_for(path, ndim))
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def tree_shardings(plan: ShardingPlan, mesh: Mesh, tree):
+    """Matching pytree of NamedShardings for a params/cache pytree."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: plan.sharding_for(mesh, _path_str(path),
+                                             len(leaf.shape)), tree)
+
+
+# ---------------------------------------------------------------------------
+# Strategy candidates and their lane costs
+# ---------------------------------------------------------------------------
+
+
+def _choose(model_par: int, cfg: ModelConfig, tokens_per_step: int,
+            dp: int) -> Tuple[Dict[str, str], Dict[str, float], List[str]]:
+    """CP selection of one strategy per class.  Costs are per-step lane
+    occupancy in seconds for the dominant matmuls; constants cancel in the
+    argmax so only *relative* structure matters, but we keep real units so
+    the same numbers flow into §Roofline."""
+    D, F, V = cfg.d_model, cfg.d_ff, cfg.vocab
+    H, KV, dh = max(cfg.n_heads, 1), max(cfg.n_kv, 1), cfg.head_dim_
+    E = cfg.n_experts
+    notes: List[str] = []
+
+    classes: Dict[str, List[Tuple[str, Dict[str, float], bool]]] = {}
+
+    def flops_s(fl):
+        return fl / PEAK_FLOPS
+
+    def mem_s(by):
+        return by / HBM_BW
+
+    def ici_s(by):
+        return by / ICI_EFF
+
+    t = tokens_per_step / max(dp, 1)          # tokens per data shard
+    # HBM traffic is params + *activations*: a replicated-compute strategy
+    # re-reads/writes the full per-data-shard activations on every chip of
+    # the model axis, while TP touches 1/model_par of them.  Leaving this
+    # term out made the CP prefer replication whenever the AR looked
+    # expensive — refuted by the measured §Perf B experiment (head-TP cut
+    # the dominant memory term 10.6 s -> 3.3 s on internlm2).
+    act_bytes = 8 * t * D * 2                 # ~8 tensor touches / layer
+    # --- attention projections class ---
+    attn_flops = 2 * t * D * (H * dh + 2 * KV * dh + H * dh)
+    cands = []
+    if H % model_par == 0 and (KV % model_par == 0 or KV <= model_par):
+        # Megatron head-TP: qkv col-sharded, o row-sharded; one all-reduce
+        # of the block output per layer (fused with the MLP's in practice)
+        kv_rep = max(model_par // KV, 1)
+        ar_bytes = 2 * t * D * 2            # fwd ar + bwd ar (bf16)
+        cands.append(("head_tp", {
+            "mxu": flops_s(attn_flops / model_par),
+            "hbm": mem_s((2 * (D * (H + 2 * KV * kv_rep) * dh)
+                          + act_bytes) / model_par),
+            "ici": ici_s(ar_bytes),
+        }, True))
+    cands.append(("dp_replicated", {
+        "mxu": flops_s(attn_flops),
+        "hbm": mem_s(2 * D * (H + 2 * KV) * dh + act_bytes),
+        "ici": 0.0,
+    }, True))
+    classes["attention"] = cands
+
+    # --- FFN class ---
+    if cfg.family == "moe":
+        ffn_flops = 2 * t * cfg.top_k * 3 * D * F
+        cands = []
+        if E % model_par == 0:
+            a2a = 2 * t * cfg.top_k * D * 2 * 2   # dispatch+combine, fwd+bwd
+            cands.append(("expert_parallel", {
+                "mxu": flops_s(ffn_flops / model_par),
+                "hbm": mem_s(2 * E * 3 * D * F / model_par),
+                "ici": ici_s(a2a / 4),             # a2a moves 1/axis bytes
+            }, True))
+        if F % model_par == 0 or F >= model_par:
+            cands.append(("expert_ffn_tp", {
+                "mxu": flops_s(ffn_flops / model_par),
+                "hbm": mem_s(2 * E * 3 * D * F / model_par),
+                "ici": ici_s(2 * t * D * 2 * 2),
+            }, True))
+        cands.append(("dp_replicated", {
+            "mxu": flops_s(ffn_flops),
+            "hbm": mem_s(2 * E * 3 * D * F),
+            "ici": 0.0,
+        }, True))
+        classes["ffn"] = cands
+    else:
+        ffn_flops = 2 * t * 3 * D * F
+        classes["ffn"] = [
+            ("ffn_tp", {
+                "mxu": flops_s(ffn_flops / model_par),
+                "hbm": mem_s(2 * 3 * D * F / model_par),
+                "ici": ici_s(2 * t * D * 2),
+            }, F % model_par == 0),
+            ("dp_replicated", {
+                "mxu": flops_s(ffn_flops),
+                "hbm": mem_s(2 * 3 * D * F),
+                "ici": 0.0,
+            }, True),
+        ]
+
+    # --- vocab / embedding class ---
+    emb_flops = 2 * t * D * V
+    classes["vocab"] = [
+        ("vocab_tp", {
+            "mxu": flops_s(emb_flops / model_par),
+            "hbm": mem_s(2 * 2 * V * D / model_par),
+            # the iota-compare CE keeps logits vocab-sharded: only the
+            # per-token max/sum scalars cross the ICI (train/step.py)
+            "ici": ici_s(t * 8),
+        }, V % model_par == 0),
+        ("dp_replicated", {
+            "mxu": flops_s(emb_flops),
+            "hbm": mem_s(2 * 2 * V * D),
+            "ici": 0.0,
+        }, True),
+    ]
+
+    # --- CP: pick one strategy per class, minimize max lane load ---
+    model = cpsolver.CpModel()
+    yvars: Dict[Tuple[str, str], int] = {}
+    for cname, cands in classes.items():
+        feas = [(s, costs) for (s, costs, ok) in cands if ok]
+        ys = []
+        for s, costs in feas:
+            y = model.new_int(0, 1, f"{cname}:{s}")
+            yvars[(cname, s)] = y
+            ys.append(y)
+        model.add_eq({y: 1.0 for y in ys}, -1.0)    # exactly one
+    for lane in ("mxu", "hbm", "ici"):
+        load = {}
+        for (cname, s), y in yvars.items():
+            costs = dict(next(c for (nm, c, ok) in classes[cname]
+                              if nm == s))
+            load[y] = load.get(y, 0.0) + costs[lane]
+        model.add_load(load)
+    sol = model.solve(node_limit=20_000, time_budget_s=2.0)
+
+    chosen: Dict[str, str] = {}
+    for (cname, s), y in yvars.items():
+        if sol.values[y] == 1:
+            chosen[cname] = s
+    lanes = {"mxu": 0.0, "hbm": 0.0, "ici": 0.0}
+    for cname, s in chosen.items():
+        costs = next(c for (nm, c, ok) in classes[cname] if nm == s)
+        for lane in lanes:
+            lanes[lane] += costs[lane]
+    for cname, cands in classes.items():
+        feas = {nm for (nm, _, ok) in cands if ok}
+        infeas = {nm for (nm, _, ok) in cands if not ok}
+        if infeas:
+            notes.append(f"{cname}: {sorted(infeas)} infeasible at "
+                         f"model={model_par} -> {chosen[cname]}")
+    return chosen, lanes, notes
+
+
+# ---------------------------------------------------------------------------
+# Rule synthesis
+# ---------------------------------------------------------------------------
+
+
+def plan_model(cfg: ModelConfig, mesh: Mesh, mode: str,
+               global_batch: int, seq_len: int,
+               override: Optional[Dict[str, str]] = None) -> ShardingPlan:
+    """``override``: force strategies (class -> name) past the CP — the
+    perf-iteration harness uses this for hypothesis testing."""
+    axes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    model_axis = "model"
+    model_par = axes.get("model", 1)
+    data_axes = tuple(a for a in ("pod", "data") if a in axes)
+    dp = 1
+    for a in data_axes:
+        dp *= axes[a]
+    tokens = global_batch * (seq_len if mode == "train" else 1)
+
+    chosen, lanes, notes = _choose(model_par, cfg, tokens, dp)
+    if override:
+        chosen.update(override)
+        notes.append(f"strategy override: {override}")
+    M = model_axis
+    dspec = data_axes if len(data_axes) > 1 else (data_axes[0]
+                                                  if data_axes else None)
+
+    rules: List[Tuple[str, P]] = []
+    # ---- attention ----
+    if chosen.get("attention") == "head_tp":
+        rules += [
+            (r"attn/w[qkv]/w$", P(None, M)),
+            (r"attn/wo/w$", P(M, None)),
+            (r"attn/[qk]_norm/g$", P()),
+        ]
+    else:
+        rules += [(r"attn/", P())]
+        notes.append("attention: replicated (DP only)")
+    # ---- FFN ----
+    if cfg.family == "moe":
+        if chosen.get("ffn") == "expert_parallel":
+            rules += [
+                (r"moe/w_(gate|up)$", P(M, None, None)),
+                (r"moe/w_down$", P(M, None, None)),
+                (r"moe/router/w$", P()),
+            ]
+        elif chosen.get("ffn") == "expert_ffn_tp":
+            rules += [
+                (r"moe/w_(gate|up)$", P(None, None, M)),
+                (r"moe/w_down$", P(None, M, None)),
+                (r"moe/router/w$", P()),
+            ]
+        else:
+            rules += [(r"moe/", P())]
+    else:
+        if chosen.get("ffn") == "ffn_tp":
+            rules += [
+                (r"(mlp|cm)/w_?(gate|up|k)?(/w)?$", P(None, M)),
+                (r"(mlp|cm)/w_?(down|v)(/w)?$", P(M, None)),
+            ]
+        else:
+            rules += [(r"(mlp|cm)/", P())]
+    # ---- rwkv time-mix / rglru recurrent projections: model-shard the
+    # channel dimension (the diagonal recurrence is channel-parallel) ----
+    rules += [
+        (r"tm/w[rkvg]/w$", P(None, M)),
+        (r"tm/wo/w$", P(M, None)),
+        (r"tm/(w0|u|mu_.*)$", P()),
+        (r"tm/w_lora_[ab]/w$", P()),
+        (r"rec/w_(gate|x)/w$", P(None, M)),
+        (r"rec/w(a|i)/w$", P(None, M)),
+        (r"rec/(lam|conv)$", P()),
+        (r"rec/w_out/w$", P(M, None)),
+    ]
+    # ---- vocab ----
+    if chosen.get("vocab") == "vocab_tp":
+        rules += [
+            (r"embed/table$", P(M, None)),
+            (r"head/w$", P(None, M)),
+        ]
+    else:
+        rules += [(r"embed/table$", P()), (r"head/w$", P())]
+    # ---- norms & defaults ----
+    rules += [(r"ln", P()), (r".", P())]
+
+    # ---- interior-tensor hints (enforced via core.hints) ----
+    hints: Dict[str, P] = {}
+    if cfg.family == "moe":
+        # dispatch buffers are (E, B*C, D); hidden is (E, B*C, F)
+        if chosen.get("ffn") == "expert_parallel":
+            hints["moe_dispatch"] = P(M, None, None)
+            hints["moe_hidden"] = P(M, None, None)
+            hints["moe_out"] = P(M, None, None)
+        elif chosen.get("ffn") == "expert_ffn_tp":
+            hints["moe_dispatch"] = P(None, dspec, None)
+            hints["moe_hidden"] = P(None, dspec, M)
+            hints["moe_out"] = P(None, dspec, None)
+    if mode == "decode":
+        # keep the updated KV cache in its planned layout instead of
+        # letting GSPMD re-gather it every step (caches are (B,S,KV,Dh))
+        axes_d = dict(zip(mesh.axis_names, mesh.devices.shape))
+        batch_ok = global_batch % max(dp, 1) == 0 and global_batch >= dp
+        seq_ok = True   # per-layer seq lengths vary; constraint checks rank
+        bd = dspec if batch_ok else None
+        if DECODE_SCATTER_UPDATE:
+            hints["decode_scatter_update"] = True
+        hints["decode_cache"] = P(bd, M, None, None)
+        hints["decode_logits"] = P(bd, None, None, M)
+        # with a 1-token batch GSPMD prefers all-gathering the TP weights;
+        # pin the projection outputs to stay model-sharded
+        if chosen.get("attention") == "head_tp" \
+                and cfg.n_heads % model_par == 0:
+            hints["decode_heads"] = P(bd, None, M, None)
+        if chosen.get("ffn") == "ffn_tp" and cfg.d_ff % model_par == 0:
+            hints["ffn_hidden"] = P(bd, None, M)
+
+    plan = ShardingPlan(arch=cfg.name, mode=mode, rules=rules,
+                        data_axes=data_axes, model_axis=model_axis,
+                        strategy=chosen, lane_seconds=lanes, notes=notes,
+                        hints=hints)
+    return plan
+
+
+# ---------------------------------------------------------------------------
+# Batch / cache specs
+# ---------------------------------------------------------------------------
+
+
+def batch_spec(plan: ShardingPlan) -> P:
+    d = plan.data_axes if len(plan.data_axes) != 1 else plan.data_axes[0]
+    return P(d)
+
+
+def batch_shardings(plan: ShardingPlan, mesh: Mesh, batch_tree):
+    d = plan.data_axes if len(plan.data_axes) != 1 else plan.data_axes[0]
+
+    def spec(path, leaf):
+        nd = len(leaf.shape)
+        return NamedSharding(mesh, P(*((d,) + (None,) * (nd - 1))))
+    return jax.tree_util.tree_map_with_path(spec, batch_tree)
+
+
+def cache_shardings(plan: ShardingPlan, mesh: Mesh, cache_tree,
+                    global_batch: int):
+    """KV caches: shard batch over the data axes; when the batch is too
+    small (long_500k has B=1) shard the *sequence* axis of attention caches
+    over `model` (GSPMD turns the decode attention into a seq-sharded
+    partial-softmax + reduce — ring-attention-style decode)."""
+    axes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dp = 1
+    for a in plan.data_axes:
+        dp *= axes[a]
+    d = plan.data_axes if len(plan.data_axes) != 1 else plan.data_axes[0]
+    M = plan.model_axis
+    batch_ok = global_batch % max(dp, 1) == 0 and global_batch >= dp
+
+    def spec(path, leaf):
+        ps = _path_str(path)
+        nd = len(leaf.shape)
+        # stacked slots carry a leading G axis: "slots/<u>/..."
+        stacked = ps.startswith("slots/")
+        lead = (None,) if stacked else ()
+        eff = nd - len(lead)
+
+        def mk(*axes_):
+            return NamedSharding(mesh, P(*(lead + axes_)))
+
+        if ps.endswith("pos"):
+            return NamedSharding(mesh, P(d if batch_ok else None))
+        if eff >= 4 and (ps.endswith("/k") or ps.endswith("/v")):
+            seq_ax = 1 if not stacked else 2
+            seq_ok = leaf.shape[seq_ax] % axes.get(M, 1) == 0
+            if batch_ok and seq_ok:
+                # 2-D cache sharding: batch over data, sequence over model
+                # (decode attention becomes a seq-sharded partial softmax
+                # + reduce — ring-decode); a 32k x 128-seq bf16 cache of a
+                # 7B model is ~34 GiB per data shard otherwise.
+                return mk(d, M, None, None)
+            if batch_ok:
+                return mk(d, None, None, None)
+            if seq_ok:
+                return mk(None, M, None, None)
+            return mk(*((None,) * eff))
+        if eff == 4 and "wkv" in ps:
+            return mk(d if batch_ok else None, None, None, None)
+        if eff >= 2 and batch_ok:
+            return mk(*((d,) + (None,) * (eff - 1)))
+        return mk(*((None,) * eff))
+    return jax.tree_util.tree_map_with_path(spec, cache_tree)

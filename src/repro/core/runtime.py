@@ -1,0 +1,358 @@
+"""Numeric execution of compiled plans in JAX (the asynchronous runtime, §3.3).
+
+Two executors:
+
+* :func:`execute_graph` — direct whole-graph evaluation (the oracle).
+* :func:`execute_plan` — tile-by-tile execution of an :class:`ExecutionPlan`:
+  every supernode computes exactly its tile segment of the fused chain
+  (including conv halos and the slice/concat helper semantics), and the
+  segments are stitched back into the full tensors, mirroring what the
+  generated multi-device binary does on the SoC.
+
+``execute_plan(plan) ≈ execute_graph(graph)`` (allclose) is the correctness
+contract of the whole compiler and is asserted by the tests for every
+benchmark model and every toolchain mode.
+
+Everything here runs in float32 regardless of the deployment dtype: the
+numerics validate *plan structure* (tiling, halos, segment stitching), not
+reduced-precision kernels.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.core.ir import Graph, Op, tile_axis
+from repro.core.rewrite import Supernode, TiledGraph
+from repro.core.schedule import ExecutionPlan
+
+Arrays = Dict[str, jnp.ndarray]
+
+
+# ---------------------------------------------------------------------------
+# Parameter / input initialization
+# ---------------------------------------------------------------------------
+
+
+def init_params(g: Graph, seed: int = 0) -> Arrays:
+    rng = np.random.default_rng(seed)
+    out: Arrays = {}
+    for name, t in g.tensors.items():
+        if t.kind == "param":
+            fan_in = int(np.prod(t.shape[:-1])) or 1
+            scale = 1.0 / math.sqrt(fan_in)
+            out[name] = jnp.asarray(
+                rng.normal(0.0, scale, size=t.shape).astype(np.float32))
+    return out
+
+
+def init_inputs(g: Graph, seed: int = 1) -> Arrays:
+    rng = np.random.default_rng(seed)
+    return {n: jnp.asarray(rng.normal(0.0, 1.0, size=g.tensors[n].shape)
+                           .astype(np.float32)) for n in g.inputs}
+
+
+# ---------------------------------------------------------------------------
+# Full-op semantics
+# ---------------------------------------------------------------------------
+
+
+def _conv_pads(h: int, kh: int, stride: int, padding: str) -> Tuple[int, int]:
+    if padding != "same":
+        return 0, 0
+    out = math.ceil(h / stride)
+    total = max((out - 1) * stride + kh - h, 0)
+    return total // 2, total - total // 2
+
+
+def _pad_nhwc(x: jnp.ndarray, kh: int, kw: int, stride: int,
+              padding: str) -> jnp.ndarray:
+    if padding != "same":
+        return x
+    _, h, w, _ = x.shape
+    pt, pb = _conv_pads(h, kh, stride, padding)
+    pl_, pr = _conv_pads(w, kw, stride, padding)
+    return jnp.pad(x, ((0, 0), (pt, pb), (pl_, pr), (0, 0)))
+
+
+def run_op(g: Graph, op: Op, ins: Sequence[jnp.ndarray]) -> jnp.ndarray:
+    a = op.attrs
+    ot = op.op_type
+    if ot in ("conv2d", "dwconv2d"):
+        x, w = ins[0], ins[1]
+        stride = a.get("stride", 1)
+        padding = a.get("padding", "same")
+        kh, kw = w.shape[0], w.shape[1]
+        xp = _pad_nhwc(x, kh, kw, stride, padding)
+        groups = x.shape[-1] if ot == "dwconv2d" else 1
+        if ot == "dwconv2d":
+            # HWIO with I=1: reshape to (kh, kw, 1, C*mult) grouped conv
+            w = w.reshape(kh, kw, 1, -1)
+        return lax.conv_general_dilated(
+            xp, w, window_strides=(stride, stride), padding="VALID",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+            feature_group_count=groups)
+    if ot == "dense":
+        return jnp.matmul(ins[0], ins[1])
+    if ot in ("matmul", "batch_matmul"):
+        return jnp.matmul(ins[0], ins[1])
+    if ot == "add":
+        return ins[0] + ins[1]
+    if ot == "sub":
+        return ins[0] - ins[1]
+    if ot == "mul":
+        return ins[0] * ins[1]
+    if ot == "bias_add":
+        return ins[0] + ins[1]
+    if ot == "relu":
+        return jnp.maximum(ins[0], 0.0)
+    if ot == "relu6":
+        return jnp.clip(ins[0], 0.0, 6.0)
+    if ot == "gelu":
+        return jax.nn.gelu(ins[0], approximate=False)
+    if ot == "sigmoid":
+        return jax.nn.sigmoid(ins[0])
+    if ot == "tanh":
+        return jnp.tanh(ins[0])
+    if ot == "erf":
+        return lax.erf(ins[0])
+    if ot == "softmax":
+        return jax.nn.softmax(ins[0], axis=-1)
+    if ot == "layernorm":
+        x = ins[0]
+        mu = jnp.mean(x, axis=-1, keepdims=True)
+        var = jnp.var(x, axis=-1, keepdims=True)
+        y = (x - mu) / jnp.sqrt(var + 1e-5)
+        if len(ins) >= 3:
+            y = y * ins[1] + ins[2]
+        return y
+    if ot == "rmsnorm":
+        x = ins[0]
+        y = x / jnp.sqrt(jnp.mean(x * x, axis=-1, keepdims=True) + 1e-6)
+        if len(ins) >= 2:
+            y = y * ins[1]
+        return y
+    if ot in ("avg_pool2d", "max_pool2d"):
+        k = a["pool_size"]
+        s = a.get("stride", k)
+        pad = a.get("padding", "valid").upper()
+        x = ins[0]
+        if ot == "max_pool2d":
+            return lax.reduce_window(x, -jnp.inf, lax.max,
+                                     (1, k, k, 1), (1, s, s, 1), pad)
+        summed = lax.reduce_window(x, 0.0, lax.add,
+                                   (1, k, k, 1), (1, s, s, 1), pad)
+        return summed / float(k * k)
+    if ot == "global_avg_pool":
+        return jnp.mean(ins[0], axis=(1, 2))
+    if ot == "reshape":
+        return jnp.reshape(ins[0], tuple(g.tensors[op.output].shape))
+    if ot == "flatten":
+        n = ins[0].shape[0]
+        return jnp.reshape(ins[0], (n, -1))
+    if ot == "transpose":
+        return jnp.transpose(ins[0], a["perm"])
+    if ot == "slice":
+        idx = [slice(None)] * ins[0].ndim
+        idx[a["axis"]] = slice(a["begin"], a["end"])
+        return ins[0][tuple(idx)]
+    if ot == "concat":
+        return jnp.concatenate(ins, axis=a["axis"])
+    if ot == "pad":
+        pads = [(0, 0)] * ins[0].ndim
+        for ax, (lo, hi) in a["paddings"].items():
+            pads[int(ax)] = (lo, hi)
+        return jnp.pad(ins[0], pads)
+    if ot == "identity":
+        return ins[0]
+    raise NotImplementedError(ot)
+
+
+def execute_graph(g: Graph, inputs: Arrays, params: Arrays) -> Arrays:
+    """Direct whole-graph evaluation (the numeric oracle)."""
+    env: Arrays = {**inputs, **params}
+    for op in g.topo_ops():
+        env[op.output] = run_op(g, op, [env[t] for t in op.inputs])
+    return {t: env[t] for t in g.outputs}
+
+
+# ---------------------------------------------------------------------------
+# Tiled execution
+# ---------------------------------------------------------------------------
+
+
+def _coord_range(g: Graph, op: Op, lo: int, hi: int, T: int,
+                 ax: int) -> Tuple[int, int]:
+    extent = g.tensors[op.output].shape[ax]
+    assert extent % T == 0, (op.name, extent, T)
+    step = extent // T
+    return lo * step, hi * step
+
+
+def _slice_axis(x: jnp.ndarray, ax: int, c0: int, c1: int) -> jnp.ndarray:
+    idx = [slice(None)] * x.ndim
+    idx[ax] = slice(c0, c1)
+    return x[tuple(idx)]
+
+
+def _conv_row_tile(g: Graph, op: Op, ins: Sequence[jnp.ndarray],
+                   r0: int, r1: int) -> jnp.ndarray:
+    """Rows [r0, r1) of a conv2d / dwconv2d / pool output, computed from an
+    input slice with halo — the slice helper semantics of §3.1."""
+    a = op.attrs
+    ot = op.op_type
+    x = ins[0]
+    if ot in ("conv2d", "dwconv2d"):
+        w = ins[1]
+        kh, kw = w.shape[0], w.shape[1]
+        stride = a.get("stride", 1)
+        padding = a.get("padding", "same")
+        xp = _pad_nhwc(x, kh, kw, stride, padding)
+        i0 = r0 * stride
+        i1 = (r1 - 1) * stride + kh
+        xs = xp[:, i0:i1, :, :]
+        groups = x.shape[-1] if ot == "dwconv2d" else 1
+        if ot == "dwconv2d":
+            w = w.reshape(kh, kw, 1, -1)
+        return lax.conv_general_dilated(
+            xs, w, window_strides=(stride, stride), padding="VALID",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+            feature_group_count=groups)
+    if ot in ("avg_pool2d", "max_pool2d"):
+        k = a["pool_size"]
+        s = a.get("stride", k)
+        i0, i1 = r0 * s, (r1 - 1) * s + k
+        xs = x[:, i0:i1, :, :]
+        sub = Op(op.name + ":t", ot, op.inputs, op.output,
+                 {**a, "padding": "valid"})
+        return run_op(g, sub, [xs])
+    raise NotImplementedError(ot)
+
+
+def _chain_is_neuron_tiled(g: Graph, head: Op) -> bool:
+    ax = tile_axis(g, head)
+    out = g.tensors[head.output]
+    return ax is not None and ax == len(out.shape) - 1
+
+
+def run_supernode(g: Graph, sn: Supernode, env: Arrays) -> Dict[str, jnp.ndarray]:
+    """Computes this supernode's tile segment for every op of its chain.
+    Returns {output tensor name: tile array} (to be stitched by the caller).
+    Reads full input tensors from ``env`` (slice helpers are applied here)."""
+    lo, hi, T = sn.tile_lo, sn.tile_hi, sn.T
+    results: Dict[str, jnp.ndarray] = {}
+    prev_tile: Optional[jnp.ndarray] = None
+    prev_out: Optional[str] = None
+    for name in sn.op_names:
+        op = g.ops[name]
+        ax = tile_axis(g, op)
+        full = (lo, hi) == (0, T)
+        ins_full = []
+        for t in op.inputs:
+            if t == prev_out and prev_tile is not None:
+                ins_full.append(None)        # consumed as the running tile
+            else:
+                ins_full.append(env[t])
+        if ax is None or full:
+            # untiled op (or the full-range segment): plain execution
+            ins = [prev_tile if v is None else v for v in ins_full]
+            tile = run_op(g, op, ins)
+        else:
+            c0, c1 = _coord_range(g, op, lo, hi, T, ax)
+            out_shape = g.tensors[op.output].shape
+            if op.op_type in ("conv2d", "dwconv2d", "avg_pool2d",
+                              "max_pool2d"):
+                assert prev_tile is None, "conv must head its chain"
+                tile = _conv_row_tile(g, op, ins_full, c0, c1)
+            elif op.op_type in ("dense", "matmul", "batch_matmul"):
+                assert prev_tile is None, "gemm must head its chain"
+                x, w = ins_full[0], ins_full[1]
+                tile = jnp.matmul(x, _slice_axis(w, w.ndim - 1, c0, c1))
+            else:
+                # elementwise / normalization: slice every full input along
+                # the tile axis; 1-D bias broadcasts slice on the last axis
+                # only when that *is* the tile axis (neuron tiling).
+                ins = []
+                for v, t in zip(ins_full, op.inputs):
+                    if v is None:
+                        ins.append(prev_tile)
+                        continue
+                    ti = g.tensors[t]
+                    if len(ti.shape) == len(out_shape):
+                        if ti.shape[ax] == out_shape[ax]:
+                            ins.append(_slice_axis(v, ax, c0, c1))
+                        else:
+                            ins.append(v)            # broadcast dim
+                    elif (len(ti.shape) == 1
+                          and ax == len(out_shape) - 1
+                          and ti.shape[0] == out_shape[-1]):
+                        ins.append(v[c0:c1])         # sliced bias (neuron)
+                    else:
+                        ins.append(v)
+                tile = run_op(g, op, ins)
+        results[op.output] = tile
+        prev_tile, prev_out = tile, op.output
+    return results
+
+
+def execute_plan(plan: ExecutionPlan, inputs: Arrays, params: Arrays
+                 ) -> Arrays:
+    """Tile-by-tile execution following the compiled plan.
+
+    Segments are stitched with ``dynamic_update_slice`` (the concat helper);
+    supernodes run in the plan's scheduled order, which respects data
+    dependencies by construction (validated by ``validate_schedule``)."""
+    tg: TiledGraph = plan.tiled
+    g = tg.graph
+    env: Arrays = {**inputs, **params}
+    # buffers for partially-materialized tensors
+    buf: Dict[str, jnp.ndarray] = {}
+    filled: Dict[str, int] = {}
+
+    sn_by_name = {s.name: s for s in tg.supernodes}
+    for node_name in plan.order:
+        n = plan.nodes[node_name]
+        if n.kind != "kernel" or n.supernode is None:
+            continue
+        sn = sn_by_name[n.supernode]
+        tiles = run_supernode(g, sn, env)
+        for out_t, tile in tiles.items():
+            op = g.producer_of(out_t)
+            ax = tile_axis(g, op)
+            if ax is None or sn.full:
+                env[out_t] = tile
+                continue
+            if out_t not in buf:
+                buf[out_t] = jnp.zeros(g.tensors[out_t].shape,
+                                       dtype=tile.dtype)
+                filled[out_t] = 0
+            c0, _ = _coord_range(g, op, sn.tile_lo, sn.tile_hi, sn.T, ax)
+            start = [0] * buf[out_t].ndim
+            start[ax] = c0
+            buf[out_t] = lax.dynamic_update_slice(buf[out_t], tile, start)
+            filled[out_t] += sn.tiles
+            if filled[out_t] == sn.T:
+                env[out_t] = buf.pop(out_t)
+    missing = [t for t in g.outputs if t not in env]
+    if missing:
+        raise RuntimeError(f"plan did not produce outputs: {missing}")
+    return {t: env[t] for t in g.outputs}
+
+
+def plan_matches_oracle(plan: ExecutionPlan, seed: int = 0,
+                        atol: float = 1e-4, rtol: float = 1e-4) -> bool:
+    g = plan.tiled.graph
+    params = init_params(g, seed)
+    inputs = init_inputs(g, seed + 1)
+    want = execute_graph(g, inputs, params)
+    got = execute_plan(plan, inputs, params)
+    for t in g.outputs:
+        np.testing.assert_allclose(np.asarray(got[t]), np.asarray(want[t]),
+                                   atol=atol, rtol=rtol)
+    return True

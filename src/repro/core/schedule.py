@@ -1,0 +1,570 @@
+"""Global scheduling + memory planning (paper §3.2).
+
+Builds the execution DAG from the rewritten graph (supernodes, slice/concat
+helpers, parameter planned-loads, input/output DMA), then searches for a
+minimum-makespan schedule subject to:
+
+  * data-dependency precedence,
+  * concurrency: each device runs one kernel at a time; one system DMA
+    engine, serialized with compute (the paper's current model);
+  * L2 capacity: tensors are packed by the first-fit allocator; when space
+    runs out the scheduler evicts the live tensor whose next use is farthest
+    (dynamic swap to L3) and pays the DMA both ways — exactly the Fig. 4
+    behaviour where constrained memory forces serialization.
+
+Search: priority-list scheduling (HEFT-style upward ranks) with several
+priority schemes + seeded perturbations; every candidate is validated against
+the constraint set and the best feasible makespan wins.  Sequential modes
+(tvm / match) additionally serialize all compute on a global mutex, which is
+how the paper's baselines execute (§4).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import random
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from repro.core.ir import Graph
+from repro.core.memplan import L2Allocator, MemoryPlan, SwapOp
+from repro.core.rewrite import HelperNode, Supernode, TiledGraph
+from repro.core.tiling import DELTA_HELPER
+from repro.core.zigzag import refine_latency
+from repro.soc.device import SoC
+
+DMA = "dma"
+
+
+@dataclasses.dataclass
+class PlanNode:
+    name: str
+    kind: str                  # kernel | slice | concat | load | store
+    resource: str              # device name or "dma"
+    duration: float
+    preds: List[str]
+    # tensors this node reads (must be L2-resident) / writes (L2 buffers)
+    reads: List[str]
+    writes: List[str]
+    supernode: Optional[str] = None
+    start: float = -1.0
+    end: float = -1.0
+    # planned-loading traffic for L3-resident tensors: (tensor, dir, bytes).
+    # Tensors too large for the L2 scratchpad stay in L3; every access
+    # streams its touched bytes through the system DMA (§3.2 strategy iii).
+    l3_traffic: List[Tuple[str, str, float]] = dataclasses.field(
+        default_factory=list)
+
+
+@dataclasses.dataclass
+class ScheduledDma:
+    tensor: str
+    direction: str             # in | out
+    start: float
+    end: float
+    bytes: int
+
+
+@dataclasses.dataclass
+class ExecutionPlan:
+    mode: str
+    tiled: TiledGraph
+    nodes: Dict[str, PlanNode]
+    order: List[str]                      # by start time
+    dmas: List[ScheduledDma]
+    memory: MemoryPlan
+    makespan: float
+    busy: Dict[str, float]                # per-resource busy cycles
+
+    def utilization(self) -> Dict[str, float]:
+        return {r: (b / self.makespan if self.makespan else 0.0)
+                for r, b in self.busy.items()}
+
+
+# ---------------------------------------------------------------------------
+# DAG construction
+# ---------------------------------------------------------------------------
+
+
+def l3_resident(g: Graph, soc: SoC) -> Set[str]:
+    """Tensors that never fit the L2 scratchpad: stay in L3, accessed via
+    planned loading (§3.2 strategy iii)."""
+    cap = soc.l2.size // 2
+    return {t for t, ti in g.tensors.items() if ti.bytes > cap}
+
+
+STATIC_PARAM_BUDGET = 0.6      # fraction of L2 reserved for resident params
+
+
+def static_params(g: Graph, soc: SoC) -> Set[str]:
+    """Strategy (i): parameters kept L2-resident for the whole execution —
+    loaded once at startup, so their DMA is *not* in the inference makespan.
+    Smallest-first greedy within the budget; the rest use planned loading."""
+    budget = int(soc.l2.size * STATIC_PARAM_BUDGET)
+    l3res = l3_resident(g, soc)
+    out: Set[str] = set()
+    used = 0
+    params = sorted((t for t, ti in g.tensors.items()
+                     if ti.kind == "param" and t not in l3res),
+                    key=lambda t: g.tensors[t].bytes)
+    for t in params:
+        b = g.tensors[t].bytes
+        if used + b <= budget:
+            out.add(t)
+            used += b
+    return out
+
+
+def build_dag(tg: TiledGraph, soc: SoC) -> Dict[str, PlanNode]:
+    g = tg.graph
+    host = soc.host.name
+    l3res = l3_resident(g, soc)
+    nodes: Dict[str, PlanNode] = {}
+
+    def add(n: PlanNode) -> PlanNode:
+        nodes[n.name] = n
+        return n
+
+    # graph inputs arrive via the system DMA (L3-resident ones stay put)
+    for t in g.inputs:
+        if t not in l3res:
+            add(PlanNode(f"load:{t}", "load", DMA,
+                         g.tensors[t].bytes / soc.dma_l3_bandwidth,
+                         [], [], [t]))
+
+    # parameter planned-loads: one DMA per *non-static* param tensor (static
+    # params are L2-resident from startup, strategy i — no runtime DMA)
+    statics = static_params(g, soc)
+    param_load: Dict[str, str] = {}
+    for tname, ti in g.tensors.items():
+        if ti.kind == "param" and tname not in l3res and tname not in statics:
+            n = add(PlanNode(f"load:{tname}", "load", DMA,
+                             ti.bytes / soc.dma_l3_bandwidth, [], [], [tname]))
+            param_load[tname] = n.name
+
+    helpers_by_sn: Dict[str, Dict[str, HelperNode]] = {}
+    for h in tg.helpers:
+        helpers_by_sn.setdefault(h.super_name, {})[h.kind] = h
+
+    # readiness of a tensor: names of nodes that complete it
+    def readiness(tensor: str) -> List[str]:
+        ti = g.tensors[tensor]
+        if ti.kind == "input":
+            return [f"load:{tensor}"] if tensor not in l3res else []
+        if ti.kind == "param":
+            return ([param_load[tensor]]
+                    if tensor in param_load else [])
+        producer = ti.producer
+        out = []
+        for sn_name in tg.op_cover.get(producer, []):
+            h = helpers_by_sn.get(sn_name, {})
+            out.append(h["concat"].name if "concat" in h else f"k:{sn_name}")
+        return out
+
+    def l3t(tensors: List[str], direction: str, frac: float
+            ) -> List[Tuple[str, str, float]]:
+        return [(t, direction, g.tensors[t].bytes * frac)
+                for t in tensors if t in l3res]
+
+    for sn in tg.supernodes:
+        chain_outs = {g.ops[o].output for o in sn.op_names}
+        ext_reads: List[str] = []
+        for o in sn.op_names:
+            for t in g.ops[o].inputs:
+                if t not in chain_outs and t not in ext_reads:
+                    ext_reads.append(t)
+        h = helpers_by_sn.get(sn.name, {})
+        frac = sn.tiles / sn.T
+        kpreds: List[str] = []
+        if "slice" in h:
+            hn = h["slice"]
+            s = add(PlanNode(hn.name, "slice", host,
+                             hn.bytes_moved / soc.host.copy_bandwidth
+                             + DELTA_HELPER,
+                             [], [hn.tensor], [],
+                             l3_traffic=l3t([hn.tensor], "in", frac)))
+            for t in ext_reads:
+                s.preds.extend(readiness(t))
+            kpreds.append(s.name)
+        else:
+            for t in ext_reads:
+                kpreds.extend(readiness(t))
+        out_t = g.ops[sn.op_names[-1]].output
+        traffic = l3t(ext_reads, "in", frac) + l3t([out_t], "out", frac)
+        k = add(PlanNode(f"k:{sn.name}", "kernel", sn.device,
+                         refine_latency(g, sn, soc), kpreds,
+                         list(ext_reads), [out_t], supernode=sn.name,
+                         l3_traffic=traffic))
+        if "concat" in h:
+            hn = h["concat"]
+            add(PlanNode(hn.name, "concat", host,
+                         hn.bytes_moved / soc.host.copy_bandwidth
+                         + DELTA_HELPER,
+                         [k.name], [], [out_t],
+                         l3_traffic=l3t([out_t], "out", frac)))
+
+    for t in g.outputs:
+        if t in l3res:
+            continue                     # already materialized in L3
+        add(PlanNode(f"store:{t}", "store", DMA,
+                     g.tensors[t].bytes / soc.dma_l3_bandwidth,
+                     readiness(t), [t], []))
+
+    # prune dangling preds (defensive) and deduplicate
+    for n in nodes.values():
+        n.preds = sorted({p for p in n.preds if p in nodes and p != n.name})
+    return nodes
+
+
+# ---------------------------------------------------------------------------
+# Priority schemes
+# ---------------------------------------------------------------------------
+
+
+def _upward_rank(nodes: Dict[str, PlanNode]) -> Dict[str, float]:
+    succs: Dict[str, List[str]] = {n: [] for n in nodes}
+    for n in nodes.values():
+        for p in n.preds:
+            succs[p].append(n.name)
+    rank: Dict[str, float] = {}
+
+    order = _topo(nodes)
+    for name in reversed(order):
+        n = nodes[name]
+        rank[name] = n.duration + max((rank[s] for s in succs[name]),
+                                      default=0.0)
+    return rank
+
+
+def _topo(nodes: Dict[str, PlanNode]) -> List[str]:
+    indeg = {n: len(nodes[n].preds) for n in nodes}
+    succs: Dict[str, List[str]] = {n: [] for n in nodes}
+    for n in nodes.values():
+        for p in n.preds:
+            succs[p].append(n.name)
+    q = sorted([n for n, d in indeg.items() if d == 0])
+    out: List[str] = []
+    while q:
+        x = q.pop(0)
+        out.append(x)
+        for s in succs[x]:
+            indeg[s] -= 1
+            if indeg[s] == 0:
+                q.append(s)
+    if len(out) != len(nodes):
+        raise ValueError("dependency cycle in execution DAG")
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Event-driven simulation with memory
+# ---------------------------------------------------------------------------
+
+
+class _SimState:
+    def __init__(self, tg: TiledGraph, soc: SoC, sequential: bool) -> None:
+        self.g = tg.graph
+        self.soc = soc
+        self.sequential = sequential
+        self.capacity = soc.l2.size
+        # address-aware first-fit allocator runs *online*, so the packing
+        # the scheduler commits to is exactly the packing that is emitted
+        self.alloc = L2Allocator(soc.l2.size)
+        self.res_free: Dict[str, float] = {d: 0.0 for d in soc.devices}
+        self.res_free[DMA] = 0.0
+        self.res_free["mutex"] = 0.0
+        self.busy: Dict[str, float] = {r: 0.0 for r in self.res_free}
+        self.dmas: List[ScheduledDma] = []
+        self.swaps: List[SwapOp] = []
+        # tensor buffer state: "none" | "l2" | "l3" | "l3r" | "dead"
+        self.state: Dict[str, str] = {t: "none" for t in self.g.tensors}
+        for t in l3_resident(tg.graph, soc):
+            self.state[t] = "l3r"            # pinned in L3 (planned loading)
+        # static params: resident from t=0, never evicted (strategy i)
+        for t in static_params(tg.graph, soc):
+            self.alloc.alloc(t, tg.graph.tensors[t].bytes, 0.0, "static")
+            self.state[t] = "l2"
+        self.remaining_consumers: Dict[str, int] = {}
+
+    def dma_transfer(self, tensor: str, direction: str, ready: float,
+                     nbytes: int) -> float:
+        start = max(ready, self.res_free[DMA])
+        dur = nbytes / self.soc.dma_l3_bandwidth
+        end = start + dur
+        self.res_free[DMA] = end
+        self.busy[DMA] += dur
+        self.dmas.append(ScheduledDma(tensor, direction, start, end, nbytes))
+        self.swaps.append(SwapOp(tensor, direction, nbytes, start))
+        return end
+
+    def l2_free(self, tensor: str, now: float) -> None:
+        self.alloc.free(tensor, now)
+
+    def reserve(self, needs: List[Tuple[str, int, str]], now: float,
+                protect: Set[str]) -> Tuple[bool, float]:
+        """Transactionally reserve L2 slots for all ``(tensor, bytes,
+        strategy)`` entries, evicting victims (swap to L3, paying the DMA)
+        only when the full reservation is guaranteed to succeed.  Returns
+        (ok, time when every slot is available).  A False return leaves the
+        allocator state untouched — blocked nodes defer without thrashing
+        the DMA engine."""
+        if not needs:
+            return True, now
+        sizes = [int(b) for _, b, _ in needs]
+        for (t, b, _s) in needs:
+            if int(b) > self.capacity:
+                raise MemoryError(f"{t}: {b} B exceeds L2 "
+                                  f"({self.capacity} B)")
+        victims = self.alloc.eviction_candidates(protect)
+        hypo = self.alloc.segments_assuming_freed(victims)
+        if not L2Allocator.fits_all(hypo, sizes):
+            return False, now                      # no mutation
+        t_avail = now
+        while not L2Allocator.fits_all(
+                self.alloc.segments_assuming_freed([]), sizes):
+            victims = self.alloc.eviction_candidates(protect)
+            v = max(victims, key=lambda t: self.alloc.live[t].size)
+            vb = self.alloc.live[v].size
+            t_avail = self.dma_transfer(v, "out", t_avail, vb)
+            self.l2_free(v, t_avail)
+            self.state[v] = "l3"
+        for t, b, strat in needs:
+            a = self.alloc.alloc(t, int(b), t_avail, strat)
+            assert a is not None, t
+        return True, t_avail
+
+
+def simulate(tg: TiledGraph, soc: SoC, sequential: bool,
+             priority: Dict[str, float],
+             nodes: Optional[Dict[str, PlanNode]] = None,
+             strict: bool = False) -> ExecutionPlan:
+    """Event-driven schedule construction.
+
+    ``strict=False``: greedy list scheduling — a free resource always runs
+    the highest-priority *ready* task.  ``strict=True``: a resource only
+    runs its highest-priority *unscheduled* task, i.e. it may sit idle
+    waiting for a critical task's dependencies — which greedy scheduling
+    cannot express (e.g. keeping PULP free for the branch kernels before
+    committing it to a long shortcut conv).  The priority vector is then a
+    genuine sequencing decision variable the annealer in :func:`schedule`
+    optimizes over."""
+    base = nodes or build_dag(tg, soc)
+    # fresh copies so repeated simulations don't share mutable state
+    nodes = {k: dataclasses.replace(v, preds=list(v.preds),
+                                    reads=list(v.reads), writes=list(v.writes))
+             for k, v in base.items()}
+    g = tg.graph
+    st = _SimState(tg, soc, sequential)
+    # strict mode: per-resource queues of not-yet-scheduled tasks
+    pending_by_res: Dict[str, Set[str]] = {}
+    for n in nodes.values():
+        pending_by_res.setdefault(n.resource, set()).add(n.name)
+    relax = False
+
+    for n in nodes.values():
+        for t in n.reads:
+            st.remaining_consumers[t] = st.remaining_consumers.get(t, 0) + 1
+
+    succs: Dict[str, List[str]] = {n: [] for n in nodes}
+    indeg: Dict[str, int] = {}
+    for n in nodes.values():
+        indeg[n.name] = len(n.preds)
+        for p in n.preds:
+            succs[p].append(n.name)
+
+    pred_end: Dict[str, float] = {n: 0.0 for n in nodes}
+    ready: List[Tuple[float, str]] = []   # (-priority, name)
+    for n, d in indeg.items():
+        if d == 0:
+            heapq.heappush(ready, (-priority.get(n, 0.0), n))
+    events: List[Tuple[float, str]] = []  # (end time, name)
+    deferred: List[str] = []
+    finished = 0
+    now = 0.0
+    order: List[str] = []
+
+    while finished < len(nodes):
+        progressed = False
+        attempt = [heapq.heappop(ready)[1] for _ in range(len(ready))]
+        attempt.extend(deferred)
+        deferred = []
+        for name in attempt:
+            n = nodes[name]
+            if strict and not relax and n.resource != DMA:
+                top = max(pending_by_res[n.resource],
+                          key=lambda m: priority.get(m, 0.0))
+                if priority.get(top, 0.0) > priority.get(name, 0.0):
+                    deferred.append(name)     # resource waits for its top task
+                    continue
+            t0 = max(pred_end[name], st.res_free[n.resource])
+            if sequential and n.resource != DMA:
+                t0 = max(t0, st.res_free["mutex"])
+            # 1. gather every L2 slot this node requires: reloads of
+            # swapped-out inputs + freshly-written output buffers
+            protect = set(n.reads) | set(n.writes)
+            needs: List[Tuple[str, int, str]] = []
+            reloads: List[str] = []
+            for t in n.reads:
+                if st.state[t] == "l3":
+                    needs.append((t, g.tensors[t].bytes, "dynamic"))
+                    reloads.append(t)
+            for t in n.writes:
+                if st.state[t] == "none":
+                    strat = ("planned"
+                             if g.tensors[t].kind == "param" else "dynamic")
+                    needs.append((t, g.tensors[t].bytes, strat))
+                elif st.state[t] == "l3":   # partial writer after eviction
+                    needs.append((t, g.tensors[t].bytes, "dynamic"))
+                    reloads.append(t)
+            # 2. transactional reservation (all-or-nothing; no thrash)
+            ok, t0 = st.reserve(needs, t0, protect)
+            if not ok:
+                deferred.append(name)
+                continue
+            for t, _, _ in needs:
+                st.state[t] = "l2"
+            for t in reloads:
+                t0 = st.dma_transfer(t, "in", t0, g.tensors[t].bytes)
+            # 3. planned-loading DMA for L3-resident operands (serialized
+            # with compute on the system DMA, §3.2), then run
+            for t, dirn, b in n.l3_traffic:
+                t0 = st.dma_transfer(t, dirn, t0, int(b))
+            n.start = t0
+            n.end = t0 + n.duration
+            st.res_free[n.resource] = n.end
+            st.busy[n.resource] += n.duration
+            if sequential and n.resource != DMA:
+                st.res_free["mutex"] = n.end
+            pending_by_res[n.resource].discard(name)
+            heapq.heappush(events, (n.end, name))
+            order.append(name)
+            progressed = True
+            relax = False
+
+        if not events:
+            if deferred and not progressed:
+                if strict and not relax:
+                    relax = True        # strict sequencing deadlock: fall
+                    continue            # back to greedy for one round
+                raise RuntimeError(
+                    f"scheduler deadlock: {len(deferred)} nodes blocked on "
+                    f"L2 capacity ({soc.l2.size} B)")
+            continue
+        end, name = heapq.heappop(events)
+        now = end
+        finished += 1
+        n = nodes[name]
+        # release read refs; free dead tensors
+        for t in n.reads:
+            st.remaining_consumers[t] -= 1
+            if (st.remaining_consumers[t] == 0 and st.state[t] == "l2"
+                    and t not in g.outputs):
+                st.l2_free(t, now)
+                st.state[t] = "dead"
+        for s in succs[name]:
+            indeg[s] -= 1
+            pred_end[s] = max(pred_end[s], end)
+            if indeg[s] == 0:
+                heapq.heappush(ready, (-priority.get(s, 0.0), s))
+
+    makespan = max((n.end for n in nodes.values()), default=0.0)
+    st.alloc.finish(makespan)
+    mem = MemoryPlan(capacity=soc.l2.size, allocations=st.alloc.history,
+                     swaps=st.swaps, peak=st.alloc.peak)
+    order.sort(key=lambda n: nodes[n].start)
+    busy = {r: b for r, b in st.busy.items() if r != "mutex"}
+    return ExecutionPlan(mode="", tiled=tg, nodes=nodes, order=order,
+                         dmas=st.dmas, memory=mem, makespan=makespan,
+                         busy=busy)
+
+
+def schedule(tg: TiledGraph, soc: SoC, mode: str,
+             restarts: int = 3, seed: int = 0,
+             anneal_iters: Optional[int] = None) -> ExecutionPlan:
+    """Search over priority schemes (greedy + strict-sequencing), then
+    refine the best strict-mode priority vector by simulated annealing —
+    the priorities are genuine sequencing decisions in strict mode, so this
+    explores schedules greedy list scheduling cannot reach (e.g. holding a
+    device for late-arriving critical tasks)."""
+    sequential = mode in ("tvm", "match")
+    dag = build_dag(tg, soc)
+    rank = _upward_rank(dag)
+    topo_idx = {n: float(-i) for i, n in enumerate(_topo(dag))}
+    schemes: List[Dict[str, float]] = [rank, topo_idx]
+    rng = random.Random(seed)
+    for _ in range(restarts):
+        noisy = {n: r * (1.0 + 0.25 * rng.random()) for n, r in rank.items()}
+        schemes.append(noisy)
+
+    best: Optional[ExecutionPlan] = None
+    best_pr: Optional[Dict[str, float]] = None
+    best_strict = False
+    last_err: Optional[Exception] = None
+    stricts = (False,) if sequential else (False, True)
+    for pr in schemes:
+        for strict in stricts:
+            try:
+                plan = simulate(tg, soc, sequential, pr, nodes=dag,
+                                strict=strict)
+            except (MemoryError, RuntimeError) as e:   # packing: skip
+                last_err = e
+                continue
+            if best is None or plan.makespan < best.makespan:
+                best, best_pr, best_strict = plan, pr, strict
+    if best is None:
+        raise RuntimeError(f"no feasible schedule found: {last_err}")
+
+    if not sequential:
+        # simulated-annealing polish over strict-mode priorities
+        iters = anneal_iters if anneal_iters is not None \
+            else min(220, 40 + 3 * len(dag))
+        names = list(dag.keys())
+        lo = min(best_pr.values(), default=0.0)
+        hi = max(best_pr.values(), default=1.0)
+        cur = dict(best_pr)
+        cur_span = best.makespan
+        for it in range(iters):
+            cand = dict(cur)
+            for _ in range(rng.randint(1, 2)):
+                n = rng.choice(names)
+                cand[n] = lo + (hi - lo) * rng.random()
+            try:
+                plan = simulate(tg, soc, sequential, cand, nodes=dag,
+                                strict=True)
+            except (MemoryError, RuntimeError):
+                continue
+            accept = plan.makespan < cur_span or \
+                rng.random() < 0.1 * (1.0 - it / iters)
+            if accept:
+                cur, cur_span = cand, plan.makespan
+            if plan.makespan < best.makespan:
+                best, best_pr, best_strict = plan, cand, True
+    best.mode = mode
+    return best
+
+
+def validate_schedule(plan: ExecutionPlan) -> List[str]:
+    """Constraint checker: precedence + per-resource mutual exclusion."""
+    errs: List[str] = []
+    for n in plan.nodes.values():
+        if n.start < -0.5:
+            errs.append(f"{n.name}: never scheduled")
+            continue
+        for p in n.preds:
+            if plan.nodes[p].end > n.start + 1e-6:
+                errs.append(f"precedence: {p} ends after {n.name} starts")
+    by_res: Dict[str, List[PlanNode]] = {}
+    for n in plan.nodes.values():
+        by_res.setdefault(n.resource, []).append(n)
+    for r, ns in by_res.items():
+        ns.sort(key=lambda n: n.start)
+        for a, b in zip(ns, ns[1:]):
+            if a.end > b.start + 1e-6:
+                errs.append(f"resource {r}: {a.name} overlaps {b.name}")
+    if plan.mode in ("tvm", "match"):
+        comp = [n for n in plan.nodes.values() if n.resource != DMA]
+        comp.sort(key=lambda n: n.start)
+        for a, b in zip(comp, comp[1:]):
+            if a.end > b.start + 1e-6:
+                errs.append(f"sequential mode overlap: {a.name} / {b.name}")
+    return errs

@@ -1,0 +1,423 @@
+"""Tile-centric pattern matching + device allocation (paper §3.1, Eqs. 1-2).
+
+Every IR operator ``v`` is partitioned into ``T_v`` equal tiles along its
+tiling axis (feature-map rows for convolutions, output neurons for dense
+layers).  For each pattern match ``m`` of pattern ``p`` a nonnegative integer
+variable ``t_{p,m}`` counts the tiles assigned to it; Eq. (1) conserves tiles
+per operator and Eq. (2) prices a match linearly:
+
+    L_{p,m}(t) = t * (sum_u Ops_{h_m(u)} / T_{h_m(u)}) * alpha_{d_p} / eta_p
+                 + delta_p        (charged only when the match is instantiated)
+
+The objective is the makespan = max over devices of the summed match
+latencies (stage 1 assumes perfect asynchronous overlap; the exact DAG
+schedule with helper/DMA costs is stage 2, core.schedule).  The fixed charge
+delta_p is linearised with a 0/1 indicator ``y`` and ``t <= T * y``.
+
+Modes reproduce the paper's four toolchains:
+  * ``tvm``       — host wildcard only, sequential (objective = total time),
+  * ``match``     — best device per fused pattern, all-or-nothing, sequential,
+  * ``matcha_nt`` — all-or-nothing + asynchronous makespan (no tiling),
+  * ``matcha``    — full tile-centric optimization (this paper).
+
+Slice/concat helper work for partial conv-family matches is charged to the
+host load with a linear approximation here; the stage-2 scheduler models the
+helpers exactly, and ``compile_model`` (core.api) keeps the best of the
+candidate plans under the exact model — tiling therefore never loses to the
+all-or-nothing corner case (§3.1: layer-device assignment *is* a corner case
+of this optimization).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core import cpsolver
+from repro.core.ir import (Graph, Op, max_tiles, needs_input_slice, op_arith,
+                           tile_axis, tile_halo_rows)
+from repro.core.patterns import Match, Pattern, find_matches
+from repro.soc.device import SoC
+
+DELTA_HELPER = 400.0  # fixed host cycles per slice/concat invocation
+
+
+@dataclasses.dataclass(frozen=True)
+class Assignment:
+    match: Match
+    tiles: int
+
+
+@dataclasses.dataclass
+class TilingSolution:
+    mode: str
+    assignments: List[Assignment]
+    tiles_per_op: Dict[str, int]          # T_v
+    objective: float                       # stage-1 makespan estimate (cycles)
+    optimal: bool
+    solver_nodes: int
+    wall_s: float
+
+    def per_device_load(self) -> Dict[str, float]:
+        load: Dict[str, float] = {}
+        for a in self.assignments:
+            d = a.match.pattern.device
+            load[d] = load.get(d, 0.0)
+        return load
+
+
+@dataclasses.dataclass
+class _MVar:
+    match: Match
+    T: int
+    slope: float          # cycles per tile (Eq. 2 inner term * alpha/eta)
+    delta: float
+    helper_slope: float   # host cycles per tile for slice+concat copies
+    helper_fix: float     # host cycles fixed per helper pair
+    t_var: int = -1
+    y_var: int = -1
+
+
+def _match_tiles(g: Graph, m: Match, requested: int) -> Optional[int]:
+    """Common T for all ops of the chain (None => invalid multi-op match)."""
+    ts = [max_tiles(g, g.ops[name], requested) for name in m.ops]
+    if len(set(ts)) != 1:
+        return None
+    return ts[0]
+
+
+def _match_slope(g: Graph, m: Match, soc: SoC, T: int) -> float:
+    """Cycles per tile.  The paper's Eq. (2) uses the pure arithmetic model;
+    we refine the slope with the ZigZag L1<->L2 traffic term so stage-1
+    splits balance under the same cost model stage-2 evaluates (the eta of
+    the paper 'absorbs memory-system stalls' — here the absorption is
+    explicit and shape-aware)."""
+    from repro.core.zigzag import refined_tile_slope
+    return refined_tile_slope(g, m.ops, m.pattern.device, m.pattern.eta,
+                              T, soc)
+
+
+def _helper_cost(g: Graph, m: Match, soc: SoC, T: int) -> Tuple[float, float]:
+    """(host cycles per tile, fixed cycles) for slice+concat of a partial
+    conv-family match.  Dense/matmul tiling folds into the weight layout
+    (zero runtime overhead, §4)."""
+    head = g.ops[m.ops[0]]
+    tail = g.ops[m.ops[-1]]
+    if not needs_input_slice(g, head):
+        return 0.0, 0.0
+    host = soc.host
+    acts = g.act_inputs(head)
+    in_bytes_per_tile = sum(t.bytes for t in acts) / T
+    ax = tile_axis(g, head)
+    halo = tile_halo_rows(g, head)
+    halo_bytes = 0.0
+    if acts and ax is not None and len(acts[0].shape) > ax:
+        rows = max(acts[0].shape[ax], 1)
+        halo_bytes = sum(t.bytes for t in acts) * halo / rows
+    out_bytes_per_tile = g.tensors[tail.output].bytes / T
+    slope = (in_bytes_per_tile + halo_bytes + out_bytes_per_tile) \
+        / host.copy_bandwidth
+    return slope, 2.0 * DELTA_HELPER
+
+
+def build_match_vars(g: Graph, soc: SoC, patterns: Sequence[Pattern],
+                     requested_tiles: int,
+                     device_allow: Optional[Sequence[str]] = None
+                     ) -> List[_MVar]:
+    mvars: List[_MVar] = []
+    seen: Dict[Tuple[str, Tuple[str, ...]], _MVar] = {}
+    for m in find_matches(g, patterns):
+        if device_allow is not None and m.pattern.device not in device_allow:
+            continue
+        T = _match_tiles(g, m, requested_tiles)
+        if T is None:
+            continue
+        slope = _match_slope(g, m, soc, T)
+        hs, hf = _helper_cost(g, m, soc, T)
+        key = (m.pattern.device, m.ops)
+        cand = _MVar(m, T, slope, m.pattern.delta, hs, hf)
+        prev = seen.get(key)
+        if prev is None or (cand.slope, cand.delta) < (prev.slope, prev.delta):
+            seen[key] = cand                 # drop dominated duplicates
+    mvars = list(seen.values())
+    return mvars
+
+
+def optimize_tiling(g: Graph, soc: SoC, patterns: Sequence[Pattern],
+                    mode: str = "matcha", requested_tiles: int = 16,
+                    node_limit: int = 150_000, time_budget_s: float = 10.0,
+                    host_tiles: bool = True) -> TilingSolution:
+    """``host_tiles=False`` forbids host tile participation on operators that
+    have accelerator coverage (the host still runs unsupported ops via the
+    wildcard).  The stage-1 makespan objective cannot see that host work on a
+    dependency chain serializes against both accelerators, so the compiler
+    evaluates both variants under the exact stage-2 model (core.api)."""
+    assert mode in ("tvm", "match", "matcha_nt", "matcha")
+    g.validate()
+    device_allow = [soc.host.name] if mode == "tvm" else None
+    mvars = build_match_vars(g, soc, patterns, requested_tiles, device_allow)
+    if not host_tiles:
+        accel_covered = set()
+        for mv in mvars:
+            if not soc.device(mv.match.pattern.device).is_host:
+                accel_covered.update(mv.match.ops)
+        mvars = [mv for mv in mvars
+                 if not soc.device(mv.match.pattern.device).is_host
+                 or any(o not in accel_covered for o in mv.match.ops)]
+
+    # T_v per op = the T of any covering match (equal by construction for
+    # multi-op matches; wildcard matches use the op's own T).
+    tiles_per_op: Dict[str, int] = {}
+    for op in g.topo_ops():
+        tiles_per_op[op.name] = max_tiles(g, op, requested_tiles)
+
+    model = cpsolver.CpModel()
+    for mv in mvars:
+        mv.t_var = model.new_int(0, mv.T, f"t[{mv.match!r}]")
+        mv.y_var = model.new_int(0, 1, f"y[{mv.match!r}]")
+        # t <= T * y  (instantiation indicator)
+        model.add_le({mv.t_var: 1.0, mv.y_var: -float(mv.T)})
+        if mode in ("tvm", "match", "matcha_nt"):
+            # all-or-nothing: t == T * y
+            model.add_eq({mv.t_var: 1.0, mv.y_var: -float(mv.T)})
+
+    # Eq. (1): tile conservation per operator.
+    cover: Dict[str, List[_MVar]] = {op.name: [] for op in g.topo_ops()}
+    for mv in mvars:
+        for name in mv.match.ops:
+            cover[name].append(mv)
+    for op in g.topo_ops():
+        mvs = cover[op.name]
+        if not mvs:
+            raise ValueError(f"op {op.name} ({op.op_type}) matches no pattern "
+                             f"(wildcard missing from the catalogue?)")
+        model.add_eq({mv.t_var: 1.0 for mv in mvs},
+                     -float(tiles_per_op[op.name]))
+
+    # Loads.  Sequential modes: one combined load (sum of all latencies).
+    # Async modes: one load per device + helper work on the host.
+    host = soc.host.name
+    dev_loads: Dict[str, Dict[int, float]] = {d: {} for d in soc.devices}
+    for mv in mvars:
+        d = mv.match.pattern.device
+        dev_loads[d][mv.t_var] = dev_loads[d].get(mv.t_var, 0.0) + mv.slope
+        dev_loads[d][mv.y_var] = dev_loads[d].get(mv.y_var, 0.0) + mv.delta
+        if mode == "matcha" and mv.helper_slope > 0.0:
+            hl = dev_loads[host]
+            hl[mv.t_var] = hl.get(mv.t_var, 0.0) + mv.helper_slope
+            hl[mv.y_var] = hl.get(mv.y_var, 0.0) + mv.helper_fix
+        if not soc.device(d).is_host:
+            # mailbox dispatch is host work in the async runtime (§3.3)
+            hl = dev_loads[host]
+            hl[mv.y_var] = hl.get(mv.y_var, 0.0) + soc.mailbox_latency
+
+    if mode in ("tvm", "match"):
+        combined: Dict[int, float] = {}
+        for d, coeffs in dev_loads.items():
+            for v, c in coeffs.items():
+                combined[v] = combined.get(v, 0.0) + c
+        model.add_load(combined)
+    else:
+        for d, coeffs in dev_loads.items():
+            if coeffs:
+                model.add_load(coeffs)
+
+    hint = _greedy_hint(g, mvars, tiles_per_op, model.num_vars, mode, soc)
+    if mode == "matcha":
+        split = _split_hint(g, mvars, tiles_per_op, model.num_vars, soc)
+        if split is not None and model._feasible(split) and \
+                model._obj_value(split) < model._obj_value(hint):
+            hint = split
+    sol = model.solve(hint=hint, node_limit=node_limit,
+                      time_budget_s=time_budget_s)
+    values = sol.values
+    if mode == "matcha":
+        values = _local_search(model, mvars, values)
+
+    assignments = [Assignment(mv.match, values[mv.t_var])
+                   for mv in mvars if values[mv.t_var] > 0]
+    return TilingSolution(mode=mode, assignments=assignments,
+                          tiles_per_op=tiles_per_op,
+                          objective=model._obj_value(values),
+                          optimal=sol.optimal,
+                          solver_nodes=sol.nodes, wall_s=sol.wall_s)
+
+
+def _greedy_hint(g: Graph, mvars: List[_MVar], tiles: Dict[str, int],
+                 num_vars: int, mode: str, soc: SoC) -> List[int]:
+    """Warm start: the MATCH solution — greedily pick, per op, the cheapest
+    full-coverage chain (longest fused chains first), everything else 0."""
+    hint = [0] * num_vars
+    covered: Dict[str, bool] = {op.name: False for op in g.topo_ops()}
+    # longest chains first, then cheapest total latency
+    order = sorted(mvars, key=lambda mv: (-len(mv.match.ops),
+                                          mv.slope * mv.T + mv.delta))
+    for mv in order:
+        if any(covered[name] for name in mv.match.ops):
+            continue
+        hint[mv.t_var] = mv.T
+        hint[mv.y_var] = 1
+        for name in mv.match.ops:
+            covered[name] = True
+    return hint
+
+
+def chain_groups(g: Graph, mvars: List[_MVar], fuse_joins: bool = True
+                 ) -> List[Tuple[Tuple[str, ...], List[_MVar]]]:
+    """Topo-anchored chain decomposition: walk operators in topological
+    order; at each uncovered op take the longest match anchored there whose
+    ops are all uncovered.  Anchoring at the *earliest* op of a chain keeps
+    independent branches separate (a shortcut conv is not fused into the
+    `add` that joins it with the main path, which would serialize the
+    branches the paper exploits for graph-level parallelism).
+
+    ``fuse_joins=False`` additionally refuses chains in which a non-anchor
+    op reads an activation produced outside the chain (e.g. conv+add+relu
+    where `add` joins a residual): such fusion makes the whole chain wait
+    for the *latest* branch, which can serialize an otherwise-parallel DAG.
+    Both decompositions are offered as candidates; stage-2 arbitrates."""
+    def join_free(mv: _MVar) -> bool:
+        outs = {g.ops[o].output for o in mv.match.ops}
+        for o in mv.match.ops[1:]:
+            for t in g.ops[o].inputs:
+                ti = g.tensors[t]
+                if ti.kind == "param" or t in outs:
+                    continue
+                return False
+        return True
+
+    by_anchor: Dict[str, List[_MVar]] = {}
+    for mv in mvars:
+        by_anchor.setdefault(mv.match.ops[0], []).append(mv)
+    covered: Dict[str, bool] = {op.name: False for op in g.topo_ops()}
+    groups: List[Tuple[Tuple[str, ...], List[_MVar]]] = []
+    for op in g.topo_ops():
+        if covered[op.name]:
+            continue
+        cands = [mv for mv in by_anchor.get(op.name, [])
+                 if not any(covered[o] for o in mv.match.ops)
+                 and (fuse_joins or join_free(mv))]
+        if not cands:
+            continue
+        best = max(cands, key=lambda mv: (len(mv.match.ops),
+                                          -(mv.slope * mv.T + mv.delta)))
+        for o in best.match.ops:
+            covered[o] = True
+        same = [o for o in mvars if o.match.ops == best.match.ops]
+        groups.append((best.match.ops, same))
+    return groups
+
+
+def _split_hint(g: Graph, mvars: List[_MVar], tiles: Dict[str, int],
+                num_vars: int, soc: SoC) -> Optional[List[int]]:
+    """Tile-splitting warm start: walk the graph in the greedy chain
+    decomposition, and for each chain group enumerate all ways to split its
+    T tiles over the best match per device (LPT-style, accounting for the
+    accumulated per-device loads, helper work on the host, and the fixed
+    charges delta/mailbox).  This is the paper's intended solution shape —
+    the B&B then polishes it."""
+    hint = [0] * num_vars
+    host = soc.host.name
+    load: Dict[str, float] = {d: 0.0 for d in soc.devices}
+    groups = chain_groups(g, mvars)
+
+    for ops, cands in groups:
+        # best candidate per device for this exact op set
+        by_dev: Dict[str, _MVar] = {}
+        for mv in cands:
+            d = mv.match.pattern.device
+            cur = by_dev.get(d)
+            if cur is None or (mv.slope, mv.delta) < (cur.slope, cur.delta):
+                by_dev[d] = mv
+        devs = list(by_dev.values())
+        T = devs[0].T
+        best_alloc, best_obj = None, None
+
+        def charge(mv: _MVar, t: int, ld: Dict[str, float]) -> None:
+            if t <= 0:
+                return
+            d = mv.match.pattern.device
+            ld[d] = ld.get(d, 0.0) + mv.slope * t + mv.delta
+            if mv.helper_slope > 0.0:
+                ld[host] = ld.get(host, 0.0) \
+                    + mv.helper_slope * t + mv.helper_fix
+            if not soc.device(d).is_host:
+                ld[host] = ld.get(host, 0.0) + soc.mailbox_latency
+
+        def enum(i: int, left: int, alloc: List[int]) -> None:
+            nonlocal best_alloc, best_obj
+            if i == len(devs) - 1:
+                alloc = alloc + [left]
+                ld = dict(load)
+                for mv, t in zip(devs, alloc):
+                    charge(mv, t, ld)
+                obj = max(ld.values())
+                if best_obj is None or obj < best_obj:
+                    best_obj, best_alloc = obj, list(alloc)
+                return
+            for t in range(left + 1):
+                enum(i + 1, left - t, alloc + [t])
+
+        if len(devs) == 1:
+            best_alloc = [T]
+        else:
+            enum(0, T, [])
+        for mv, t in zip(devs, best_alloc):
+            hint[mv.t_var] = t
+            hint[mv.y_var] = 1 if t > 0 else 0
+            charge(mv, t, load)
+    return hint
+
+
+def _local_search(model: cpsolver.CpModel, mvars: List[_MVar],
+                  values: List[int], rounds: int = 200) -> List[int]:
+    """Hill-climb polish: move k tiles between matches covering the *same*
+    op set (conservation-preserving by construction); accept improving
+    feasible moves."""
+    by_ops: Dict[Tuple[str, ...], List[_MVar]] = {}
+    for mv in mvars:
+        by_ops.setdefault(mv.match.ops, []).append(mv)
+    x = list(values)
+    obj = model._obj_value(x)
+    for _ in range(rounds):
+        improved = False
+        for group in by_ops.values():
+            if len(group) < 2:
+                continue
+            for a in group:
+                if x[a.t_var] == 0:
+                    continue
+                for b in group:
+                    if b is a:
+                        continue
+                    for k in (x[a.t_var], (x[a.t_var] + 1) // 2, 1):
+                        if k == 0 or x[b.t_var] + k > b.T:
+                            continue
+                        x[a.t_var] -= k
+                        x[b.t_var] += k
+                        ya, yb = x[a.y_var], x[b.y_var]
+                        x[a.y_var] = 1 if x[a.t_var] > 0 else 0
+                        x[b.y_var] = 1
+                        cand = model._obj_value(x)
+                        if cand < obj - 1e-9 and model._feasible(x):
+                            obj = cand
+                            improved = True
+                            break
+                        x[a.t_var] += k
+                        x[b.t_var] -= k
+                        x[a.y_var], x[b.y_var] = ya, yb
+                    else:
+                        continue
+                    break
+        if not improved:
+            break
+    return x
+
+
+def conservation_ok(g: Graph, sol: TilingSolution) -> bool:
+    got: Dict[str, int] = {op.name: 0 for op in g.topo_ops()}
+    for a in sol.assignments:
+        for name in a.match.ops:
+            got[name] += a.tiles
+    return all(got[op.name] == sol.tiles_per_op[op.name]
+               for op in g.topo_ops())

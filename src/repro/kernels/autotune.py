@@ -1,0 +1,127 @@
+"""BlockSpec autotuner — the ZigZag-LOMA mapper one level down.
+
+MATCHA picks L1<->L2 loop tilings per accelerator with an analytical
+cost model (core/zigzag.py).  On TPU the identical problem is choosing
+Pallas BlockSpec shapes for the HBM->VMEM->MXU pipeline: enumerate
+hardware-aligned tile candidates, keep those whose double-buffered
+working set fits VMEM, and rank by the same two-term model
+
+    cycles = max(compute_cycles, hbm_cycles)      (overlapped pipeline)
+    compute = flops_per_tile_grid / MXU_rate
+    hbm     = bytes_streamed(loop order) / HBM_bw
+
+where bytes_streamed depends on which operand is revisited across the
+grid — exactly LOMA's weight-stationary vs output-stationary orders.
+
+v5e constants: 128 MiB VMEM/core-class budget is conservative for data
+tiles (we budget 64 MiB with double buffering), MXU tiles are 128x128,
+lane width 128 — candidates are multiples of (8, 128) per dtype rules.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+VMEM_BUDGET = 64 * 1024 * 1024     # double-buffered data-tile budget
+
+_CANDS = (128, 256, 512, 1024, 2048)
+
+
+@dataclasses.dataclass(frozen=True)
+class MatmulTiling:
+    block_m: int
+    block_n: int
+    block_k: int
+    order: str                   # "k_inner" (output-stationary)
+    vmem_bytes: int
+    est_seconds: float
+
+
+def _fit(dim: int, cand: int) -> Optional[int]:
+    c = min(cand, dim)
+    return c if dim % c == 0 else None
+
+
+def tune_matmul(M: int, N: int, K: int, itemsize: int = 2
+                ) -> MatmulTiling:
+    """Select (bm, bn, bk) for kernels/matmul with the LOMA-style model."""
+    best: Optional[MatmulTiling] = None
+    flops = 2.0 * M * N * K
+    for bm_c in _CANDS:
+        bm = _fit(M, bm_c)
+        if bm is None:
+            continue
+        for bn_c in _CANDS:
+            bn = _fit(N, bn_c)
+            if bn is None:
+                continue
+            for bk_c in _CANDS:
+                bk = _fit(K, bk_c)
+                if bk is None:
+                    continue
+                # working set: A tile + B tile (+ f32 acc), double buffered
+                vmem = 2 * (bm * bk + bk * bn) * itemsize + bm * bn * 4
+                if vmem > VMEM_BUDGET:
+                    continue
+                # k-inner grid: A streamed once per n-block, B once per
+                # m-block, C written once
+                a_bytes = M * K * itemsize * (N // bn)
+                b_bytes = K * N * itemsize * (M // bm)
+                c_bytes = M * N * 4
+                sec = max(flops / PEAK_FLOPS,
+                          (a_bytes + b_bytes + c_bytes) / HBM_BW)
+                cand = MatmulTiling(bm, bn, bk, "k_inner", vmem, sec)
+                if best is None or cand.est_seconds < best.est_seconds \
+                        or (cand.est_seconds == best.est_seconds
+                            and cand.vmem_bytes < best.vmem_bytes):
+                    best = cand
+    if best is None:       # degenerate small shapes: single tile
+        return MatmulTiling(min(M, 128), min(N, 128), min(K, 128),
+                            "k_inner",
+                            (M * K + K * N) * itemsize + M * N * 4,
+                            flops / PEAK_FLOPS)
+    return best
+
+
+@dataclasses.dataclass(frozen=True)
+class AttentionTiling:
+    block_q: int
+    block_k: int
+    vmem_bytes: int
+    est_seconds: float
+
+
+def tune_flash_attention(S: int, Dh: int, heads_per_core: int = 1,
+                         itemsize: int = 2) -> AttentionTiling:
+    """Select (bq, bk) for the flash kernel: the KV stream is revisited
+    once per q block, so larger bq minimizes HBM traffic until the
+    (bq x bk) logits tile + accumulators blow the VMEM budget."""
+    best: Optional[AttentionTiling] = None
+    flops = 4.0 * S * S * Dh      # qk + av
+    for bq_c in _CANDS:
+        bq = _fit(S, bq_c)
+        if bq is None:
+            continue
+        for bk_c in _CANDS:
+            bk = _fit(S, bk_c)
+            if bk is None:
+                continue
+            vmem = 2 * (bq * Dh + 2 * bk * Dh) * itemsize \
+                + bq * bk * 4 + bq * Dh * 4 + 2 * bq * 4
+            if vmem > VMEM_BUDGET:
+                continue
+            kv_bytes = 2 * S * Dh * itemsize * (S // bq)   # revisited
+            q_bytes = S * Dh * itemsize
+            sec = max(flops / PEAK_FLOPS, (kv_bytes + q_bytes) / HBM_BW)
+            cand = AttentionTiling(bq, bk, vmem, sec)
+            if best is None or cand.est_seconds < best.est_seconds \
+                    or (cand.est_seconds == best.est_seconds
+                        and cand.vmem_bytes < best.vmem_bytes):
+                best = cand
+    if best is None:
+        return AttentionTiling(min(S, 128), min(S, 128), 0,
+                               flops / PEAK_FLOPS)
+    return best

@@ -1,0 +1,35 @@
+"""Kernel dispatch policy.
+
+On the TPU target the Pallas kernels are the production path; this CPU
+container validates them in interpret mode and uses the jnp references for
+everything that must actually *run* (smoke tests, examples) or *lower*
+(the multi-pod dry-run lowers for the CPU backend, where custom TPU kernels
+are unavailable).  Policy:
+
+  * default: pure-jnp reference (fast, exact, lowers everywhere);
+  * ``REPRO_USE_PALLAS=1``: Pallas kernels, interpret mode iff not on TPU.
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+
+
+def on_tpu() -> bool:
+    try:
+        return jax.default_backend() == "tpu"
+    except Exception:
+        return False
+
+
+def use_pallas() -> bool:
+    env = os.environ.get("REPRO_USE_PALLAS")
+    if env is not None:
+        return env not in ("", "0", "false")
+    return on_tpu()
+
+
+def interpret() -> bool:
+    return not on_tpu()

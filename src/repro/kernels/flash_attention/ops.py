@@ -1,0 +1,35 @@
+"""jit'd dispatch wrapper: Pallas kernel on TPU, exact jnp oracle elsewhere.
+
+``repro.kernels.config.use_pallas()`` decides the default; tests exercise
+the kernel on CPU via ``interpret=True``.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.kernels import config as kcfg
+from repro.kernels.flash_attention.flash_attention import \
+    flash_attention_pallas
+from repro.kernels.flash_attention.ref import (attention_chunked,
+                                               attention_ref)
+
+# beyond which the exact O(S^2) reference is replaced by the chunked
+# (flash-algorithm) jnp form on non-Pallas backends
+CHUNKED_THRESHOLD = 1024
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                    causal: bool = True, window: Optional[int] = None,
+                    use_pallas: Optional[bool] = None,
+                    interpret: Optional[bool] = None) -> jnp.ndarray:
+    use = kcfg.use_pallas() if use_pallas is None else use_pallas
+    if not use:
+        if q.shape[1] > CHUNKED_THRESHOLD:
+            return attention_chunked(q, k, v, causal=causal, window=window)
+        return attention_ref(q, k, v, causal=causal, window=window)
+    interp = kcfg.interpret() if interpret is None else interpret
+    return flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                  interpret=interp)

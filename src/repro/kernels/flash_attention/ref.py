@@ -1,0 +1,101 @@
+"""Pure-jnp oracle for flash attention (GQA + causal + sliding window)."""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                  causal: bool = True,
+                  window: Optional[int] = None) -> jnp.ndarray:
+    """q: (B,S,H,Dh); k,v: (B,S,KV,Dh) with H % KV == 0.  Returns (B,S,H,Dh).
+
+    ``window``: position i attends to j with i-window < j <= i (and j <= i
+    if causal).  Exact softmax in float32."""
+    B, S, H, Dh = q.shape
+    KV = k.shape[2]
+    assert H % KV == 0
+    groups = H // KV
+    scale = 1.0 / math.sqrt(Dh)
+    qh = q.reshape(B, S, KV, groups, Dh).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    logits = jnp.einsum("bqkgd,bskd->bkgqs", qh, kf) * scale
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), dtype=bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window is not None:
+        mask &= (qpos - kpos) < window
+        if not causal:
+            mask &= (kpos - qpos) < window
+    logits = jnp.where(mask[None, None, None], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    ctx = jnp.einsum("bkgqs,bskd->bqkgd", w, vf)
+    return ctx.reshape(B, S, H, Dh).astype(q.dtype)
+
+
+def attention_chunked(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                      causal: bool = True, window: Optional[int] = None,
+                      block_k: int = 1024) -> jnp.ndarray:
+    """Flash-attention algorithm in pure jnp (lax.scan over KV chunks with
+    the online-softmax running state).  Numerically equivalent to
+    :func:`attention_ref` but O(S * block_k) memory instead of O(S^2) — the
+    form the dry-run lowers on backends where the Pallas kernel is
+    unavailable, so the compiled memory profile matches the TPU kernel's.
+    """
+    B, S, H, Dh = q.shape
+    KV = k.shape[2]
+    groups = H // KV
+    bk = min(block_k, S)
+    while S % bk != 0:
+        bk -= 1
+    nk = S // bk
+    scale = 1.0 / math.sqrt(Dh)
+    qh = q.reshape(B, S, KV, groups, Dh).astype(jnp.float32)
+    kc = k.astype(jnp.float32).reshape(B, nk, bk, KV, Dh) \
+        .transpose(1, 0, 2, 3, 4)
+    vc = v.astype(jnp.float32).reshape(B, nk, bk, KV, Dh) \
+        .transpose(1, 0, 2, 3, 4)
+    qpos = jnp.arange(S)
+
+    def step(carry, inp):
+        m, l, acc = carry
+        ki, kblk, vblk = inp
+        kpos = ki * bk + jnp.arange(bk)
+        s = jnp.einsum("bqkgd,bskd->bkgqs", qh, kblk) * scale
+        msk = jnp.ones((S, bk), dtype=bool)
+        if causal:
+            msk &= qpos[:, None] >= kpos[None, :]
+        if window is not None:
+            msk &= (qpos[:, None] - kpos[None, :]) < window
+            if not causal:
+                msk &= (kpos[None, :] - qpos[:, None]) < window
+        s = jnp.where(msk[None, None, None], s, -1e30)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        p = jnp.where(msk[None, None, None], p, 0.0)
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc * alpha[..., None] \
+            + jnp.einsum("bkgqs,bskd->bkgqd", p, vblk)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, KV, groups, S), -1e30, jnp.float32)
+    l0 = jnp.zeros((B, KV, groups, S), jnp.float32)
+    a0 = jnp.zeros((B, KV, groups, S, Dh), jnp.float32)
+    # remat the scan body: the backward otherwise saves the (S, bk) prob
+    # blocks of EVERY step — an O(S^2) residual that defeats the point of
+    # the flash algorithm.  With checkpointing, backward keeps only the
+    # O(S) carries and recomputes the probs blockwise (what the Pallas
+    # kernel's custom bwd does on TPU).
+    (m, l, acc), _ = jax.lax.scan(
+        jax.checkpoint(step), (m0, l0, a0), (jnp.arange(nk), kc, vc))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = out.transpose(0, 3, 1, 2, 4).reshape(B, S, H, Dh)
+    return out.astype(q.dtype)

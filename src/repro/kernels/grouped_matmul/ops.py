@@ -1,0 +1,21 @@
+"""jit'd dispatch for the grouped matmul."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.kernels import config as kcfg
+from repro.kernels.grouped_matmul.grouped_matmul import grouped_matmul_pallas
+from repro.kernels.grouped_matmul.ref import grouped_matmul_ref
+
+
+def grouped_matmul(x: jnp.ndarray, w: jnp.ndarray,
+                   use_pallas: Optional[bool] = None,
+                   interpret: Optional[bool] = None) -> jnp.ndarray:
+    use = kcfg.use_pallas() if use_pallas is None else use_pallas
+    if not use:
+        return grouped_matmul_ref(x, w)
+    interp = kcfg.interpret() if interpret is None else interpret
+    return grouped_matmul_pallas(x, w, interpret=interp)

@@ -1,0 +1,9 @@
+"""Pure-jnp oracle for the MoE grouped (per-expert) matmul."""
+
+import jax.numpy as jnp
+
+
+def grouped_matmul_ref(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """x: (E, C, D) expert-dispatched tokens; w: (E, D, F) -> (E, C, F)."""
+    return jnp.einsum("ecd,edf->ecf", x.astype(jnp.float32),
+                      w.astype(jnp.float32)).astype(x.dtype)

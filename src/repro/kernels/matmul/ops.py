@@ -1,0 +1,21 @@
+"""jit'd dispatch for the tiled matmul."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.kernels import config as kcfg
+from repro.kernels.matmul.matmul import matmul_pallas
+from repro.kernels.matmul.ref import matmul_ref
+
+
+def matmul(a: jnp.ndarray, b: jnp.ndarray,
+           use_pallas: Optional[bool] = None,
+           interpret: Optional[bool] = None, **blocks) -> jnp.ndarray:
+    use = kcfg.use_pallas() if use_pallas is None else use_pallas
+    if not use:
+        return matmul_ref(a, b)
+    interp = kcfg.interpret() if interpret is None else interpret
+    return matmul_pallas(a, b, interpret=interp, **blocks)

@@ -1,0 +1,20 @@
+"""jit'd dispatch for the RG-LRU scan."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.kernels import config as kcfg
+from repro.kernels.rglru_scan.ref import rglru_ref
+from repro.kernels.rglru_scan.rglru_scan import rglru_pallas
+
+
+def rglru(a, b, use_pallas: Optional[bool] = None,
+          interpret: Optional[bool] = None):
+    use = kcfg.use_pallas() if use_pallas is None else use_pallas
+    if not use:
+        return rglru_ref(a, b)
+    interp = kcfg.interpret() if interpret is None else interpret
+    return rglru_pallas(a, b, interpret=interp)

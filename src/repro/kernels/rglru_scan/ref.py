@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the RG-LRU diagonal linear recurrence (Griffin /
+RecurrentGemma):  h_t = a_t * h_{t-1} + b_t   (elementwise, per channel)."""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def rglru_ref(a: jnp.ndarray, b: jnp.ndarray,
+              h0: Optional[jnp.ndarray] = None
+              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """a, b: (B,T,D) -> (h (B,T,D), h_last (B,D)).  float32 inside."""
+    B, T, D = a.shape
+    af = a.astype(jnp.float32)
+    bf = b.astype(jnp.float32)
+    if h0 is None:
+        h0 = jnp.zeros((B, D), jnp.float32)
+
+    def step(h, inp):
+        at, bt = inp
+        h = at * h + bt
+        return h, h
+
+    hT, hs = jax.lax.scan(step, h0, (af.transpose(1, 0, 2),
+                                     bf.transpose(1, 0, 2)))
+    return hs.transpose(1, 0, 2).astype(a.dtype), hT

@@ -1,0 +1,21 @@
+"""jit'd dispatch for fused RMSNorm."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.kernels import config as kcfg
+from repro.kernels.rmsnorm.ref import rmsnorm_ref
+from repro.kernels.rmsnorm.rmsnorm import rmsnorm_pallas
+
+
+def rmsnorm(x: jnp.ndarray, g: jnp.ndarray, eps: float = 1e-6,
+            use_pallas: Optional[bool] = None,
+            interpret: Optional[bool] = None) -> jnp.ndarray:
+    use = kcfg.use_pallas() if use_pallas is None else use_pallas
+    if not use:
+        return rmsnorm_ref(x, g, eps)
+    interp = kcfg.interpret() if interpret is None else interpret
+    return rmsnorm_pallas(x, g, eps, interpret=interp)

@@ -1,0 +1,20 @@
+"""jit'd dispatch for the WKV6 scan."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.kernels import config as kcfg
+from repro.kernels.rwkv_scan.ref import wkv6_ref
+from repro.kernels.rwkv_scan.rwkv_scan import wkv6_pallas
+
+
+def wkv6(r, k, v, w, u, use_pallas: Optional[bool] = None,
+         interpret: Optional[bool] = None):
+    use = kcfg.use_pallas() if use_pallas is None else use_pallas
+    if not use:
+        return wkv6_ref(r, k, v, w, u)
+    interp = kcfg.interpret() if interpret is None else interpret
+    return wkv6_pallas(r, k, v, w, u, interpret=interp)

@@ -1,0 +1,42 @@
+"""Pure-jnp oracle for the RWKV6 (Finch) WKV recurrence.
+
+Per head with head dim D, state S in R^{DxD} (key x value):
+
+    y_t[j]  = sum_i r_t[i] * ( S_{t-1}[i,j] + u[i] * k_t[i] * v_t[j] )
+    S_t[i,:] = w_t[i] * S_{t-1}[i,:] + k_t[i] * v_t[:]
+
+with data-dependent per-channel decay w_t in (0,1) (Finch's headline
+feature) and the per-head bonus u.  Implemented as a lax.scan over time in
+float32.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv6_ref(r: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+             w: jnp.ndarray, u: jnp.ndarray,
+             state: Optional[jnp.ndarray] = None
+             ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """r,k,v,w: (B,T,H,D); u: (H,D).  Returns (y (B,T,H,D), S (B,H,D,D))."""
+    B, T, H, D = r.shape
+    rf, kf, vf, wf = (x.astype(jnp.float32) for x in (r, k, v, w))
+    uf = u.astype(jnp.float32)
+    if state is None:
+        state = jnp.zeros((B, H, D, D), jnp.float32)
+
+    def step(S, inp):
+        rt, kt, vt, wt = inp                       # (B,H,D) each
+        kv = kt[..., :, None] * vt[..., None, :]   # (B,H,D,D)
+        y = jnp.einsum("bhi,bhij->bhj", rt, S) \
+            + jnp.einsum("bhi,bhi,bhj->bhj", rt, uf[None] * kt, vt)
+        S = wt[..., :, None] * S + kv
+        return S, y
+
+    xs = tuple(x.transpose(1, 0, 2, 3) for x in (rf, kf, vf, wf))
+    S, ys = jax.lax.scan(step, state, xs)
+    return ys.transpose(1, 0, 2, 3).astype(r.dtype), S

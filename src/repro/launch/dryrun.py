@@ -1,0 +1,330 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+MUST be the very first two lines — before ANY other import (jax locks the
+device count on first init):"""
+import os  # noqa: E402
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import re            # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+from typing import Dict, Optional, Tuple  # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import registry               # noqa: E402
+from repro.configs.shapes import SHAPES, applicable  # noqa: E402
+from repro.core import meshplan                  # noqa: E402
+from repro.core.hbmplan import plan_memory       # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models.api import get_model           # noqa: E402
+from repro.optim import adamw                    # noqa: E402
+from repro.train.step import make_train_step     # noqa: E402
+
+# Matches ONLY lines whose op itself is a collective, i.e.
+#   %name = <result-shape(s)> all-gather(...)
+# and not consumer lines that merely reference %all-gather.N as an operand.
+COLLECTIVE_RE = re.compile(
+    r"=\s*(\([^)]*\)|[a-zA-Z0-9_]+\[[0-9,]*\]\S*)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(")
+SHAPE_RE = re.compile(r"(bf16|f32|f16|s32|u32|s8|u8|pred|s64|f64)"
+                      r"\[([0-9,]*)\]")
+
+_DTYPE_BYTES = {"bf16": 2, "f16": 2, "f32": 4, "s32": 4, "u32": 4,
+                "s8": 1, "u8": 1, "pred": 1, "s64": 8, "f64": 8}
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Sum *result* bytes of every collective op in the optimized HLO
+    (async -start/-done pairs counted once, via the -start)."""
+    out: Dict[str, float] = {}
+    for line in hlo_text.splitlines():
+        m = COLLECTIVE_RE.search(line)
+        if m is None:
+            continue
+        kind = m.group(2).lower()
+        result = m.group(1)
+        nbytes = 0.0
+        for dt, dims in SHAPE_RE.findall(result):
+            elems = 1
+            if dims:
+                for d in dims.split(","):
+                    if d:
+                        elems *= int(d)
+            nbytes += elems * _DTYPE_BYTES.get(dt, 4)
+        out[kind] = out.get(kind, 0.0) + nbytes
+    return out
+
+
+def _build_and_lower(cfg, shape, mesh, micro_override: Optional[int] = None,
+                     override: Optional[Dict] = None,
+                     use_hints: bool = True):
+    """Shared lowering path for full cells and the while-body cost probes.
+    Returns (lowered, aux dict)."""
+    from repro.core import hints as hintmod
+    axes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    n_chips = mesh.devices.size
+    dp = n_chips // axes.get("model", 1)
+    model = get_model(cfg)
+    aux: Dict = {}
+    plan = meshplan.plan_model(cfg, mesh, shape.kind,
+                               shape.global_batch, shape.seq_len,
+                               override=override)
+    hintmod.set_hints(plan.hints if use_hints else None)
+    aux["plan"] = plan
+    params_s = registry.param_specs(cfg)
+    p_shard = meshplan.tree_shardings(plan, mesh, params_s)
+
+    if shape.kind == "train":
+        mem = plan_memory(cfg, shape.global_batch, shape.seq_len, dp,
+                          axes.get("model", 1))
+        aux["mem"] = mem
+        micro = mem.microbatches if micro_override is None else micro_override
+        aux["micro"] = micro
+        opt_cfg = adamw.AdamWConfig()
+        accum_specs = (adamw.zero_specs(plan, mesh, params_s)
+                       if (mem.zero1 and micro > 1) else None)
+        step = make_train_step(cfg, opt_cfg, remat=mem.remat,
+                               microbatches=micro,
+                               accum_specs=accum_specs)
+        opt_s = jax.eval_shape(adamw.init, params_s)
+        o_shard = (adamw.zero1_shardings(plan, mesh, params_s, opt_s)
+                   if mem.zero1 else
+                   adamw.AdamWState(
+                       step=meshplan.NamedSharding(mesh, meshplan.P()),
+                       m=meshplan.tree_shardings(plan, mesh, opt_s.m),
+                       v=meshplan.tree_shardings(plan, mesh, opt_s.v)))
+        batch_s = registry.batch_input_specs(cfg, shape.global_batch,
+                                             shape.seq_len)
+        b_shard = meshplan.batch_shardings(plan, mesh, batch_s)
+        with mesh:
+            lowered = jax.jit(
+                step,
+                in_shardings=(p_shard, o_shard, b_shard),
+                out_shardings=(p_shard, o_shard, None),
+                donate_argnums=(0, 1),
+            ).lower(params_s, opt_s, batch_s)
+    elif shape.kind == "prefill":
+        def serve_step(params, tokens):
+            return model.prefill(cfg, params, tokens, shape.seq_len)
+        if cfg.input_kind == "tokens":
+            tok_s = jax.ShapeDtypeStruct(
+                (shape.global_batch, shape.seq_len), jnp.int32)
+        else:
+            tok_s = jax.ShapeDtypeStruct(
+                (shape.global_batch, shape.seq_len, cfg.d_model),
+                jnp.bfloat16)
+        b_shard = meshplan.batch_shardings(plan, mesh, {"x": tok_s})["x"]
+        with mesh:
+            lowered = jax.jit(
+                serve_step,
+                in_shardings=(p_shard, b_shard),
+            ).lower(params_s, tok_s)
+    else:   # decode
+        def serve_step(params, cache, token):
+            return model.decode_step(cfg, params, cache, token)
+        cache_s = registry.cache_specs(cfg, shape.global_batch,
+                                       shape.seq_len)
+        c_shard = meshplan.cache_shardings(plan, mesh, cache_s,
+                                           shape.global_batch)
+        tok_s = registry.decode_input_specs(cfg,
+                                            shape.global_batch)["token"]
+        t_shard = meshplan.batch_shardings(
+            plan, mesh, {"t": tok_s})["t"] \
+            if shape.global_batch >= dp else None
+        with mesh:
+            lowered = jax.jit(
+                serve_step,
+                in_shardings=(p_shard, c_shard, t_shard),
+                out_shardings=(None, c_shard),
+                donate_argnums=(1,),
+            ).lower(params_s, cache_s, tok_s)
+    return lowered, aux
+
+
+def _cost_of(compiled) -> Tuple[float, float, Dict[str, float]]:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    flops = float(ca.get("flops", 0.0)) if ca else 0.0
+    nbytes = float(ca.get("bytes accessed", 0.0)) if ca else 0.0
+    return flops, nbytes, collective_bytes(compiled.as_text())
+
+
+_BODY_COST_CACHE: Dict[Tuple[str, str], Optional[Dict]] = {}
+
+
+def _body_cost(cfg, shape, micro: int = 1) -> Optional[Dict]:
+    """Measure the true per-layer ("while body") cost.  XLA cost_analysis
+    counts while bodies once regardless of trip count, so we lower small
+    *unrolled* variants (unit and 2*unit layers, micro=1, per-microbatch
+    batch) and diff them:
+
+        probe1 = non-layer cost + 1 layer-unit
+        body   = probe2 - probe1          (one layer-unit)
+        total ~= micro * (probe1 + body * (G - 1))
+
+    (the optimizer update is over-counted micro-fold — a <1% error since
+    AdamW is ~10 flops/param vs ~6*tokens flops/param for the model)."""
+    import dataclasses as dc
+    key = (cfg.name, shape.name)
+    if key in _BODY_COST_CACHE:
+        return _BODY_COST_CACHE[key]
+    from repro.models import stacking as ST
+    unit = cfg.unit
+    out: Optional[Dict] = None
+    try:
+        mesh = make_production_mesh(multi_pod=False)
+        pshape = shape if micro == 1 else dc.replace(
+            shape, global_batch=max(shape.global_batch // micro, 1))
+        costs = []
+        ST.FORCE_UNROLL = True      # measure true per-layer cost (no while)
+        try:
+            for n in (unit, 2 * unit):
+                scfg = dc.replace(cfg, n_layers=n)
+                lowered, _ = _build_and_lower(scfg, pshape, mesh,
+                                              micro_override=1)
+                costs.append(_cost_of(lowered.compile()))
+        finally:
+            ST.FORCE_UNROLL = False
+        (f1, b1, c1), (f2, b2, c2) = costs
+        out = {
+            "probe1": {"flops": f1, "bytes": b1, "collectives": c1},
+            "flops": max(f2 - f1, 0.0),
+            "bytes": max(b2 - b1, 0.0),
+            "collectives": {k: max(c2.get(k, 0.0) - c1.get(k, 0.0), 0.0)
+                            for k in set(c1) | set(c2)},
+        }
+    except Exception:
+        out = None
+    _BODY_COST_CACHE[key] = out
+    return out
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               verbose: bool = True, correct_costs: bool = True) -> Dict:
+    """Lower + compile one (arch x shape x mesh) cell; returns the record
+    for EXPERIMENTS.md §Dry-run (memory + cost + collective analysis)."""
+    cfg = registry.get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, reason = applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "status": "skip",
+                "reason": reason}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.perf_counter()
+    rec: Dict = {"arch": arch, "shape": shape_name,
+                 "mesh": "x".join(map(str, mesh.devices.shape)),
+                 "status": "ok"}
+    try:
+        lowered, aux = _build_and_lower(cfg, shape, mesh)
+        plan = aux["plan"]
+        rec["strategy"] = plan.strategy
+        if "mem" in aux:
+            mem = aux["mem"]
+            rec["hbm_plan"] = {"remat": mem.remat, "zero1": mem.zero1,
+                               "est_gib": round(mem.total / 2**30, 2)}
+        compiled = lowered.compile()
+        rec["lower_s"] = round(time.perf_counter() - t0, 1)
+        ma = compiled.memory_analysis()
+        rec["memory"] = {
+            "argument_bytes": getattr(ma, "argument_size_in_bytes", None),
+            "output_bytes": getattr(ma, "output_size_in_bytes", None),
+            "temp_bytes": getattr(ma, "temp_size_in_bytes", None),
+            "peak_bytes": (getattr(ma, "argument_size_in_bytes", 0)
+                           + getattr(ma, "temp_size_in_bytes", 0)),
+        }
+        flops, nbytes, coll = _cost_of(compiled)
+        rec["flops_raw"] = flops
+        rec["hlo_bytes_raw"] = nbytes
+        rec["collectives_raw"] = coll
+        G = cfg.n_layers // cfg.unit
+        micro = aux.get("micro", 1)
+        rec["microbatches"] = micro
+        if correct_costs and G > 1:
+            body = _body_cost(cfg, shape, micro=micro)
+            if body is not None:
+                p1 = body["probe1"]
+                rec["flops"] = micro * (p1["flops"]
+                                        + body["flops"] * (G - 1))
+                rec["hlo_bytes"] = micro * (p1["bytes"]
+                                            + body["bytes"] * (G - 1))
+                keys = set(p1["collectives"]) | set(body["collectives"])
+                rec["collectives"] = {
+                    k: micro * (p1["collectives"].get(k, 0.0)
+                                + body["collectives"].get(k, 0.0)
+                                * (G - 1))
+                    for k in keys}
+                rec["cost_correction"] = "micro x (probe1 + body x (G-1))"
+            else:
+                rec["flops"], rec["hlo_bytes"] = flops, nbytes
+                rec["collectives"] = coll
+                rec["cost_correction"] = "unavailable"
+        else:
+            rec["flops"], rec["hlo_bytes"] = flops, nbytes
+            rec["collectives"] = coll
+            rec["cost_correction"] = "none"
+        if verbose:
+            mm = rec["memory"]
+            print(f"  [{rec['mesh']}] {arch} x {shape_name}: OK "
+                  f"args={mm['argument_bytes']/2**30 if mm['argument_bytes'] else 0:.2f}GiB "
+                  f"temp={mm['temp_bytes']/2**30 if mm['temp_bytes'] else 0:.2f}GiB "
+                  f"flops={rec['flops']:.3e} "
+                  f"coll={ {k: f'{v/2**20:.0f}MiB' for k,v in rec['collectives'].items()} }",
+                  flush=True)
+    except Exception as e:
+        rec["status"] = "fail"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+        if verbose:
+            print(f"  [{rec['mesh']}] {arch} x {shape_name}: FAIL {rec['error']}",
+                  flush=True)
+    return rec
+
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="both")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    args = ap.parse_args()
+
+    archs = registry.ARCH_IDS if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    os.makedirs(args.out, exist_ok=True)
+    records = []
+    n_fail = 0
+    for multi in meshes:
+        print(f"=== mesh {'2x16x16 (multi-pod)' if multi else '16x16'} ===",
+              flush=True)
+        for arch in archs:
+            for shape in shapes:
+                rec = lower_cell(arch, shape, multi)
+                records.append(rec)
+                if rec["status"] == "fail":
+                    n_fail += 1
+                elif rec["status"] == "skip":
+                    print(f"  {arch} x {shape}: SKIP ({rec['reason']})",
+                          flush=True)
+    with open(os.path.join(args.out, "dryrun.json"), "w") as f:
+        json.dump(records, f, indent=1, default=str)
+    ok = sum(r["status"] == "ok" for r in records)
+    skip = sum(r["status"] == "skip" for r in records)
+    print(f"\ndry-run: {ok} ok, {skip} skip, {n_fail} FAIL "
+          f"-> {args.out}/dryrun.json", flush=True)
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,243 @@
+"""Functional JAX building blocks shared by every assigned architecture.
+
+Pure-functional style: each layer is an ``init_*`` returning a params pytree
+(nested dicts of arrays) and an ``apply`` function.  No framework deps —
+params are plain pytrees so pjit/shard_map, optimizers and checkpointing
+compose directly.
+
+Numerics follow the reference implementations: RMSNorm (pre-norm), rotary
+position embeddings, GQA attention with optional per-head qk-norm
+(Qwen3-style) and optional sliding window (Gemma3 local layers), SwiGLU /
+GeGLU MLPs.  Attention routes through ``kernels.flash_attention.ops`` which
+dispatches to the Pallas kernel on TPU and the exact jnp reference on CPU.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Initializers (all take an explicit key; dtype is the *param* dtype)
+# ---------------------------------------------------------------------------
+
+
+def _dense_init(key, shape, dtype, scale: Optional[float] = None):
+    fan_in = shape[0] if len(shape) >= 2 else shape[-1]
+    s = scale if scale is not None else 1.0 / math.sqrt(fan_in)
+    return (jax.random.normal(key, shape, jnp.float32) * s).astype(dtype)
+
+
+def init_linear(key, d_in: int, d_out: int, dtype=jnp.bfloat16) -> Params:
+    return {"w": _dense_init(key, (d_in, d_out), dtype)}
+
+
+def init_rmsnorm(d: int, dtype=jnp.bfloat16) -> Params:
+    return {"g": jnp.ones((d,), dtype)}
+
+
+def init_embedding(key, vocab: int, d: int, dtype=jnp.bfloat16) -> Params:
+    return {"table": _dense_init(key, (vocab, d), dtype, scale=1.0)}
+
+
+# ---------------------------------------------------------------------------
+# Primitives
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(p: Params, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (y * p["g"].astype(jnp.float32)).astype(x.dtype)
+
+
+def linear(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    return jnp.einsum("...i,io->...o", x, p["w"])
+
+
+def rope_freqs(head_dim: int, theta: float = 10000.0) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2,
+                                       dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float = 10000.0) -> jnp.ndarray:
+    """x: (..., S, H, Dh); positions: (..., S)."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                                # (Dh/2,)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs    # (..., S, Dh/2)
+    cos = jnp.cos(ang)[..., :, None, :]                          # (.., S, 1, Dh/2)
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin,
+                           x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA + optional qk-norm + optional sliding window)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnConfig:
+    d_model: int
+    n_heads: int
+    n_kv: int
+    head_dim: int
+    qk_norm: bool = False
+    window: Optional[int] = None          # sliding-window size (local attn)
+    rope_theta: float = 10000.0
+    causal: bool = True                   # False for encoder-only (HuBERT)
+
+
+def init_attention(key, cfg: AttnConfig, dtype=jnp.bfloat16) -> Params:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    d, h, kv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.head_dim
+    p: Params = {
+        "wq": init_linear(k1, d, h * dh, dtype),
+        "wk": init_linear(k2, d, kv * dh, dtype),
+        "wv": init_linear(k3, d, kv * dh, dtype),
+        "wo": init_linear(k4, h * dh, d, dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = init_rmsnorm(dh, dtype)
+        p["k_norm"] = init_rmsnorm(dh, dtype)
+    return p
+
+
+def attention_qkv(p: Params, cfg: AttnConfig, x: jnp.ndarray,
+                  positions: jnp.ndarray
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """(B,S,D) -> q (B,S,H,Dh), k/v (B,S,KV,Dh), rope + qk-norm applied."""
+    B, S, _ = x.shape
+    q = linear(p["wq"], x).reshape(B, S, cfg.n_heads, cfg.head_dim)
+    k = linear(p["wk"], x).reshape(B, S, cfg.n_kv, cfg.head_dim)
+    v = linear(p["wv"], x).reshape(B, S, cfg.n_kv, cfg.head_dim)
+    if cfg.qk_norm:
+        q = rmsnorm(p["q_norm"], q)
+        k = rmsnorm(p["k_norm"], k)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attention(p: Params, cfg: AttnConfig, x: jnp.ndarray,
+              positions: jnp.ndarray) -> jnp.ndarray:
+    """Full-sequence attention (training / prefill)."""
+    from repro.kernels.flash_attention import ops as fa
+    B, S, _ = x.shape
+    q, k, v = attention_qkv(p, cfg, x, positions)
+    ctx = fa.flash_attention(q, k, v, causal=cfg.causal, window=cfg.window)
+    return linear(p["wo"], ctx.reshape(B, S, -1))
+
+
+def attention_decode(p: Params, cfg: AttnConfig, x: jnp.ndarray,
+                     cache_k: jnp.ndarray, cache_v: jnp.ndarray,
+                     position: jnp.ndarray,
+                     write_idx: Optional[jnp.ndarray] = None,
+                     valid: Optional[jnp.ndarray] = None
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One-token decode step against a (B, S_cache, KV, Dh) cache.
+
+    ``position`` (B,) — absolute position of the new token (drives RoPE).
+    ``write_idx`` (B,) — cache slot to write (``position`` by default;
+    ``position % window`` for ring-buffer local-layer caches).
+    ``valid`` (B, S_cache) — which cache slots may be attended; defaults to
+    ``slot <= position``.  Ring buffers pass their own mask — every live
+    slot of a window-sized ring is in-window by construction, so no
+    relative-position masking is needed beyond validity."""
+    from repro.core import hints
+    B, one, _ = x.shape
+    assert one == 1
+    q = linear(p["wq"], x).reshape(B, 1, cfg.n_heads, cfg.head_dim)
+    # keep the q projection head-sharded: with a 1-token batch GSPMD
+    # otherwise all-gathers the TP weight shards (~190 MB/layer on a 32B
+    # model) instead of running the projection tensor-parallel
+    q = hints.constraint(q, "decode_heads")
+    k = linear(p["wk"], x).reshape(B, 1, cfg.n_kv, cfg.head_dim)
+    v = linear(p["wv"], x).reshape(B, 1, cfg.n_kv, cfg.head_dim)
+    if cfg.qk_norm:
+        q = rmsnorm(p["q_norm"], q)
+        k = rmsnorm(p["k_norm"], k)
+    pos = position[:, None]                                   # (B,1)
+    q = apply_rope(q, pos, cfg.rope_theta)
+    k = apply_rope(k, pos, cfg.rope_theta)
+
+    S = cache_k.shape[1]
+    if write_idx is None:
+        write_idx = position
+    if valid is None:
+        valid = jnp.arange(S)[None, :] <= position[:, None]
+
+    # scatter the new k/v into the cache at `write_idx`
+    sel = (jnp.arange(S)[None, :] == write_idx[:, None])[:, :, None, None]
+    from repro.core import hints
+    if hints.get("decode_scatter_update") is not None:
+        # scatter-update: touch only the written slot instead of
+        # re-materializing the whole (B,S,KV,Dh) cache via select
+        b_idx = jnp.arange(B)
+        cache_k = cache_k.at[b_idx, write_idx].set(k[:, 0])
+        cache_v = cache_v.at[b_idx, write_idx].set(v[:, 0])
+    else:
+        cache_k = jnp.where(sel, k, cache_k)
+        cache_v = jnp.where(sel, v, cache_v)
+    cache_k = hints.constraint(cache_k, "decode_cache")
+    cache_v = hints.constraint(cache_v, "decode_cache")
+
+    groups = cfg.n_heads // cfg.n_kv
+    qh = q.reshape(B, cfg.n_kv, groups, cfg.head_dim)
+    scale = 1.0 / math.sqrt(cfg.head_dim)
+    logits = jnp.einsum("bkgd,bskd->bkgs", qh.astype(jnp.float32),
+                        cache_k.astype(jnp.float32)) * scale
+    # sequence-sharded ring-decode: keep the (B,KV,G,S) logits sharded on
+    # S so the softmax/value contraction runs as partial stats + psum of
+    # (B,KV,G,Dh)-sized tensors, instead of GSPMD all-gathering the cache
+    logits = hints.constraint(logits, "decode_logits")
+    logits = jnp.where(valid[:, None, None, :], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    ctx = jnp.einsum("bkgs,bskd->bkgd", w,
+                     cache_v.astype(jnp.float32)).astype(x.dtype)
+    ctx = ctx.reshape(B, 1, cfg.n_heads * cfg.head_dim)
+    return linear(p["wo"], ctx), cache_k, cache_v
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+def init_swiglu(key, d: int, d_ff: int, dtype=jnp.bfloat16) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"w_gate": init_linear(k1, d, d_ff, dtype),
+            "w_up": init_linear(k2, d, d_ff, dtype),
+            "w_down": init_linear(k3, d_ff, d, dtype)}
+
+
+def swiglu(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    from repro.core import hints
+    g = jax.nn.silu(linear(p["w_gate"], x).astype(jnp.float32))
+    u = linear(p["w_up"], x).astype(jnp.float32)
+    h = hints.constraint((g * u).astype(x.dtype), "ffn_hidden")
+    return linear(p["w_down"], h)
+
+
+def init_gelu_mlp(key, d: int, d_ff: int, dtype=jnp.bfloat16) -> Params:
+    k1, k2 = jax.random.split(key, 2)
+    return {"w_up": init_linear(k1, d, d_ff, dtype),
+            "w_down": init_linear(k2, d_ff, d, dtype)}
+
+
+def gelu_mlp(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    from repro.core import hints
+    h = jax.nn.gelu(linear(p["w_up"], x).astype(jnp.float32),
+                    approximate=True)
+    h = hints.constraint(h.astype(x.dtype), "ffn_hidden")
+    return linear(p["w_down"], h)

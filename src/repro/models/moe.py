@@ -1,0 +1,208 @@
+"""Mixture-of-Experts transformer family (olmoe-1b-7b, granite-moe-3b).
+
+Token-choice top-k routing with capacity-bucketed, sort-based dispatch
+(O(S*K) bookkeeping; no (N,E,C) one-hot tensors), grouped per-expert FFN
+matmuls (Pallas kernel on TPU), residual fall-through for capacity
+overflow.  The expert axis is the EP sharding axis in the mesh plan.
+Layers are stacked and scanned (models.stacking).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hints
+from repro.models import layers as L
+from repro.models import stacking as ST
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+
+Params = Dict[str, Any]
+
+CAPACITY_FACTOR = 1.25
+
+
+def init_moe_mlp(key, cfg: ModelConfig) -> Params:
+    dt = cfg.param_dtype
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    E, D, F = cfg.n_experts, cfg.d_model, cfg.d_ff
+
+    def expert_stack(k, d_in, d_out):
+        ks = jax.random.split(k, E)
+        return jnp.stack([L._dense_init(ks[i], (d_in, d_out), dt)
+                          for i in range(E)])
+
+    return {
+        "router": L.init_linear(k1, D, E, dt),
+        "w_gate": expert_stack(k2, D, F),
+        "w_up": expert_stack(k3, D, F),
+        "w_down": expert_stack(k4, F, D),
+    }
+
+
+def capacity(cfg: ModelConfig, n_tokens: int) -> int:
+    c = int(n_tokens * cfg.top_k * CAPACITY_FACTOR / cfg.n_experts) + 1
+    return max(8, -(-c // 8) * 8)     # round up to 8
+
+
+def _route_group(top_e: jnp.ndarray, E: int, C: int) -> jnp.ndarray:
+    """top_e: (S, K) chosen experts for one token group.  Returns the
+    gather index (E*C,) mapping each expert-capacity slot to a flat (s*K+k)
+    assignment, with S*K as the padding sentinel for unfilled slots.
+    Sort-based dispatch: O(S*K log) work, O(E*C) memory."""
+    S, K = top_e.shape
+    flat = top_e.reshape(-1)                               # (S*K,)
+    order = jnp.argsort(flat, stable=True)
+    sorted_e = flat[order]
+    counts = jnp.sum(jax.nn.one_hot(flat, E, dtype=jnp.int32), axis=0)
+    offsets = jnp.cumsum(counts) - counts                  # (E,)
+    rank = jnp.arange(S * K) - offsets[sorted_e]           # pos within expert
+    slot = jnp.where(rank < C, sorted_e * C + rank, E * C)
+    gather = jnp.full((E * C + 1,), S * K, jnp.int32)
+    gather = gather.at[slot].set(order.astype(jnp.int32), mode="drop")
+    return gather[:E * C]
+
+
+def moe_mlp(p: Params, cfg: ModelConfig, x: jnp.ndarray) -> jnp.ndarray:
+    """x: (B,S,D) -> (B,S,D).  Top-k routing; capacity C per (batch-row)
+    group; overflow tokens fall back to the residual path."""
+    from repro.kernels.grouped_matmul import ops as gmm
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    C = capacity(cfg, S)
+
+    logits = L.linear(p["router"], x).astype(jnp.float32)    # (B,S,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, K)                   # (B,S,K)
+    top_p = top_p / jnp.maximum(jnp.sum(top_p, -1, keepdims=True), 1e-9)
+
+    gather = jax.vmap(lambda te: _route_group(te, E, C))(top_e)  # (B,E*C)
+    token_idx = jnp.minimum(gather // K, S)                  # pad -> row S
+    xpad = jnp.concatenate([x, jnp.zeros((B, 1, D), x.dtype)], axis=1)
+    xdisp = jnp.take_along_axis(
+        xpad, token_idx[..., None], axis=1)                  # (B,E*C,D)
+    xdisp = xdisp.reshape(B, E, C, D).transpose(1, 0, 2, 3) \
+        .reshape(E, B * C, D)
+    xdisp = hints.constraint(xdisp, "moe_dispatch")
+
+    g = gmm.grouped_matmul(xdisp, p["w_gate"])               # (E,BC,F)
+    u = gmm.grouped_matmul(xdisp, p["w_up"])
+    h = (jax.nn.silu(g.astype(jnp.float32))
+         * u.astype(jnp.float32)).astype(x.dtype)
+    h = hints.constraint(h, "moe_hidden")
+    y = gmm.grouped_matmul(h, p["w_down"])                   # (E,BC,D)
+    y = hints.constraint(y, "moe_out")
+    y = y.reshape(E, B, C, D).transpose(1, 0, 2, 3) \
+        .reshape(B, E * C, D)
+
+    # combine: weight each slot by its router prob, scatter-add to tokens
+    ppad = jnp.concatenate(
+        [top_p.reshape(B, S * K), jnp.zeros((B, 1), top_p.dtype)], axis=1)
+    w_slot = jnp.take_along_axis(
+        ppad, jnp.minimum(gather, S * K), axis=1)            # (B,E*C)
+    contrib = y * w_slot[..., None].astype(y.dtype)
+    out = jnp.zeros((B, S + 1, D), x.dtype)
+    out = out.at[jnp.arange(B)[:, None], token_idx].add(contrib,
+                                                        mode="drop")
+    return out[:, :S]
+
+
+def _init_block(key, cfg: ModelConfig, i: int) -> Params:
+    dt = cfg.param_dtype
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": L.init_rmsnorm(cfg.d_model, dt),
+        "attn": L.init_attention(k1, T._attn_cfg(cfg, i), dt),
+        "ln2": L.init_rmsnorm(cfg.d_model, dt),
+        "moe": init_moe_mlp(k2, cfg),
+    }
+
+
+def init(key, cfg: ModelConfig) -> Params:
+    dt = cfg.param_dtype
+    keys = jax.random.split(key, cfg.n_layers + 3)
+    p: Params = {"embed": L.init_embedding(keys[0], cfg.vocab,
+                                           cfg.d_model, dt)}
+    layer_trees = [_init_block(keys[i + 1], cfg, i)
+                   for i in range(cfg.n_layers)]
+    slots, tail = ST.stack_layers(layer_trees, cfg.unit)
+    p["blocks"] = slots
+    p["tail"] = tail
+    p["ln_f"] = L.init_rmsnorm(cfg.d_model, dt)
+    p["head"] = L.init_linear(keys[-1], cfg.d_model, cfg.vocab, dt)
+    return p
+
+
+def forward(cfg: ModelConfig, p: Params, x: jnp.ndarray,
+            remat: bool = False) -> jnp.ndarray:
+    h = p["embed"]["table"][x]
+    B, S = h.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+    def body(h, blk, u, g):
+        a = L.attention(blk["attn"], T._attn_cfg(cfg, u),
+                        L.rmsnorm(blk["ln1"], h), positions)
+        h = h + a
+        return h + moe_mlp(blk["moe"], cfg, L.rmsnorm(blk["ln2"], h))
+
+    h = ST.scan_blocks(h, p["blocks"], p["tail"], body, cfg.unit,
+                       cfg.n_layers, remat)
+    h = L.rmsnorm(p["ln_f"], h)
+    return L.linear(p["head"], h).astype(jnp.float32)
+
+
+init_cache = T.init_cache
+
+
+def decode_step(cfg: ModelConfig, p: Params, cache: Params,
+                token: jnp.ndarray) -> Tuple[jnp.ndarray, Params]:
+    pos = cache["pos"]
+    h = p["embed"]["table"][token[:, None]]
+
+    def body(h, blk, lc, u):
+        acfg = T._attn_cfg(cfg, u)
+        a, ck, cv = L.attention_decode(
+            blk["attn"], acfg, L.rmsnorm(blk["ln1"], h),
+            lc["k"], lc["v"], pos)
+        h = h + a
+        h = h + moe_mlp(blk["moe"], cfg, L.rmsnorm(blk["ln2"], h))
+        return h, {"k": ck, "v": cv}
+
+    h, new_slots, new_tail = ST.scan_blocks_cached(
+        h, p["blocks"], p["tail"], cache["slots"], cache["tail"],
+        body, cfg.unit, cfg.n_layers)
+    h = L.rmsnorm(p["ln_f"], h)
+    logits = L.linear(p["head"], h)[:, 0].astype(jnp.float32)
+    return logits, {"slots": new_slots, "tail": new_tail, "pos": pos + 1}
+
+
+def prefill(cfg: ModelConfig, p: Params, x: jnp.ndarray, max_seq: int
+            ) -> Tuple[jnp.ndarray, Params]:
+    from repro.kernels.flash_attention import ops as fa
+    B, S = x.shape[:2]
+    h = p["embed"]["table"][x]
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+    def body(h, blk, u):
+        acfg = T._attn_cfg(cfg, u)
+        xn = L.rmsnorm(blk["ln1"], h)
+        q, k, v = L.attention_qkv(blk["attn"], acfg, xn, positions)
+        ctx = fa.flash_attention(q, k, v, causal=True, window=acfg.window)
+        h = h + L.linear(blk["attn"]["wo"], ctx.reshape(B, S, -1))
+        h = h + moe_mlp(blk["moe"], cfg, L.rmsnorm(blk["ln2"], h))
+        ck = jnp.zeros((B, max_seq, cfg.n_kv, cfg.head_dim_), k.dtype)
+        cv = jnp.zeros_like(ck)
+        ck = jax.lax.dynamic_update_slice(ck, k, (0, 0, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v, (0, 0, 0, 0))
+        return h, {"k": ck, "v": cv}
+
+    h, slots, tail = ST.scan_blocks_collect(
+        h, p["blocks"], p["tail"], body, cfg.unit, cfg.n_layers)
+    h = L.rmsnorm(p["ln_f"], h)
+    logits = L.linear(p["head"], h[:, -1]).astype(jnp.float32)
+    return logits, {"slots": slots, "tail": tail,
+                    "pos": jnp.full((B,), S, jnp.int32)}

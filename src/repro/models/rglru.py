@@ -1,0 +1,273 @@
+"""RecurrentGemma (Griffin) — hybrid RG-LRU + local-attention LM.
+
+Block pattern (rec, rec, attn): two recurrent blocks per local-attention
+block (the assignment's "1:2").  The recurrent block is Griffin's:
+
+    x -> RMSNorm -> [branch a: Linear -> GeLU]                 (gate)
+                    [branch b: Linear -> Conv1D(4) -> RG-LRU]
+    y = gate * rglru_out -> Linear -> residual
+
+RG-LRU:  r_t = sigmoid(W_a x_t + b_a); i_t = sigmoid(W_x x_t + b_x)
+         log a_t = -c * softplus(L) * r_t          (c = 8)
+         h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+The diagonal recurrence runs in the chunked Pallas scan kernel.  Decode
+state per recurrent block: h (B, W) + conv ring (B, 3, W); attention blocks
+keep a window-sized ring KV cache — so 500k-token decode is O(window).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import stacking as ST
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+
+Params = Dict[str, Any]
+
+LRU_C = 8.0
+
+
+def _width(cfg: ModelConfig) -> int:
+    return cfg.rnn_width or cfg.d_model
+
+
+def init_rec_block(key, cfg: ModelConfig) -> Params:
+    dt = cfg.param_dtype
+    D, W = cfg.d_model, _width(cfg)
+    ks = jax.random.split(key, 6)
+    return {
+        "ln": L.init_rmsnorm(D, dt),
+        "w_gate": L.init_linear(ks[0], D, W, dt),
+        "w_x": L.init_linear(ks[1], D, W, dt),
+        "conv": (jax.random.normal(ks[2], (cfg.conv_width, W), jnp.float32)
+                 * 0.1).astype(dt),
+        "wa": L.init_linear(ks[3], W, W, dt),
+        "wi": L.init_linear(ks[4], W, W, dt),
+        "lam": jnp.full((W,), 0.7, dt),        # softplus(L) decay rates
+        "w_out": L.init_linear(ks[5], W, D, dt),
+    }
+
+
+def init(key, cfg: ModelConfig) -> Params:
+    dt = cfg.param_dtype
+    keys = jax.random.split(key, cfg.n_layers + 2)
+    blocks = []
+    for i in range(cfg.n_layers):
+        kind = cfg.layer_kind(i)           # derived from cfg, not stored
+        k1, k2 = jax.random.split(keys[i + 1])
+        if kind == "rec":
+            blk = {"rec": init_rec_block(k1, cfg)}
+        else:
+            blk = {"ln1": L.init_rmsnorm(cfg.d_model, dt),
+                   "attn": L.init_attention(k1, _attn_cfg(cfg), dt)}
+        k3, _ = jax.random.split(k2)
+        blk["ln2"] = L.init_rmsnorm(cfg.d_model, dt)
+        blk["mlp"] = L.init_gelu_mlp(k3, cfg.d_model, cfg.d_ff, dt)
+        blocks.append(blk)
+    slots, tail = ST.stack_layers(blocks, cfg.unit)
+    return {"embed": L.init_embedding(keys[0], cfg.vocab, cfg.d_model, dt),
+            "blocks": slots, "tail": tail,
+            "ln_f": L.init_rmsnorm(cfg.d_model, dt),
+            "head": L.init_linear(keys[-1], cfg.d_model, cfg.vocab, dt)}
+
+
+def _attn_cfg(cfg: ModelConfig) -> L.AttnConfig:
+    return L.AttnConfig(d_model=cfg.d_model, n_heads=cfg.n_heads,
+                        n_kv=cfg.n_kv, head_dim=cfg.head_dim_,
+                        window=cfg.window, rope_theta=cfg.rope_theta,
+                        causal=True)
+
+
+def _conv1d(conv: jnp.ndarray, x: jnp.ndarray,
+            x_hist: jnp.ndarray) -> jnp.ndarray:
+    """Causal depthwise conv, width K: x (B,T,W), x_hist (B,K-1,W)."""
+    K = conv.shape[0]
+    xc = jnp.concatenate([x_hist, x], axis=1)
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for j in range(K):
+        out = out + xc[:, j:j + x.shape[1]].astype(jnp.float32) \
+            * conv[K - 1 - j].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def _lru_gates(rec: Params, xb: jnp.ndarray):
+    r = jax.nn.sigmoid(L.linear(rec["wa"], xb).astype(jnp.float32))
+    i = jax.nn.sigmoid(L.linear(rec["wi"], xb).astype(jnp.float32))
+    log_a = -LRU_C * jax.nn.softplus(
+        rec["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) \
+        * (i * xb.astype(jnp.float32))
+    return a, b
+
+
+def rec_block(rec: Params, cfg: ModelConfig, h: jnp.ndarray,
+              conv_hist: jnp.ndarray, h0):
+    """Full-sequence recurrent mixer.  Returns (out, new conv hist, h_T)."""
+    from repro.kernels.rglru_scan import ops as scan
+    xn = L.rmsnorm(rec["ln"], h)
+    gate = jax.nn.gelu(L.linear(rec["w_gate"], xn).astype(jnp.float32),
+                       approximate=True)
+    xb_raw = L.linear(rec["w_x"], xn)
+    xb = _conv1d(rec["conv"], xb_raw, conv_hist)
+    a, b = _lru_gates(rec, xb)
+    hs, hT = scan.rglru(a.astype(xn.dtype), b.astype(xn.dtype))
+    y = (gate * hs.astype(jnp.float32)).astype(h.dtype)
+    K = cfg.conv_width
+    new_hist = jnp.concatenate([conv_hist, xb_raw], axis=1)[:, -(K - 1):] \
+        if K > 1 else conv_hist
+    return L.linear(rec["w_out"], y), new_hist, hT
+
+
+def forward(cfg: ModelConfig, p: Params, x: jnp.ndarray,
+            remat: bool = False) -> jnp.ndarray:
+    h = p["embed"]["table"][x]
+    B, S = h.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    W = _width(cfg)
+    zero_hist = jnp.zeros((B, cfg.conv_width - 1, W), h.dtype)
+
+    def body(h, blk, u, g):
+        if cfg.layer_kind(u) == "rec":
+            a, _, _ = rec_block(blk["rec"], cfg, h, zero_hist, None)
+            h = h + a
+        else:
+            att = L.attention(blk["attn"], _attn_cfg(cfg),
+                              L.rmsnorm(blk["ln1"], h), positions)
+            h = h + att
+        return h + L.gelu_mlp(blk["mlp"], L.rmsnorm(blk["ln2"], h))
+
+    h = ST.scan_blocks(h, p["blocks"], p["tail"], body, cfg.unit,
+                       cfg.n_layers, remat)
+    h = L.rmsnorm(p["ln_f"], h)
+    return L.linear(p["head"], h).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+
+
+def _cache_entry(cfg: ModelConfig, u: int, batch: int, max_seq: int):
+    dt = cfg.param_dtype
+    W = _width(cfg)
+    if cfg.layer_kind(u) == "rec":
+        return {"h": jnp.zeros((batch, W), jnp.float32),
+                "conv": jnp.zeros((batch, cfg.conv_width - 1, W), dt)}
+    Sl = min(cfg.window or max_seq, max_seq)
+    return {"k": jnp.zeros((batch, Sl, cfg.n_kv, cfg.head_dim_), dt),
+            "v": jnp.zeros((batch, Sl, cfg.n_kv, cfg.head_dim_), dt)}
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int) -> Params:
+    unit = cfg.unit
+    G = cfg.n_layers // unit
+    slots = []
+    for u in range(unit):
+        e = _cache_entry(cfg, u, batch, max_seq)
+        slots.append(jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (G,) + x.shape), e))
+    tail = [_cache_entry(cfg, (G * unit + j) % unit, batch, max_seq)
+            for j in range(cfg.n_layers - G * unit)]
+    return {"slots": slots, "tail": tail,
+            "pos": jnp.zeros((batch,), jnp.int32)}
+
+
+def decode_step(cfg: ModelConfig, p: Params, cache: Params,
+                token: jnp.ndarray) -> Tuple[jnp.ndarray, Params]:
+    pos = cache["pos"]
+    h = p["embed"]["table"][token[:, None]]
+
+    def body(h, blk, lc, u):
+        if cfg.layer_kind(u) == "rec":
+            rec = blk["rec"]
+            xn = L.rmsnorm(rec["ln"], h)
+            gate = jax.nn.gelu(
+                L.linear(rec["w_gate"], xn).astype(jnp.float32),
+                approximate=True)
+            xb_raw = L.linear(rec["w_x"], xn)
+            xb = _conv1d(rec["conv"], xb_raw, lc["conv"])
+            a, b = _lru_gates(rec, xb)
+            h_new = a[:, 0] * lc["h"] + b[:, 0]                # (B,W)
+            y = (gate[:, 0] * h_new).astype(h.dtype)
+            h = h + L.linear(rec["w_out"], y)[:, None]
+            K = cfg.conv_width
+            nhist = jnp.concatenate(
+                [lc["conv"], xb_raw], axis=1)[:, -(K - 1):] \
+                if K > 1 else lc["conv"]
+            return h, {"h": h_new, "conv": nhist}
+        acfg = _attn_cfg(cfg)
+        Sl = lc["k"].shape[1]
+        write_idx = pos % Sl
+        valid = (jnp.arange(Sl)[None, :] <= pos[:, None]) \
+            | (pos[:, None] >= Sl)
+        a2cfg = dataclasses.replace(acfg, window=None)
+        att, ck, cv = L.attention_decode(
+            blk["attn"], a2cfg, L.rmsnorm(blk["ln1"], h),
+            lc["k"], lc["v"], pos, write_idx=write_idx, valid=valid)
+        h = h + att
+        return h, {"k": ck, "v": cv}
+
+    def full_body(h, blk, lc, u):
+        h, nc = body(h, blk, lc, u)
+        h = h + L.gelu_mlp(blk["mlp"], L.rmsnorm(blk["ln2"], h))
+        return h, nc
+
+    h, new_slots, new_tail = ST.scan_blocks_cached(
+        h, p["blocks"], p["tail"], cache["slots"], cache["tail"],
+        full_body, cfg.unit, cfg.n_layers)
+    h = L.rmsnorm(p["ln_f"], h)
+    logits = L.linear(p["head"], h)[:, 0].astype(jnp.float32)
+    return logits, {"slots": new_slots, "tail": new_tail, "pos": pos + 1}
+
+
+def prefill(cfg: ModelConfig, p: Params, x: jnp.ndarray, max_seq: int
+            ) -> Tuple[jnp.ndarray, Params]:
+    from repro.kernels.flash_attention import ops as fa
+    B, S = x.shape[:2]
+    h = p["embed"]["table"][x]
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    W = _width(cfg)
+    zero_hist = jnp.zeros((B, cfg.conv_width - 1, W), h.dtype)
+
+    def body(h, blk, u):
+        if cfg.layer_kind(u) == "rec":
+            a, nhist, hT = rec_block(blk["rec"], cfg, h, zero_hist, None)
+            h = h + a
+            out = {"h": hT, "conv": nhist}
+        else:
+            acfg = _attn_cfg(cfg)
+            xn = L.rmsnorm(blk["ln1"], h)
+            q, k, v = L.attention_qkv(blk["attn"], acfg, xn, positions)
+            ctx = fa.flash_attention(q, k, v, causal=True,
+                                     window=acfg.window)
+            h = h + L.linear(blk["attn"]["wo"], ctx.reshape(B, S, -1))
+            Sl = min(cfg.window or max_seq, max_seq)
+            take = min(S, Sl)
+            shift = (S - take) % Sl
+            ck = jnp.zeros((B, Sl, cfg.n_kv, cfg.head_dim_), k.dtype)
+            cv = jnp.zeros_like(ck)
+            ck = jax.lax.dynamic_update_slice(ck, k[:, S - take:],
+                                              (0, 0, 0, 0))
+            cv = jax.lax.dynamic_update_slice(cv, v[:, S - take:],
+                                              (0, 0, 0, 0))
+            if shift:
+                ck = jnp.roll(ck, shift, axis=1)
+                cv = jnp.roll(cv, shift, axis=1)
+            out = {"k": ck, "v": cv}
+        h = h + L.gelu_mlp(blk["mlp"], L.rmsnorm(blk["ln2"], h))
+        return h, out
+
+    h, slots, tail = ST.scan_blocks_collect(
+        h, p["blocks"], p["tail"], body, cfg.unit, cfg.n_layers)
+    h = L.rmsnorm(p["ln_f"], h)
+    logits = L.linear(p["head"], h[:, -1]).astype(jnp.float32)
+    return logits, {"slots": slots, "tail": tail,
+                    "pos": jnp.full((B,), S, jnp.int32)}

@@ -1,0 +1,241 @@
+"""RWKV6 "Finch" — attention-free RNN LM with data-dependent decay.
+
+Structure per block (faithful to the Finch paper at the level the assigned
+config specifies):
+  * time-mix: token-shift lerp produces r/k/v/gate/decay projections; the
+    per-channel decay w_t = exp(-exp(wx_t)) is data-dependent via a LoRA on
+    the shifted input (Finch's headline change over Eagle); WKV6 recurrence
+    runs in the chunked Pallas kernel; per-head RMS normalization and a
+    silu gate close the mixer.
+  * channel-mix: token-shift lerp, squared-ReLU FFN with sigmoid receptance.
+
+State for decode: per layer (WKV state S (B,H,D,D), time-mix shift x_tm
+(B,D), channel-mix shift x_cm (B,D)) — O(1) in sequence length, which is
+why ``long_500k`` runs on this family.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import stacking as ST
+from repro.models.config import ModelConfig
+
+Params = Dict[str, Any]
+
+LORA_R = 64
+
+
+def _heads(cfg: ModelConfig) -> int:
+    return cfg.d_model // cfg.rwkv_head_dim
+
+
+def init_block(key, cfg: ModelConfig) -> Params:
+    dt = cfg.param_dtype
+    D = cfg.d_model
+    H, hd = _heads(cfg), cfg.rwkv_head_dim
+    ks = jax.random.split(key, 12)
+    return {
+        "ln1": L.init_rmsnorm(D, dt),
+        "ln2": L.init_rmsnorm(D, dt),
+        "tm": {
+            # token-shift mixing coefficients per projection
+            "mu_r": jnp.full((D,), 0.5, dt), "mu_k": jnp.full((D,), 0.5, dt),
+            "mu_v": jnp.full((D,), 0.5, dt), "mu_w": jnp.full((D,), 0.5, dt),
+            "mu_g": jnp.full((D,), 0.5, dt),
+            "wr": L.init_linear(ks[0], D, D, dt),
+            "wk": L.init_linear(ks[1], D, D, dt),
+            "wv": L.init_linear(ks[2], D, D, dt),
+            "wg": L.init_linear(ks[3], D, D, dt),
+            # data-dependent decay: w0 + LoRA(x_shifted)
+            "w0": jnp.full((D,), -0.6, dt),
+            "w_lora_a": L.init_linear(ks[4], D, LORA_R, dt),
+            "w_lora_b": L.init_linear(ks[5], LORA_R, D, dt),
+            "u": (jax.random.normal(ks[6], (H, hd), jnp.float32)
+                  * 0.3).astype(dt),
+            "ln_x": L.init_rmsnorm(hd, dt),       # per-head group norm
+            "wo": L.init_linear(ks[7], D, D, dt),
+        },
+        "cm": {
+            "mu_k": jnp.full((D,), 0.5, dt), "mu_r": jnp.full((D,), 0.5, dt),
+            "wk": L.init_linear(ks[8], D, cfg.d_ff, dt),
+            "wr": L.init_linear(ks[9], D, D, dt),
+            "wv": L.init_linear(ks[10], cfg.d_ff, D, dt),
+        },
+    }
+
+
+def init(key, cfg: ModelConfig) -> Params:
+    keys = jax.random.split(key, cfg.n_layers + 2)
+    layer_trees = [init_block(keys[i + 1], cfg)
+                   for i in range(cfg.n_layers)]
+    slots, tail = ST.stack_layers(layer_trees, 1)
+    p: Params = {
+        "embed": L.init_embedding(keys[0], cfg.vocab, cfg.d_model,
+                                  cfg.param_dtype),
+        "blocks": slots,
+        "tail": tail,
+        "ln_f": L.init_rmsnorm(cfg.d_model, cfg.param_dtype),
+        "head": L.init_linear(keys[-1], cfg.d_model, cfg.vocab,
+                              cfg.param_dtype),
+    }
+    return p
+
+
+def _lerp(x: jnp.ndarray, x_prev: jnp.ndarray, mu: jnp.ndarray):
+    return x + (x_prev - x) * mu.astype(x.dtype)
+
+
+def _decay(tm: Params, xw: jnp.ndarray) -> jnp.ndarray:
+    lora = L.linear(tm["w_lora_b"], jnp.tanh(L.linear(tm["w_lora_a"], xw)))
+    wx = tm["w0"].astype(jnp.float32) + lora.astype(jnp.float32)
+    return jnp.exp(-jnp.exp(wx))            # in (0,1), data-dependent
+
+
+def time_mix(tm: Params, cfg: ModelConfig, x: jnp.ndarray,
+             x_prev_last: jnp.ndarray, state):
+    """x: (B,T,D); x_prev_last: (B,D) last token of the previous segment.
+    Returns (out (B,T,D), new shift (B,D), new WKV state)."""
+    from repro.kernels.rwkv_scan import ops as wkv
+    B, T, D = x.shape
+    H, hd = _heads(cfg), cfg.rwkv_head_dim
+    x_prev = jnp.concatenate([x_prev_last[:, None], x[:, :-1]], axis=1)
+    r = L.linear(tm["wr"], _lerp(x, x_prev, tm["mu_r"]))
+    k = L.linear(tm["wk"], _lerp(x, x_prev, tm["mu_k"]))
+    v = L.linear(tm["wv"], _lerp(x, x_prev, tm["mu_v"]))
+    g = L.linear(tm["wg"], _lerp(x, x_prev, tm["mu_g"]))
+    w = _decay(tm, _lerp(x, x_prev, tm["mu_w"]))
+
+    def hsplit(t):
+        return t.reshape(B, T, H, hd)
+
+    y, s_new = wkv.wkv6(hsplit(r), hsplit(k), hsplit(v),
+                        hsplit(w.astype(x.dtype)), tm["u"])
+    y = L.rmsnorm(tm["ln_x"], y)              # per-head normalization
+    y = y.reshape(B, T, D) * jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype)
+    return L.linear(tm["wo"], y), x[:, -1], s_new
+
+
+def channel_mix(cm: Params, x: jnp.ndarray, x_prev_last: jnp.ndarray):
+    x_prev = jnp.concatenate([x_prev_last[:, None], x[:, :-1]], axis=1)
+    k = L.linear(cm["wk"], _lerp(x, x_prev, cm["mu_k"]))
+    k = jnp.square(jax.nn.relu(k.astype(jnp.float32))).astype(x.dtype)
+    r = jax.nn.sigmoid(
+        L.linear(cm["wr"], _lerp(x, x_prev, cm["mu_r"])).astype(jnp.float32))
+    return r.astype(x.dtype) * L.linear(cm["wv"], k), x[:, -1]
+
+
+def forward(cfg: ModelConfig, p: Params, x: jnp.ndarray,
+            remat: bool = False) -> jnp.ndarray:
+    h = p["embed"]["table"][x]
+    B = h.shape[0]
+    zero = jnp.zeros((B, cfg.d_model), h.dtype)
+
+    def body(h, blk, u, g):
+        a, _, _ = time_mix(blk["tm"], cfg, L.rmsnorm(blk["ln1"], h),
+                           zero, None)
+        h = h + a
+        m, _ = channel_mix(blk["cm"], L.rmsnorm(blk["ln2"], h), zero)
+        return h + m
+
+    h = ST.scan_blocks(h, p["blocks"], p["tail"], body, 1,
+                       cfg.n_layers, remat)
+    h = L.rmsnorm(p["ln_f"], h)
+    return L.linear(p["head"], h).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Serving: recurrent state instead of a KV cache (O(1) in sequence length)
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int) -> Params:
+    H, hd = _heads(cfg), cfg.rwkv_head_dim
+    dt = cfg.param_dtype
+    G = cfg.n_layers
+    entry = {
+        "wkv": jnp.zeros((G, batch, H, hd, hd), jnp.float32),
+        "tm_x": jnp.zeros((G, batch, cfg.d_model), dt),
+        "cm_x": jnp.zeros((G, batch, cfg.d_model), dt),
+    }
+    return {"slots": [entry], "tail": [],
+            "pos": jnp.zeros((batch,), jnp.int32)}
+
+
+def _step_block(blk: Params, cfg: ModelConfig, h: jnp.ndarray, lc: Params):
+    """Single-token block step; h: (B,1,D)."""
+    from repro.kernels.rwkv_scan.ref import wkv6_ref
+    B = h.shape[0]
+    H, hd = _heads(cfg), cfg.rwkv_head_dim
+    xn = L.rmsnorm(blk["ln1"], h)
+    tm = blk["tm"]
+    x_prev = lc["tm_x"][:, None]
+    r = L.linear(tm["wr"], _lerp(xn, x_prev, tm["mu_r"]))
+    k = L.linear(tm["wk"], _lerp(xn, x_prev, tm["mu_k"]))
+    v = L.linear(tm["wv"], _lerp(xn, x_prev, tm["mu_v"]))
+    g = L.linear(tm["wg"], _lerp(xn, x_prev, tm["mu_g"]))
+    w = _decay(tm, _lerp(xn, x_prev, tm["mu_w"]))
+
+    rt = r.reshape(B, H, hd).astype(jnp.float32)
+    kt = k.reshape(B, H, hd).astype(jnp.float32)
+    vt = v.reshape(B, H, hd).astype(jnp.float32)
+    wt = w.reshape(B, H, hd)
+    u = tm["u"].astype(jnp.float32)
+    S = lc["wkv"]
+    y = jnp.einsum("bhi,bhij->bhj", rt, S) \
+        + jnp.einsum("bhi,bhi,bhj->bhj", rt, u[None] * kt, vt)
+    S_new = wt[..., None] * S + kt[..., :, None] * vt[..., None, :]
+    y = L.rmsnorm(tm["ln_x"], y.astype(h.dtype))
+    y = y.reshape(B, 1, cfg.d_model) \
+        * jax.nn.silu(g.astype(jnp.float32)).astype(h.dtype)
+    a = L.linear(tm["wo"], y)
+    h = h + a
+    new_tm_x = xn[:, -1]
+
+    xn2 = L.rmsnorm(blk["ln2"], h)
+    m, new_cm_x = channel_mix(blk["cm"], xn2, lc["cm_x"])
+    h = h + m
+    return h, {"wkv": S_new, "tm_x": new_tm_x, "cm_x": new_cm_x}
+
+
+def decode_step(cfg: ModelConfig, p: Params, cache: Params,
+                token: jnp.ndarray) -> Tuple[jnp.ndarray, Params]:
+    h = p["embed"]["table"][token[:, None]]
+
+    def body(h, blk, lc, u):
+        return _step_block(blk, cfg, h, lc)
+
+    h, new_slots, new_tail = ST.scan_blocks_cached(
+        h, p["blocks"], p["tail"], cache["slots"], cache["tail"],
+        body, 1, cfg.n_layers)
+    h = L.rmsnorm(p["ln_f"], h)
+    logits = L.linear(p["head"], h)[:, 0].astype(jnp.float32)
+    return logits, {"slots": new_slots, "tail": new_tail,
+                    "pos": cache["pos"] + 1}
+
+
+def prefill(cfg: ModelConfig, p: Params, x: jnp.ndarray, max_seq: int
+            ) -> Tuple[jnp.ndarray, Params]:
+    h = p["embed"]["table"][x]
+    B = h.shape[0]
+    zero = jnp.zeros((B, cfg.d_model), h.dtype)
+
+    def body(h, blk, u):
+        xn = L.rmsnorm(blk["ln1"], h)
+        a, tm_x, s = time_mix(blk["tm"], cfg, xn, zero, None)
+        h = h + a
+        xn2 = L.rmsnorm(blk["ln2"], h)
+        m, cm_x = channel_mix(blk["cm"], xn2, zero)
+        h = h + m
+        return h, {"wkv": s, "tm_x": tm_x, "cm_x": cm_x}
+
+    h, slots, tail = ST.scan_blocks_collect(
+        h, p["blocks"], p["tail"], body, 1, cfg.n_layers)
+    h = L.rmsnorm(p["ln_f"], h)
+    logits = L.linear(p["head"], h[:, -1]).astype(jnp.float32)
+    return logits, {"slots": slots, "tail": tail,
+                    "pos": jnp.full((B,), x.shape[1], jnp.int32)}

@@ -1,0 +1,156 @@
+"""Scan-over-layers machinery (the production lowering).
+
+A python loop over N transformer blocks lowers N copies of the block HLO —
+compile time scales with depth, and every flash-attention chunk loop gets
+its own while-loop temp buffers (no cross-loop reuse in buffer assignment,
+which multiplied the per-layer working set by n_layers in the dry run).
+Stacking the per-layer params with a leading ``G`` dim and scanning one
+repeating unit over them fixes both: one while body, one set of temps,
+O(1) HLO size in depth.
+
+Layers repeat with period ``unit`` (1 for uniform stacks, 6 for gemma3's
+5-local:1-global, 3 for recurrentgemma's rec/rec/attn); layer
+``i = g*unit + u`` lands in slot ``u`` at position ``g``.  A non-divisible
+remainder (recurrentgemma's 26 = 8*3 + 2) stays as unstacked ``tail``
+layers applied after the scan.
+
+Param layout:  ``{"blocks": [slot_0_stacked, ...], "tail": [layer, ...]}``
+— slot trees have leading dim G on every leaf; path strings stay
+``blocks/<u>/...`` so the meshplan rules apply unchanged (tree_shardings
+prepends the replicated G axis).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+# When True, scan_blocks* unroll the layer loop into straight-line HLO.
+# Used ONLY by the dry-run's while-body cost probes: XLA cost_analysis
+# counts a while body once regardless of trip count, so the probe lowers
+# small unrolled variants to measure the true per-layer cost delta.
+FORCE_UNROLL = False
+
+
+def stack_layers(layer_trees: Sequence[Any], unit: int
+                 ) -> Tuple[List[Any], List[Any]]:
+    """Regroup per-layer param trees into (slots, tail)."""
+    n = len(layer_trees)
+    G = n // unit
+    slots = []
+    for u in range(unit):
+        group = [layer_trees[g * unit + u] for g in range(G)]
+        slots.append(jax.tree.map(lambda *xs: jnp.stack(xs), *group))
+    tail = list(layer_trees[G * unit:])
+    return slots, tail
+
+
+def unstack_slot(slot: Any, g: int) -> Any:
+    return jax.tree.map(lambda x: x[g], slot)
+
+
+def num_groups(n_layers: int, unit: int) -> int:
+    return n_layers // unit
+
+
+def scan_blocks(h: jnp.ndarray, slots: List[Any], tail: List[Any],
+                body: Callable[[jnp.ndarray, Any, int, int], jnp.ndarray],
+                unit: int, n_layers: int, remat: bool) -> jnp.ndarray:
+    """h -> h through all layers.  ``body(h, blk, u, g)`` applies one
+    layer; inside the scan ``g`` is symbolic (pass -1) — body must not
+    branch on it (kind differences live in the slot index ``u``)."""
+    G = n_layers // unit
+
+    def unit_body(h, slot_slice):
+        for u in range(unit):
+            h = body(h, slot_slice[u], u, -1)
+        return h, None
+
+    fn = jax.checkpoint(unit_body) if remat else unit_body
+    if G > 0:
+        if FORCE_UNROLL:
+            for g in range(G):
+                h, _ = fn(h, [unstack_slot(s, g) for s in slots])
+        else:
+            h, _ = jax.lax.scan(fn, h, slots)
+    for j, blk in enumerate(tail):
+        h = body(h, blk, (G * unit + j) % unit if unit else 0, G * unit + j)
+    return h
+
+
+def scan_blocks_collect(h: jnp.ndarray, slots: List[Any], tail: List[Any],
+                        body: Callable, unit: int, n_layers: int
+                        ) -> Tuple[jnp.ndarray, List[Any], List[Any]]:
+    """Like scan_blocks but the body also *emits* a per-layer pytree (the
+    KV cache built during prefill): body(h, blk, u) -> (h, emitted).
+    Returns (h, [stacked emissions per slot], [tail emissions])."""
+    G = n_layers // unit
+
+    def unit_body(h, slot_slice):
+        outs = []
+        for u in range(unit):
+            h, e = body(h, slot_slice[u], u)
+            outs.append(e)
+        return h, tuple(outs)
+
+    emitted_slots: List[Any] = []
+    if G > 0:
+        if FORCE_UNROLL:
+            per_g = []
+            for g in range(G):
+                h, e = unit_body(h, [unstack_slot(s, g) for s in slots])
+                per_g.append(e)
+            emitted_slots = [
+                jax.tree.map(lambda *xs: jnp.stack(xs),
+                             *[per_g[g][u] for g in range(G)])
+                for u in range(unit)]
+        else:
+            h, emitted = jax.lax.scan(unit_body, h, slots)
+            emitted_slots = list(emitted)
+    emitted_tail = []
+    for j, blk in enumerate(tail):
+        h, e = body(h, blk, (G * unit + j) % unit if unit else 0)
+        emitted_tail.append(e)
+    return h, emitted_slots, emitted_tail
+
+
+def scan_blocks_cached(h: jnp.ndarray, slots: List[Any], tail: List[Any],
+                       cache_slots: List[Any], cache_tail: List[Any],
+                       body: Callable, unit: int, n_layers: int
+                       ) -> Tuple[jnp.ndarray, List[Any], List[Any]]:
+    """Decode-step traversal: body(h, blk, cache_entry, u) ->
+    (h, new_cache_entry); caches are stacked like the params."""
+    G = n_layers // unit
+
+    def unit_body(h, xs):
+        slot_slice, cache_slice = xs
+        new_caches = []
+        for u in range(unit):
+            h, nc = body(h, slot_slice[u], cache_slice[u], u)
+            new_caches.append(nc)
+        return h, tuple(new_caches)
+
+    new_slots: List[Any] = []
+    if G > 0:
+        if FORCE_UNROLL:
+            per_g = []
+            for g in range(G):
+                h, nc = unit_body(
+                    h, ([unstack_slot(s, g) for s in slots],
+                        [unstack_slot(c, g) for c in cache_slots]))
+                per_g.append(nc)
+            new_slots = [
+                jax.tree.map(lambda *xs: jnp.stack(xs),
+                             *[per_g[g][u] for g in range(G)])
+                for u in range(unit)]
+        else:
+            h, new = jax.lax.scan(unit_body, h, (slots, cache_slots))
+            new_slots = list(new)
+    new_tail = []
+    for j, (blk, ce) in enumerate(zip(tail, cache_tail)):
+        h, nc = body(h, blk, ce, (G * unit + j) % unit if unit else 0)
+        new_tail.append(nc)
+    return h, new_slots, new_tail

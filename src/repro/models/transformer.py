@@ -1,0 +1,203 @@
+"""Decoder / encoder transformer family (scan-over-layers lowering).
+
+Covers the dense architectures (internlm2, qwen3-8b/32b with qk-norm,
+gemma3 with 5:1 local:global interleaving), the VLM backbone
+(llava-next-mistral-7b — the anyres frontend is a stub that feeds
+precomputed patch embeddings), and the audio encoder (hubert-xlarge,
+bidirectional, no decode path).
+
+All weights are plain pytrees.  Layers are stacked per repeating slot and
+traversed with lax.scan (models.stacking): one while body regardless of
+depth — O(1) HLO size and shared flash-attention temp buffers.  ``forward``
+is the training path, ``prefill``/``decode_step`` the serving paths over a
+stacked KV-cache pytree (ring buffers of size ``window`` on local layers).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import stacking as ST
+from repro.models.config import ModelConfig
+
+Params = Dict[str, Any]
+
+
+def _attn_cfg(cfg: ModelConfig, u: int) -> L.AttnConfig:
+    kind = cfg.layer_kind(u)
+    window = cfg.window if kind == "local" else None
+    return L.AttnConfig(d_model=cfg.d_model, n_heads=cfg.n_heads,
+                        n_kv=cfg.n_kv, head_dim=cfg.head_dim_,
+                        qk_norm=cfg.qk_norm, window=window,
+                        rope_theta=cfg.rope_theta, causal=cfg.causal)
+
+
+def _init_block(key, cfg: ModelConfig, i: int) -> Params:
+    dt = cfg.param_dtype
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": L.init_rmsnorm(cfg.d_model, dt),
+        "attn": L.init_attention(k1, _attn_cfg(cfg, i), dt),
+        "ln2": L.init_rmsnorm(cfg.d_model, dt),
+        "mlp": L.init_swiglu(k2, cfg.d_model, cfg.d_ff, dt),
+    }
+
+
+def init(key, cfg: ModelConfig) -> Params:
+    dt = cfg.param_dtype
+    keys = jax.random.split(key, cfg.n_layers + 3)
+    p: Params = {}
+    if cfg.input_kind == "tokens":
+        p["embed"] = L.init_embedding(keys[0], cfg.vocab, cfg.d_model, dt)
+    layer_trees = [_init_block(keys[i + 1], cfg, i)
+                   for i in range(cfg.n_layers)]
+    slots, tail = ST.stack_layers(layer_trees, cfg.unit)
+    p["blocks"] = slots
+    p["tail"] = tail
+    p["ln_f"] = L.init_rmsnorm(cfg.d_model, dt)
+    p["head"] = L.init_linear(keys[-1], cfg.d_model, cfg.vocab, dt)
+    return p
+
+
+def _embed_in(cfg: ModelConfig, p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    if cfg.input_kind == "tokens":
+        return p["embed"]["table"][x]
+    return x.astype(cfg.param_dtype)      # precomputed frame/patch embeds
+
+
+def forward(cfg: ModelConfig, p: Params, x: jnp.ndarray,
+            remat: bool = False) -> jnp.ndarray:
+    """x: (B,S) int tokens or (B,S,D) embeds -> logits (B,S,V)."""
+    h = _embed_in(cfg, p, x)
+    B, S = h.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+    def body(h, blk, u, g):
+        a = L.attention(blk["attn"], _attn_cfg(cfg, u),
+                        L.rmsnorm(blk["ln1"], h), positions)
+        h = h + a
+        return h + L.swiglu(blk["mlp"], L.rmsnorm(blk["ln2"], h))
+
+    h = ST.scan_blocks(h, p["blocks"], p["tail"], body, cfg.unit,
+                       cfg.n_layers, remat)
+    h = L.rmsnorm(p["ln_f"], h)
+    return L.linear(p["head"], h).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Serving: KV-cache prefill / decode
+# ---------------------------------------------------------------------------
+
+
+def cache_len(cfg: ModelConfig, u: int, max_seq: int) -> int:
+    """Local layers only ever need a window-sized cache (the gemma3 / long-
+    context feasibility argument)."""
+    if cfg.layer_kind(u) == "local" and cfg.window:
+        return min(cfg.window, max_seq)
+    return max_seq
+
+
+def _empty_cache_entry(cfg: ModelConfig, u: int, batch: int, max_seq: int):
+    Sl = cache_len(cfg, u, max_seq)
+    dt = cfg.param_dtype
+    return {"k": jnp.zeros((batch, Sl, cfg.n_kv, cfg.head_dim_), dt),
+            "v": jnp.zeros((batch, Sl, cfg.n_kv, cfg.head_dim_), dt)}
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int) -> Params:
+    unit = cfg.unit
+    G = cfg.n_layers // unit
+    slots = []
+    for u in range(unit):
+        e = _empty_cache_entry(cfg, u, batch, max_seq)
+        slots.append(jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (G,) + x.shape), e))
+    tail = [_empty_cache_entry(cfg, (G * unit + j) % unit, batch, max_seq)
+            for j in range(cfg.n_layers - G * unit)]
+    return {"slots": slots, "tail": tail,
+            "pos": jnp.zeros((batch,), jnp.int32)}
+
+
+def _ring(cfg: ModelConfig, u: int, Sl: int) -> bool:
+    return cfg.layer_kind(u) == "local" and bool(cfg.window) \
+        and Sl <= (cfg.window or 0)
+
+
+def decode_step(cfg: ModelConfig, p: Params, cache: Params,
+                token: jnp.ndarray) -> Tuple[jnp.ndarray, Params]:
+    """token: (B,) int32 — or (B, D) embeds for embeds-input backbones
+    (the VLM frontend embeds generated text tokens itself) — ->
+    (logits (B,V), updated cache)."""
+    pos = cache["pos"]                                   # (B,)
+    if cfg.input_kind == "tokens":
+        h = _embed_in(cfg, p, token[:, None])
+    else:
+        h = token[:, None, :].astype(cfg.param_dtype)    # (B,1,D)
+
+    def body(h, blk, lc, u):
+        acfg = _attn_cfg(cfg, u)
+        Sl = lc["k"].shape[1]
+        if _ring(cfg, u, Sl):
+            write_idx = pos % Sl
+            valid = (jnp.arange(Sl)[None, :] <= pos[:, None]) \
+                | (pos[:, None] >= Sl)
+            acfg = dataclasses.replace(acfg, window=None)
+        else:
+            write_idx, valid = pos, None
+        a, ck, cv = L.attention_decode(
+            blk["attn"], acfg, L.rmsnorm(blk["ln1"], h),
+            lc["k"], lc["v"], pos, write_idx=write_idx, valid=valid)
+        h = h + a
+        h = h + L.swiglu(blk["mlp"], L.rmsnorm(blk["ln2"], h))
+        return h, {"k": ck, "v": cv}
+
+    h, new_slots, new_tail = ST.scan_blocks_cached(
+        h, p["blocks"], p["tail"], cache["slots"], cache["tail"],
+        body, cfg.unit, cfg.n_layers)
+    h = L.rmsnorm(p["ln_f"], h)
+    logits = L.linear(p["head"], h)[:, 0].astype(jnp.float32)
+    return logits, {"slots": new_slots, "tail": new_tail, "pos": pos + 1}
+
+
+def prefill(cfg: ModelConfig, p: Params, x: jnp.ndarray, max_seq: int
+            ) -> Tuple[jnp.ndarray, Params]:
+    """Run the full prompt, materializing the KV cache: returns (logits of
+    the last position (B,V), cache ready for decode)."""
+    from repro.kernels.flash_attention import ops as fa
+    B, S = x.shape[:2]
+    h = _embed_in(cfg, p, x)
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+    def body(h, blk, u):
+        acfg = _attn_cfg(cfg, u)
+        xn = L.rmsnorm(blk["ln1"], h)
+        q, k, v = L.attention_qkv(blk["attn"], acfg, xn, positions)
+        ctx = fa.flash_attention(q, k, v, causal=acfg.causal,
+                                 window=acfg.window)
+        h = h + L.linear(blk["attn"]["wo"], ctx.reshape(B, S, -1))
+        h = h + L.swiglu(blk["mlp"], L.rmsnorm(blk["ln2"], h))
+        Sl = cache_len(cfg, u, max_seq)
+        take = min(S, Sl)
+        shift = (S - take) % Sl       # ring slot = absolute pos % Sl
+        ck = jnp.zeros((B, Sl, cfg.n_kv, cfg.head_dim_), k.dtype)
+        cv = jnp.zeros_like(ck)
+        ck = jax.lax.dynamic_update_slice(ck, k[:, S - take:],
+                                          (0, 0, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v[:, S - take:],
+                                          (0, 0, 0, 0))
+        if shift:
+            ck = jnp.roll(ck, shift, axis=1)
+            cv = jnp.roll(cv, shift, axis=1)
+        return h, {"k": ck, "v": cv}
+
+    h, slots, tail = ST.scan_blocks_collect(
+        h, p["blocks"], p["tail"], body, cfg.unit, cfg.n_layers)
+    h = L.rmsnorm(p["ln_f"], h)
+    logits = L.linear(p["head"], h[:, -1]).astype(jnp.float32)
+    return logits, {"slots": slots, "tail": tail,
+                    "pos": jnp.full((B,), S, jnp.int32)}

@@ -1,0 +1,137 @@
+"""AdamW on plain pytrees, with float32 moments over (possibly bf16)
+params, cosine schedule with warmup, and ZeRO-1 moment sharding helpers."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    max_grad_norm: float = 1.0
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    m: Any
+    v: Any
+
+
+def init(params) -> AdamWState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return AdamWState(step=jnp.zeros((), jnp.int32), m=zeros,
+                      v=jax.tree.map(jnp.copy, zeros))
+
+
+def schedule(cfg: AdamWConfig, step: jnp.ndarray) -> jnp.ndarray:
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                    0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * (0.1 + 0.9 * cos)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    sq = sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+             for x in jax.tree.leaves(tree))
+    return jnp.sqrt(sq)
+
+
+def update(cfg: AdamWConfig, state: AdamWState, grads, params
+           ) -> Tuple[Any, AdamWState, Dict[str, jnp.ndarray]]:
+    step = state.step + 1
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.max_grad_norm / (gnorm + 1e-9))
+    lr = schedule(cfg, step)
+    b1, b2 = cfg.beta1, cfg.beta2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * clip
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        mhat = m / bc1
+        vhat = v / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if p.ndim >= 2:                       # decoupled decay on matrices
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+    out = jax.tree.map(upd, params, grads, state.m, state.v)
+    new_params = jax.tree.map(lambda t: t[0], out,
+                              is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    return new_params, AdamWState(step, new_m, new_v), \
+        {"grad_norm": gnorm, "lr": lr}
+
+
+def zero_specs(plan, mesh, params):
+    """PartitionSpec pytree for ZeRO-sharded per-param fp32 buffers (Adam
+    moments, microbatch grad accumulators): the param's plan spec plus the
+    data axis on the largest unsharded divisible dim."""
+    from jax.sharding import PartitionSpec as P
+    from repro.core.meshplan import _path_str
+    axes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dp_axis = "data" if "data" in axes else None
+
+    def spec(path, leaf):
+        ps = _path_str(path)
+        base = plan.spec_for(ps, leaf.ndim)
+        if dp_axis is None or leaf.ndim == 0:
+            return P(*base)
+        out = list(base) + [None] * (leaf.ndim - len(base))
+        for i in sorted(range(leaf.ndim), key=lambda i: -leaf.shape[i]):
+            if out[i] is None and leaf.shape[i] % axes[dp_axis] == 0 \
+                    and leaf.shape[i] >= axes[dp_axis]:
+                out[i] = dp_axis
+                break
+        return P(*out)
+
+    return jax.tree_util.tree_map_with_path(spec, params)
+
+
+def zero1_shardings(plan, mesh, params, opt_state: AdamWState):
+    """ZeRO-1: Adam moments take the param's spec *plus* the data axis on
+    the largest currently-unsharded dimension when divisible — the fp32
+    moments are the dominant optimizer memory and need not be replicated
+    across data-parallel replicas."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.core.meshplan import _path_str
+    axes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dp_axis = "data" if "data" in axes else None
+
+    def moment_spec(path, leaf):
+        ps = _path_str(path)
+        base = plan.spec_for(ps, leaf.ndim)
+        if dp_axis is None or leaf.ndim == 0:
+            return NamedSharding(mesh, base)
+        spec = list(base) + [None] * (leaf.ndim - len(base))
+        # largest unsharded dim divisible by the data axis
+        cand = sorted(range(leaf.ndim), key=lambda i: -leaf.shape[i])
+        for i in cand:
+            if spec[i] is None and leaf.shape[i] % axes[dp_axis] == 0 \
+                    and leaf.shape[i] >= axes[dp_axis]:
+                spec[i] = dp_axis
+                break
+        return NamedSharding(mesh, P(*spec))
+
+    m_sh = jax.tree_util.tree_map_with_path(moment_spec, opt_state.m)
+    v_sh = jax.tree_util.tree_map_with_path(moment_spec, opt_state.v)
+    step_sh = NamedSharding(mesh, P())
+    return AdamWState(step=step_sh, m=m_sh, v=v_sh)

@@ -1,0 +1,105 @@
+"""Serving engine: batched prefill + decode with continuous batching.
+
+``make_serve_steps`` returns the two jit-able pure functions the launcher
+lowers (prefill_step, decode_step); :class:`Engine` wraps them with a
+request queue, slot allocation and greedy/temperature sampling for the
+runnable examples.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.api import get_model
+from repro.models.config import ModelConfig
+
+
+def make_serve_steps(cfg: ModelConfig, max_seq: int
+                     ) -> Tuple[Callable, Callable]:
+    model = get_model(cfg)
+
+    def prefill_step(params, tokens):
+        return model.prefill(cfg, params, tokens, max_seq)
+
+    def decode_step(params, cache, token):
+        return model.decode_step(cfg, params, cache, token)
+
+    return prefill_step, decode_step
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: List[int]
+    max_new: int
+    out: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class Engine:
+    """Minimal continuous-batching engine over the pure step functions.
+
+    All sequences in a batch prefill together (padded), then decode in
+    lock-step; finished sequences keep decoding into a scratch slot until
+    the batch drains (the standard static-batch simplification — slot reuse
+    across batches is the continuous part)."""
+
+    def __init__(self, cfg: ModelConfig, params, max_seq: int = 512,
+                 eos: int = 0, temperature: float = 0.0, seed: int = 0):
+        self.cfg = cfg
+        self.params = params
+        self.max_seq = max_seq
+        self.eos = eos
+        self.temperature = temperature
+        self.key = jax.random.PRNGKey(seed)
+        prefill, decode = make_serve_steps(cfg, max_seq)
+        self._prefill = jax.jit(prefill)
+        self._decode = jax.jit(decode)
+        self.queue: List[Request] = []
+        self._next_rid = 0
+
+    def submit(self, prompt: List[int], max_new: int = 32) -> int:
+        rid = self._next_rid
+        self._next_rid += 1
+        self.queue.append(Request(rid, list(prompt), max_new))
+        return rid
+
+    def _sample(self, logits: jnp.ndarray) -> jnp.ndarray:
+        if self.temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        self.key, sub = jax.random.split(self.key)
+        return jax.random.categorical(
+            sub, logits / self.temperature, axis=-1).astype(jnp.int32)
+
+    def run(self, batch_size: int = 4) -> Dict[int, List[int]]:
+        """Drain the queue; returns {rid: generated tokens}."""
+        results: Dict[int, List[int]] = {}
+        while self.queue:
+            batch = self.queue[:batch_size]
+            self.queue = self.queue[batch_size:]
+            plen = max(len(r.prompt) for r in batch)
+            toks = np.zeros((len(batch), plen), np.int32)
+            for i, r in enumerate(batch):
+                toks[i, plen - len(r.prompt):] = r.prompt   # left-pad
+            logits, cache = self._prefill(self.params, jnp.asarray(toks))
+            tok = self._sample(logits)
+            steps = max(r.max_new for r in batch)
+            for _ in range(steps):
+                for i, r in enumerate(batch):
+                    if not r.done:
+                        t = int(tok[i])
+                        r.out.append(t)
+                        if t == self.eos or len(r.out) >= r.max_new:
+                            r.done = True
+                if all(r.done for r in batch):
+                    break
+                logits, cache = self._decode(self.params, cache, tok)
+                tok = self._sample(logits)
+            for r in batch:
+                results[r.rid] = r.out
+        return results

@@ -1,0 +1,4 @@
+from repro.soc.device import Device, MemoryLevel, SoC
+from repro.soc.carfield import carfield_soc
+
+__all__ = ["Device", "MemoryLevel", "SoC", "carfield_soc"]

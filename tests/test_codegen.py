@@ -1,0 +1,38 @@
+"""Code generation: multi-ISA artifact structure and schedule export."""
+
+import json
+import os
+
+from repro.core.api import compile_model
+from repro.models import edge
+from repro.soc.carfield import carfield_patterns, carfield_soc
+
+
+def test_artifact_emission(tmp_path):
+    soc = carfield_soc()
+    cm = compile_model(edge.autoencoder(), soc, carfield_patterns(),
+                       mode="matcha", time_budget_s=2.0)
+    files = cm.emit(str(tmp_path))
+    # one host runtime + one dispatch loop & kernel file per accelerator
+    assert "host_main.c" in files
+    for d in soc.accelerators:
+        assert f"device_{d.name}.c" in files
+        assert f"kernels_{d.name}.c" in files
+    sched = json.loads(files["schedule.json"])
+    assert sched["makespan_cycles"] == cm.plan.makespan
+    kernels = [n for n in sched["nodes"] if n["kind"] == "kernel"]
+    assert len(kernels) == len(cm.tiled.supernodes)
+    mem = json.loads(files["memory_map.json"])
+    assert mem["l2_capacity"] == soc.l2.size
+    for rel in files:
+        assert os.path.exists(tmp_path / rel)
+
+
+def test_host_runtime_mentions_every_async_dispatch(tmp_path):
+    soc = carfield_soc()
+    cm = compile_model(edge.resnet(), soc, carfield_patterns(),
+                       mode="matcha", time_budget_s=2.0)
+    files = cm.emit(str(tmp_path))
+    n_accel = sum(1 for s in cm.tiled.supernodes
+                  if s.device != soc.host.name)
+    assert files["host_main.c"].count("plat_mailbox_post") == n_accel

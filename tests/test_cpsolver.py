@@ -1,0 +1,64 @@
+"""CP solver: branch & bound vs exhaustive search (property-based)."""
+
+import hypothesis.strategies as st
+import pytest
+from hypothesis import given, settings
+
+from repro.core import cpsolver
+
+
+def _random_model(draw):
+    n = draw(st.integers(2, 4))
+    m = cpsolver.CpModel()
+    for i in range(n):
+        m.new_int(0, draw(st.integers(1, 5)))
+    # a couple of linear constraints
+    for _ in range(draw(st.integers(1, 3))):
+        coeffs = {i: draw(st.integers(-3, 3)) for i in range(n)}
+        const = -draw(st.integers(0, 12))
+        m.add_le({i: float(c) for i, c in coeffs.items()}, float(const))
+    # one equality: sum of a subset equals a reachable value
+    idx = list(range(n))[: draw(st.integers(1, n))]
+    target = draw(st.integers(0, sum(m._hi[i] for i in idx)))
+    m.add_eq({i: 1.0 for i in idx}, -float(target))
+    # two makespan loads
+    for _ in range(2):
+        m.add_load({i: float(draw(st.integers(0, 4))) for i in range(n)},
+                   float(draw(st.integers(0, 3))))
+    return m
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.data())
+def test_bnb_matches_bruteforce(data):
+    m = _random_model(data.draw)
+    try:
+        ref = cpsolver.brute_force(m)
+    except cpsolver.Infeasible:
+        with pytest.raises(cpsolver.Infeasible):
+            m.solve(time_budget_s=5.0)
+        return
+    sol = m.solve(time_budget_s=5.0)
+    assert sol.optimal
+    assert abs(sol.objective - ref.objective) < 1e-6
+    assert m._feasible(sol.values)
+
+
+def test_hint_feasible_is_used_as_incumbent():
+    m = cpsolver.CpModel()
+    a = m.new_int(0, 10)
+    b = m.new_int(0, 10)
+    m.add_eq({a: 1.0, b: 1.0}, -10.0)
+    m.add_load({a: 2.0})
+    m.add_load({b: 3.0})
+    sol = m.solve(hint=[6, 4], time_budget_s=5.0)
+    assert sol.objective == 12.0      # optimal: a=6,b=4 -> max(12, 12)
+    assert m._feasible(sol.values)
+
+
+def test_infeasible_raises():
+    m = cpsolver.CpModel()
+    a = m.new_int(0, 3)
+    m.add_ge({a: 1.0}, -5.0)          # a + (-5) >= 0, i.e. a >= 5
+    with pytest.raises(cpsolver.Infeasible):
+        m.solve(time_budget_s=2.0)

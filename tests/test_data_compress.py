@@ -1,0 +1,98 @@
+"""Data pipeline determinism/resume/sharding + gradient compression."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.data.pipeline import DataConfig, Pipeline
+from repro.optim import compress
+from repro.train.step import IGNORE
+
+
+def _cfg(**kw):
+    base = dict(vocab=1000, seq_len=64, global_batch=4, seed=7)
+    base.update(kw)
+    return DataConfig(**base)
+
+
+def test_determinism():
+    a = next(Pipeline(_cfg()))
+    b = next(Pipeline(_cfg()))
+    np.testing.assert_array_equal(a["x"], b["x"])
+    np.testing.assert_array_equal(a["labels"], b["labels"])
+
+
+def test_resume_exact():
+    p = Pipeline(_cfg())
+    for _ in range(3):
+        next(p)
+    state = p.state()
+    want = next(p)
+    q = Pipeline.restore(_cfg(), state)
+    got = next(q)
+    np.testing.assert_array_equal(got["x"], want["x"])
+
+
+def test_host_sharding_disjoint_and_complete():
+    full = next(Pipeline(_cfg(num_hosts=1, host_index=0)))
+    parts = [next(Pipeline(_cfg(num_hosts=2, host_index=i)))
+             for i in range(2)]
+    stacked = np.concatenate([p["x"] for p in parts], axis=0)
+    np.testing.assert_array_equal(stacked, full["x"])
+
+
+def test_label_shift_and_boundaries():
+    p = Pipeline(_cfg())
+    saw_boundary = False
+    for _ in range(6):
+        b = next(p)
+        x, y = b["x"], b["labels"]
+        # next-token property wherever no document boundary intervenes
+        agree = (y[:, :-1] == x[:, 1:]) | (y[:, :-1] == IGNORE)
+        assert agree.mean() > 0.99
+        saw_boundary |= bool((y == IGNORE).sum() >= 1)
+    assert saw_boundary                   # boundaries do get masked
+
+
+def test_embed_stub_mode():
+    b = next(Pipeline(_cfg(embed_dim=32)))
+    assert b["x"].shape == (4, 64, 32)
+    assert b["labels"].shape == (4, 64)
+
+
+# ---------------------------------------------------------------- compress
+def test_quantize_roundtrip_error_bounded():
+    x = jax.random.normal(jax.random.PRNGKey(0), (128,))
+    q, s = compress.quantize(x)
+    err = jnp.max(jnp.abs(compress.dequantize(q, s) - x))
+    assert float(err) <= float(s) / 2 + 1e-6
+
+
+def test_compressed_psum_single_device_exact_with_feedback():
+    mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+    g = {"w": jax.random.normal(jax.random.PRNGKey(1), (32, 8))}
+    e = compress.init_error(g)
+
+    @jax.jit
+    def run(g, e):
+        from jax.experimental.shard_map import shard_map
+        f = shard_map(
+            lambda gg, ee: compress.compressed_psum(gg, ee, "data"),
+            mesh=mesh, in_specs=(P(), P()), out_specs=(P(), P()))
+        return f(g, e)
+
+    avg, e2 = run(g, e)
+    # single replica: avg = dequant(quant(g)); error feedback holds residual
+    resid = g["w"].astype(jnp.float32) - avg["w"].astype(jnp.float32)
+    np.testing.assert_allclose(np.asarray(e2["w"]), np.asarray(resid),
+                               atol=1e-6)
+    # error feedback property: avg2 = dequant(quant(g + e)) ~ 2g - avg, so
+    # the running mean of the two rounds recovers g to quantization scale
+    avg2, _ = run(g, e2)
+    scale = float(jnp.max(jnp.abs(g["w"]))) / 127.0
+    two_step = (np.asarray(avg["w"], np.float32)
+                + np.asarray(avg2["w"], np.float32)) / 2
+    np.testing.assert_allclose(two_step, np.asarray(g["w"], np.float32),
+                               atol=2 * scale)

@@ -1,0 +1,42 @@
+"""Integration: the multi-pod dry-run entrypoint lowers + compiles a cell
+end-to-end in a fresh subprocess (it needs 512 virtual devices, which must
+not leak into this test process)."""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+@pytest.mark.parametrize("arch,shape", [
+    ("internlm2-1.8b", "decode_32k"),
+    ("rwkv6-3b", "long_500k"),
+])
+def test_dryrun_cell_subprocess(arch, shape):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun",
+         "--arch", arch, "--shape", shape, "--mesh", "single",
+         "--out", os.path.join(ROOT, "artifacts", "dryrun_test")],
+        cwd=ROOT, env=env, capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, out.stdout[-2000:] + out.stderr[-2000:]
+    assert "0 FAIL" in out.stdout
+
+
+def test_dryrun_skip_rules_subprocess():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun",
+         "--arch", "hubert-xlarge", "--shape", "decode_32k",
+         "--mesh", "single",
+         "--out", os.path.join(ROOT, "artifacts", "dryrun_test")],
+        cwd=ROOT, env=env, capture_output=True, text=True, timeout=300)
+    assert out.returncode == 0
+    assert "SKIP" in out.stdout

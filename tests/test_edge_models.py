@@ -1,0 +1,34 @@
+"""Edge model graphs: MACs/params land on the paper's Table-2 figures."""
+
+import pytest
+
+from repro.models import edge
+
+# paper figures (MACs, params)
+PAPER = {
+    "autoencoder": (0.27e6, 268e3),
+    "ds_cnn": (2.8e6, 22.6e3),
+    "mobilenet": (7.9e6, 210e3),
+    "resnet": (12.8e6, 78e3),
+}
+
+
+@pytest.mark.parametrize("name", list(PAPER))
+def test_macs_params_near_paper(name):
+    g = edge.MLPERF_TINY[name]()
+    macs, params = PAPER[name]
+    assert abs(g.total_macs() - macs) / macs < 0.15, g.total_macs()
+    assert abs(g.total_params() - params) / params < 0.12, g.total_params()
+
+
+@pytest.mark.parametrize("name", list(edge.ALL_MODELS))
+def test_graphs_validate(name):
+    g = edge.ALL_MODELS[name]()
+    g.validate()
+    assert g.outputs
+
+
+def test_resnext_has_parallel_branches():
+    g = edge.resnext50_block()
+    merge = g.ops["merge"]
+    assert merge.op_type == "concat" and len(merge.inputs) == 8

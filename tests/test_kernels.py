@@ -1,0 +1,169 @@
+"""Pallas kernel sweeps: shapes x dtypes vs the pure-jnp oracles
+(interpret=True executes the kernel bodies on CPU)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _rand(key, shape, dtype):
+    x = jax.random.normal(key, shape, jnp.float32)
+    return x.astype(dtype)
+
+
+# ---------------------------------------------------------------- attention
+ATTN_SWEEP = [
+    # B, S, H, KV, Dh, causal, window, dtype
+    (2, 256, 4, 2, 64, True, None, jnp.float32),
+    (1, 128, 8, 8, 32, True, 64, jnp.float32),
+    (2, 128, 4, 1, 64, False, None, jnp.float32),
+    (1, 256, 6, 2, 128, True, 96, jnp.float32),
+    (1, 128, 4, 2, 64, True, None, jnp.bfloat16),
+    (1, 512, 2, 2, 64, True, 128, jnp.float32),
+]
+
+
+@pytest.mark.parametrize("B,S,H,KV,Dh,causal,win,dtype", ATTN_SWEEP)
+def test_flash_attention_vs_oracle(B, S, H, KV, Dh, causal, win, dtype):
+    from repro.kernels.flash_attention.flash_attention import \
+        flash_attention_pallas
+    from repro.kernels.flash_attention.ref import attention_ref
+    ks = jax.random.split(KEY, 3)
+    q = _rand(ks[0], (B, S, H, Dh), dtype)
+    k = _rand(ks[1], (B, S, KV, Dh), dtype)
+    v = _rand(ks[2], (B, S, KV, Dh), dtype)
+    want = attention_ref(q, k, v, causal=causal, window=win)
+    got = flash_attention_pallas(q, k, v, causal=causal, window=win,
+                                 block_q=64, block_k=64, interpret=True)
+    tol = 5e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=tol, rtol=tol)
+
+
+def test_chunked_equals_exact():
+    from repro.kernels.flash_attention.ref import (attention_chunked,
+                                                   attention_ref)
+    ks = jax.random.split(KEY, 3)
+    q = _rand(ks[0], (2, 256, 4, 32), jnp.float32)
+    k = _rand(ks[1], (2, 256, 2, 32), jnp.float32)
+    v = _rand(ks[2], (2, 256, 2, 32), jnp.float32)
+    for causal, win in [(True, None), (True, 64), (False, None)]:
+        np.testing.assert_allclose(
+            np.asarray(attention_chunked(q, k, v, causal, win, block_k=64)),
+            np.asarray(attention_ref(q, k, v, causal, win)),
+            atol=2e-5, rtol=2e-5)
+
+
+# ---------------------------------------------------------------- matmul
+MM_SWEEP = [
+    (128, 128, 128, jnp.float32, 64, 64, 64),
+    (256, 384, 128, jnp.float32, 128, 128, 128),
+    (64, 64, 256, jnp.bfloat16, 32, 32, 64),
+    (512, 128, 64, jnp.float32, 128, 64, 64),
+]
+
+
+@pytest.mark.parametrize("M,N,K,dtype,bm,bn,bk", MM_SWEEP)
+def test_matmul_vs_oracle(M, N, K, dtype, bm, bn, bk):
+    from repro.kernels.matmul.matmul import matmul_pallas
+    from repro.kernels.matmul.ref import matmul_ref
+    ks = jax.random.split(KEY, 2)
+    a = _rand(ks[0], (M, K), dtype)
+    b = _rand(ks[1], (K, N), dtype)
+    got = matmul_pallas(a, b, block_m=bm, block_n=bn, block_k=bk,
+                        interpret=True)
+    want = matmul_ref(a, b)
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=tol * K ** 0.5, rtol=tol)
+
+
+# ---------------------------------------------------------------- rmsnorm
+@pytest.mark.parametrize("shape,dtype", [
+    ((4, 64, 512), jnp.float32),
+    ((2, 128, 256), jnp.bfloat16),
+    ((1, 8, 1024), jnp.float32),
+])
+def test_rmsnorm_vs_oracle(shape, dtype):
+    from repro.kernels.rmsnorm.ref import rmsnorm_ref
+    from repro.kernels.rmsnorm.rmsnorm import rmsnorm_pallas
+    ks = jax.random.split(KEY, 2)
+    x = _rand(ks[0], shape, dtype)
+    g = _rand(ks[1], shape[-1:], dtype)
+    got = rmsnorm_pallas(x, g, interpret=True)
+    want = rmsnorm_ref(x, g)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=tol, rtol=tol)
+
+
+# ---------------------------------------------------------------- wkv6
+@pytest.mark.parametrize("B,T,H,D,chunk", [
+    (2, 128, 2, 32, 32),
+    (1, 64, 4, 16, 16),
+    (1, 96, 1, 64, 32),
+])
+def test_wkv6_vs_scan_oracle(B, T, H, D, chunk):
+    from repro.kernels.rwkv_scan.ref import wkv6_ref
+    from repro.kernels.rwkv_scan.rwkv_scan import wkv6_pallas
+    ks = jax.random.split(KEY, 5)
+    r = _rand(ks[0], (B, T, H, D), jnp.float32)
+    k = _rand(ks[1], (B, T, H, D), jnp.float32)
+    v = _rand(ks[2], (B, T, H, D), jnp.float32)
+    # Finch-style decay w = exp(-exp(x)) stays in (0,1)
+    w = jnp.exp(-jnp.exp(_rand(ks[3], (B, T, H, D), jnp.float32) * 0.5))
+    u = _rand(ks[4], (H, D), jnp.float32) * 0.5
+    y0, s0 = wkv6_ref(r, k, v, w, u)
+    y1, s1 = wkv6_pallas(r, k, v, w, u, chunk=chunk, interpret=True)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y0),
+                               atol=5e-3, rtol=5e-3)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s0),
+                               atol=5e-3, rtol=5e-3)
+
+
+# ---------------------------------------------------------------- rglru
+@pytest.mark.parametrize("B,T,D,chunk,bd", [
+    (2, 256, 384, 64, 128),
+    (1, 128, 64, 32, 64),
+    (3, 64, 96, 64, 32),
+])
+def test_rglru_vs_scan_oracle(B, T, D, chunk, bd):
+    from repro.kernels.rglru_scan.ref import rglru_ref
+    from repro.kernels.rglru_scan.rglru_scan import rglru_pallas
+    ks = jax.random.split(KEY, 2)
+    a = jax.nn.sigmoid(_rand(ks[0], (B, T, D), jnp.float32)) * 0.98
+    b = _rand(ks[1], (B, T, D), jnp.float32) * 0.3
+    h0, hT0 = rglru_ref(a, b)
+    h1, hT1 = rglru_pallas(a, b, chunk=chunk, block_d=bd, interpret=True)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h0),
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(hT1), np.asarray(hT0),
+                               atol=1e-4, rtol=1e-4)
+
+
+# ---------------------------------------------------------------- grouped mm
+@pytest.mark.parametrize("E,C,D,F,dtype", [
+    (4, 128, 256, 128, jnp.float32),
+    (8, 64, 128, 64, jnp.bfloat16),
+    (2, 256, 64, 256, jnp.float32),
+])
+def test_grouped_matmul_vs_oracle(E, C, D, F, dtype):
+    from repro.kernels.grouped_matmul.grouped_matmul import \
+        grouped_matmul_pallas
+    from repro.kernels.grouped_matmul.ref import grouped_matmul_ref
+    ks = jax.random.split(KEY, 2)
+    x = _rand(ks[0], (E, C, D), dtype)
+    w = _rand(ks[1], (E, D, F), dtype)
+    got = grouped_matmul_pallas(x, w, block_c=64, block_f=64, block_d=64,
+                                interpret=True)
+    want = grouped_matmul_ref(x, w)
+    tol = 1e-3 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=tol, rtol=tol)

@@ -1,0 +1,50 @@
+"""Property tests over the rewrite stage: tile segments per op always cover
+[0, T) exactly (the executable form of Eq. 1), across random tile requests
+and modes (hypothesis)."""
+
+import hypothesis.strategies as st
+import pytest
+from hypothesis import given, settings
+
+from repro.core.rewrite import rewrite
+from repro.core.tiling import optimize_tiling
+from repro.models import edge
+from repro.soc.carfield import carfield_patterns, carfield_soc
+
+SOC = carfield_soc()
+PATS = carfield_patterns()
+MODELS = ["autoencoder", "ds_cnn", "resnet50_block"]
+
+
+@settings(max_examples=12, deadline=None)
+@given(model=st.sampled_from(MODELS),
+       tiles=st.sampled_from([2, 4, 8, 16]),
+       mode=st.sampled_from(["match", "matcha"]))
+def test_segments_partition_exactly(model, tiles, mode):
+    g = edge.ALL_MODELS[model]()
+    sol = optimize_tiling(g, SOC, PATS, mode=mode, requested_tiles=tiles,
+                          time_budget_s=1.0)
+    tg = rewrite(g, SOC, sol)
+    assert tg.repairs == 0
+    for op in g.topo_ops():
+        segs = []
+        for sn in tg.supernodes:
+            if op.name in sn.op_names:
+                segs.append((sn.tile_lo, sn.tile_hi))
+        segs.sort()
+        T = sol.tiles_per_op[op.name]
+        covered = []
+        for lo, hi in segs:
+            covered.extend(range(lo, hi))
+        assert sorted(covered) == list(range(T)), (op.name, segs, T)
+
+
+def test_helpers_only_for_partial_row_tiled():
+    g = edge.resnet()
+    sol = optimize_tiling(g, SOC, PATS, mode="matcha", requested_tiles=8,
+                          time_budget_s=2.0)
+    tg = rewrite(g, SOC, sol)
+    names_with_helpers = {h.super_name for h in tg.helpers}
+    for sn in tg.supernodes:
+        if sn.name in names_with_helpers:
+            assert not sn.full

@@ -1,0 +1,28 @@
+"""The compiler's correctness contract: tile-by-tile plan execution in JAX
+matches direct whole-graph evaluation for every benchmark model x mode."""
+
+import pytest
+
+from repro.core.api import compile_model
+from repro.core.runtime import plan_matches_oracle
+from repro.models import edge
+from repro.soc.carfield import carfield_patterns, carfield_soc
+
+SOC = carfield_soc()
+PATS = carfield_patterns()
+
+CASES = [
+    ("autoencoder", "matcha"), ("autoencoder", "match"),
+    ("ds_cnn", "matcha"), ("mobilenet", "matcha"),
+    ("resnet", "matcha"), ("resnet", "matcha_nt"), ("resnet", "tvm"),
+    ("resnet50_block", "matcha"),
+    ("resnext50_block", "matcha"),
+    ("transformer_block", "matcha"),
+]
+
+
+@pytest.mark.parametrize("model,mode", CASES)
+def test_plan_matches_oracle(model, mode):
+    cm = compile_model(edge.ALL_MODELS[model](), SOC, PATS, mode=mode,
+                       time_budget_s=2.0)
+    assert plan_matches_oracle(cm.plan)

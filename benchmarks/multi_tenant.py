@@ -1,0 +1,91 @@
+"""Multi-tenant co-scheduling benchmark (the paper's Fig. 4 utilization
+story generalized from intra-model to inter-model concurrency).
+
+For each model mix, N MLPerf-Tiny models are compiled onto the Carfield
+SoC twice:
+
+  * sequential — each model compiled alone, run back-to-back
+    (sum of single-model makespans), and
+  * co-scheduled — ``compile_multi``: merged execution DAGs under
+    per-device mutual exclusion, shared budgeted L2, double-buffered DMA.
+
+Reported per mix: per-tenant latency (completion time inside the round),
+aggregate throughput (inferences/s across the round), per-device
+utilization, and the co-scheduling speedup.
+
+    PYTHONPATH=src python -m benchmarks.multi_tenant [--fast]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+from repro.core.api import compile_multi
+from repro.core.runtime import multi_plan_matches_oracle
+from repro.models import edge
+from repro.soc.carfield import carfield_patterns, carfield_soc
+
+MIXES = [
+    ("autoencoder", "ds_cnn"),
+    ("autoencoder", "resnet"),
+    ("ds_cnn", "mobilenet"),
+    ("autoencoder", "ds_cnn", "resnet"),
+]
+
+
+def run(mixes=MIXES, check_numerics: bool = True, verbose: bool = True,
+        time_budget_s: float = 2.0):
+    soc = carfield_soc()
+    pats = carfield_patterns()
+    rows = []
+    for mix in mixes:
+        graphs = [edge.ALL_MODELS[m]() for m in mix]
+        mc = compile_multi(graphs, soc, pats, time_budget_s=time_budget_s)
+        if check_numerics:
+            assert multi_plan_matches_oracle(mc.plan)
+        co_ms = mc.runtime_ms
+        seq_ms = soc.cycles_to_ms(mc.sequential_makespan_cycles)
+        rows.append((mix, mc, co_ms, seq_ms))
+        if verbose:
+            print(f"\nmix: {' + '.join(mix)}")
+            print(f"  {'model':18s} {'alone (ms)':>11s} "
+                  f"{'co-sched (ms)':>14s}")
+            for i, m in enumerate(mix):
+                alone = soc.cycles_to_ms(mc.singles[i].plan.makespan)
+                print(f"  {m:18s} {alone:11.2f} "
+                      f"{mc.tenant_latency_ms(i):14.2f}")
+            thr_co = len(mix) / (co_ms / 1e3)
+            thr_seq = len(mix) / (seq_ms / 1e3)
+            print(f"  round makespan: sequential {seq_ms:.2f} ms  "
+                  f"co-scheduled {co_ms:.2f} ms  "
+                  f"(speedup {mc.speedup:.2f}x)")
+            print(f"  aggregate throughput: {thr_seq:.1f} -> {thr_co:.1f} "
+                  f"inf/s")
+            util = mc.plan.utilization()
+            seq_busy = {}
+            for cm in mc.singles:
+                for r, b in cm.plan.busy.items():
+                    seq_busy[r] = seq_busy.get(r, 0.0) + b
+            seq_util = {r: b / mc.sequential_makespan_cycles
+                        for r, b in seq_busy.items()}
+            print("  utilization (sequential):   " + "  ".join(
+                f"{d}={u:.0%}" for d, u in sorted(seq_util.items())))
+            print("  utilization (co-scheduled): " + "  ".join(
+                f"{d}={u:.0%}" for d, u in sorted(util.items())))
+    return rows
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="skip the numeric allclose re-validation")
+    args = ap.parse_args(argv)
+    print("=" * 72)
+    print("Multi-tenant co-scheduling — co-scheduled vs. sequential")
+    print("=" * 72)
+    run(check_numerics=not args.fast, verbose=True)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -47,6 +47,14 @@ def main() -> None:
 
     print()
     print("=" * 72)
+    print("Multi-tenant co-scheduling — co-scheduled vs. sequential")
+    print("=" * 72)
+    from benchmarks import multi_tenant
+    multi_tenant.run(mixes=multi_tenant.MIXES[:2],
+                     check_numerics=not args.fast, verbose=True)
+
+    print()
+    print("=" * 72)
     print("Roofline — per (arch x shape x mesh), from the dry-run")
     print("=" * 72)
     dr = os.path.join("artifacts", "dryrun", "dryrun.json")

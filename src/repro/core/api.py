@@ -28,7 +28,9 @@ from typing import Dict, List, Optional, Sequence
 from repro.core.ir import Graph
 from repro.core.patterns import Pattern
 from repro.core.rewrite import TiledGraph, rewrite
-from repro.core.schedule import ExecutionPlan, schedule, validate_schedule
+from repro.core.schedule import (ExecutionPlan, MultiExecutionPlan,
+                                 schedule, schedule_multi, validate_schedule,
+                                 validate_multi_schedule)
 from repro.core.tiling import TilingSolution, optimize_tiling
 from repro.soc.device import SoC
 
@@ -151,3 +153,78 @@ def compile_model(g: Graph, soc: SoC, patterns: Sequence[Pattern],
     plan.mode = mode
     return CompiledModel(graph=g, soc=soc, mode=mode, solution=sol,
                          tiled=tg, plan=plan, candidates=candidates)
+
+
+# ---------------------------------------------------------------------------
+# Multi-tenant compilation (N models co-scheduled on one SoC)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class MultiCompiledModel:
+    """N independent models compiled into ONE co-schedule on one SoC.
+
+    ``singles`` holds the per-model compilations (each model's best tiling
+    and its compile-alone schedule — the sequential baseline); ``plan`` is
+    the merged resource-constrained co-schedule over the same tiled graphs.
+    """
+    graphs: List[Graph]
+    soc: SoC
+    mode: str
+    singles: List[CompiledModel]
+    plan: MultiExecutionPlan
+
+    @property
+    def makespan_cycles(self) -> float:
+        return self.plan.makespan
+
+    @property
+    def runtime_ms(self) -> float:
+        return self.soc.cycles_to_ms(self.plan.makespan)
+
+    @property
+    def sequential_makespan_cycles(self) -> float:
+        """Compile-each-model-alone, run back-to-back (the baseline)."""
+        return sum(cm.plan.makespan for cm in self.singles)
+
+    @property
+    def speedup(self) -> float:
+        return (self.sequential_makespan_cycles / self.plan.makespan
+                if self.plan.makespan else 1.0)
+
+    def tenant_latency_ms(self, i: int) -> float:
+        """Completion time of tenant ``i`` inside the co-schedule."""
+        return self.soc.cycles_to_ms(self.plan.tenant_makespans[i])
+
+    def run(self, inputs_list, params_list):
+        from repro.core.runtime import execute_multi_plan
+        return execute_multi_plan(self.plan, inputs_list, params_list)
+
+
+def compile_multi(graphs: Sequence[Graph], soc: SoC,
+                  patterns: Sequence[Pattern], mode: str = "matcha",
+                  budgets: Optional[Sequence[int]] = None,
+                  requested_tiles: int = 16,
+                  time_budget_s: float = 8.0) -> MultiCompiledModel:
+    """Compile N independent models into one multi-tenant co-schedule.
+
+    Stage 1 runs per model exactly as :func:`compile_model` (each model
+    keeps its individually-optimal tiling/device assignment); stage 2 then
+    merges the N execution DAGs under shared-resource constraints — per-
+    device mutual exclusion, one DMA engine with double-buffered planned
+    loads, and a shared L2 with per-tenant budgets (``budgets`` defaults to
+    an equal split).  The sequential concatenation of the single-model
+    schedules is always a candidate, so the co-scheduled makespan is never
+    worse than the compile-each-model-alone baseline."""
+    assert len(graphs) >= 1
+    singles = [compile_model(g, soc, patterns, mode=mode,
+                             requested_tiles=requested_tiles,
+                             time_budget_s=time_budget_s) for g in graphs]
+    plan = schedule_multi([cm.tiled for cm in singles], soc,
+                          budgets=budgets,
+                          singles=[cm.plan for cm in singles])
+    errs = validate_multi_schedule(plan)
+    if errs:
+        raise RuntimeError(f"infeasible co-schedule: {errs[:5]}")
+    return MultiCompiledModel(graphs=list(graphs), soc=soc, mode=mode,
+                              singles=singles, plan=plan)

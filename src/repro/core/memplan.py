@@ -33,6 +33,7 @@ class Allocation:
     t_free: float = float("inf")
     level: str = "l2"
     strategy: str = "dynamic"     # "static" | "dynamic" | "planned"
+    owner: int = 0                # tenant id (0 for single-model plans)
 
 
 @dataclasses.dataclass
@@ -138,6 +139,55 @@ class L2Allocator:
     def finish(self, now: float) -> None:
         for t in list(self.live):
             self.free(t, now)
+
+
+class SharedL2Allocator(L2Allocator):
+    """Multi-tenant first-fit allocator over ONE shared L2 scratchpad.
+
+    Each tenant (co-scheduled model) gets a soft byte *budget*; any tenant
+    may temporarily exceed it when free space exists, but under contention
+    the eviction order is aware of budgets: victims are drawn first from
+    tenants that are over budget (excluding the requester), largest-first,
+    so one memory-hungry model cannot starve its co-residents (cf. the
+    contention-aware policies of Dagli & Belviranli, arXiv:2308.05869).
+    """
+
+    def __init__(self, capacity: int, budgets: List[int]) -> None:
+        super().__init__(capacity)
+        self.budgets = list(budgets)
+        self.used_by = [0] * len(self.budgets)
+
+    def alloc(self, tensor: str, size: int, now: float,
+              strategy: str = "dynamic", owner: int = 0
+              ) -> Optional[Allocation]:
+        a = super().alloc(tensor, size, now, strategy)
+        if a is not None:
+            a.owner = owner
+            self.used_by[owner] += a.size
+        return a
+
+    def free(self, tensor: str, now: float) -> None:
+        a = self.live.get(tensor)
+        if a is not None:
+            self.used_by[a.owner] -= a.size
+        super().free(tensor, now)
+
+    def over_budget(self, owner: int) -> int:
+        return self.used_by[owner] - self.budgets[owner]
+
+    def eviction_candidates(self, protect: set,
+                            requester: Optional[int] = None) -> List[str]:
+        cands = super().eviction_candidates(protect)
+        if requester is None:
+            return cands
+
+        def key(t: str):
+            a = self.live[t]
+            foreign_over = (a.owner != requester
+                            and self.over_budget(a.owner) > 0)
+            return (0 if foreign_over else 1, -a.size, t)
+
+        return sorted(cands, key=key)
 
 
 def _align(size: int) -> int:

@@ -301,6 +301,53 @@ def run_supernode(g: Graph, sn: Supernode, env: Arrays) -> Dict[str, jnp.ndarray
     return results
 
 
+class _TenantExecutor:
+    """Tile-stitching execution state for ONE model (tenant).
+
+    Runs supernode kernels in whatever order the schedule dictates and
+    stitches tile segments back into full tensors with
+    ``dynamic_update_slice`` (the concat-helper semantics).  Segments are
+    disjoint, so any interleaving with other tenants' kernels produces
+    bitwise-identical outputs to running this model alone."""
+
+    def __init__(self, tg: TiledGraph, inputs: Arrays, params: Arrays
+                 ) -> None:
+        self.g = tg.graph
+        self.env: Arrays = {**inputs, **params}
+        self.buf: Dict[str, jnp.ndarray] = {}
+        self.filled: Dict[str, int] = {}
+        self.sn_by_name = {s.name: s for s in tg.supernodes}
+
+    def run_kernel(self, supernode: str) -> None:
+        g = self.g
+        sn = self.sn_by_name[supernode]
+        tiles = run_supernode(g, sn, self.env)
+        for out_t, tile in tiles.items():
+            op = g.producer_of(out_t)
+            ax = tile_axis(g, op)
+            if ax is None or sn.full:
+                self.env[out_t] = tile
+                continue
+            if out_t not in self.buf:
+                self.buf[out_t] = jnp.zeros(g.tensors[out_t].shape,
+                                            dtype=tile.dtype)
+                self.filled[out_t] = 0
+            c0, _ = _coord_range(g, op, sn.tile_lo, sn.tile_hi, sn.T, ax)
+            start = [0] * self.buf[out_t].ndim
+            start[ax] = c0
+            self.buf[out_t] = lax.dynamic_update_slice(self.buf[out_t],
+                                                       tile, start)
+            self.filled[out_t] += sn.tiles
+            if self.filled[out_t] == sn.T:
+                self.env[out_t] = self.buf.pop(out_t)
+
+    def outputs(self) -> Arrays:
+        missing = [t for t in self.g.outputs if t not in self.env]
+        if missing:
+            raise RuntimeError(f"plan did not produce outputs: {missing}")
+        return {t: self.env[t] for t in self.g.outputs}
+
+
 def execute_plan(plan: ExecutionPlan, inputs: Arrays, params: Arrays
                  ) -> Arrays:
     """Tile-by-tile execution following the compiled plan.
@@ -308,41 +355,31 @@ def execute_plan(plan: ExecutionPlan, inputs: Arrays, params: Arrays
     Segments are stitched with ``dynamic_update_slice`` (the concat helper);
     supernodes run in the plan's scheduled order, which respects data
     dependencies by construction (validated by ``validate_schedule``)."""
-    tg: TiledGraph = plan.tiled
-    g = tg.graph
-    env: Arrays = {**inputs, **params}
-    # buffers for partially-materialized tensors
-    buf: Dict[str, jnp.ndarray] = {}
-    filled: Dict[str, int] = {}
-
-    sn_by_name = {s.name: s for s in tg.supernodes}
+    ex = _TenantExecutor(plan.tiled, inputs, params)
     for node_name in plan.order:
         n = plan.nodes[node_name]
-        if n.kind != "kernel" or n.supernode is None:
-            continue
-        sn = sn_by_name[n.supernode]
-        tiles = run_supernode(g, sn, env)
-        for out_t, tile in tiles.items():
-            op = g.producer_of(out_t)
-            ax = tile_axis(g, op)
-            if ax is None or sn.full:
-                env[out_t] = tile
-                continue
-            if out_t not in buf:
-                buf[out_t] = jnp.zeros(g.tensors[out_t].shape,
-                                       dtype=tile.dtype)
-                filled[out_t] = 0
-            c0, _ = _coord_range(g, op, sn.tile_lo, sn.tile_hi, sn.T, ax)
-            start = [0] * buf[out_t].ndim
-            start[ax] = c0
-            buf[out_t] = lax.dynamic_update_slice(buf[out_t], tile, start)
-            filled[out_t] += sn.tiles
-            if filled[out_t] == sn.T:
-                env[out_t] = buf.pop(out_t)
-    missing = [t for t in g.outputs if t not in env]
-    if missing:
-        raise RuntimeError(f"plan did not produce outputs: {missing}")
-    return {t: env[t] for t in g.outputs}
+        if n.kind == "kernel" and n.supernode is not None:
+            ex.run_kernel(n.supernode)
+    return ex.outputs()
+
+
+def execute_multi_plan(plan, inputs_list: Sequence[Arrays],
+                       params_list: Sequence[Arrays]) -> List[Arrays]:
+    """Interleaved-tenant execution of a
+    :class:`repro.core.schedule.MultiExecutionPlan`.
+
+    Kernels run in global scheduled order; each dispatches into its
+    tenant's private executor, so N models make progress concurrently the
+    way the co-schedule interleaves them on the SoC.  Numerics are
+    identical to running each model alone (asserted by
+    :func:`multi_plan_matches_oracle`)."""
+    execs = [_TenantExecutor(tg, inputs_list[i], params_list[i])
+             for i, tg in enumerate(plan.tenants)]
+    for node_name in plan.order:
+        n = plan.nodes[node_name]
+        if n.kind == "kernel" and n.supernode is not None:
+            execs[n.tenant].run_kernel(n.supernode)
+    return [ex.outputs() for ex in execs]
 
 
 def plan_matches_oracle(plan: ExecutionPlan, seed: int = 0,
@@ -355,4 +392,24 @@ def plan_matches_oracle(plan: ExecutionPlan, seed: int = 0,
     for t in g.outputs:
         np.testing.assert_allclose(np.asarray(got[t]), np.asarray(want[t]),
                                    atol=atol, rtol=rtol)
+    return True
+
+
+def multi_plan_matches_oracle(plan, seed: int = 0, atol: float = 1e-4,
+                              rtol: float = 1e-4) -> bool:
+    """Multi-tenant correctness contract: the interleaved co-scheduled
+    execution matches every tenant's single-model oracle."""
+    inputs_list, params_list = [], []
+    for i, tg in enumerate(plan.tenants):
+        params_list.append(init_params(tg.graph, seed + 2 * i))
+        inputs_list.append(init_inputs(tg.graph, seed + 2 * i + 1))
+    got = execute_multi_plan(plan, inputs_list, params_list)
+    for i, tg in enumerate(plan.tenants):
+        g = tg.graph
+        want = execute_graph(g, inputs_list[i], params_list[i])
+        for t in g.outputs:
+            np.testing.assert_allclose(
+                np.asarray(got[i][t]), np.asarray(want[t]),
+                atol=atol, rtol=rtol,
+                err_msg=f"tenant {i} ({g.name}) output {t}")
     return True

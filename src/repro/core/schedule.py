@@ -27,7 +27,8 @@ import random
 from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 from repro.core.ir import Graph
-from repro.core.memplan import L2Allocator, MemoryPlan, SwapOp
+from repro.core.memplan import (L2Allocator, MemoryPlan, SharedL2Allocator,
+                                SwapOp)
 from repro.core.rewrite import HelperNode, Supernode, TiledGraph
 from repro.core.tiling import DELTA_HELPER
 from repro.core.zigzag import refine_latency
@@ -49,6 +50,7 @@ class PlanNode:
     supernode: Optional[str] = None
     start: float = -1.0
     end: float = -1.0
+    tenant: int = 0            # model index in a multi-tenant co-schedule
     # planned-loading traffic for L3-resident tensors: (tensor, dir, bytes).
     # Tensors too large for the L2 scratchpad stay in L3; every access
     # streams its touched bytes through the system DMA (§3.2 strategy iii).
@@ -96,11 +98,15 @@ def l3_resident(g: Graph, soc: SoC) -> Set[str]:
 STATIC_PARAM_BUDGET = 0.6      # fraction of L2 reserved for resident params
 
 
-def static_params(g: Graph, soc: SoC) -> Set[str]:
+def static_params(g: Graph, soc: SoC,
+                  l2_budget: Optional[int] = None) -> Set[str]:
     """Strategy (i): parameters kept L2-resident for the whole execution —
     loaded once at startup, so their DMA is *not* in the inference makespan.
-    Smallest-first greedy within the budget; the rest use planned loading."""
-    budget = int(soc.l2.size * STATIC_PARAM_BUDGET)
+    Smallest-first greedy within the budget; the rest use planned loading.
+    ``l2_budget`` caps this tenant's L2 share in a multi-tenant co-schedule
+    (defaults to the whole scratchpad for single-model plans)."""
+    budget = int((soc.l2.size if l2_budget is None else l2_budget)
+                 * STATIC_PARAM_BUDGET)
     l3res = l3_resident(g, soc)
     out: Set[str] = set()
     used = 0
@@ -115,7 +121,8 @@ def static_params(g: Graph, soc: SoC) -> Set[str]:
     return out
 
 
-def build_dag(tg: TiledGraph, soc: SoC) -> Dict[str, PlanNode]:
+def build_dag(tg: TiledGraph, soc: SoC,
+              l2_budget: Optional[int] = None) -> Dict[str, PlanNode]:
     g = tg.graph
     host = soc.host.name
     l3res = l3_resident(g, soc)
@@ -134,7 +141,7 @@ def build_dag(tg: TiledGraph, soc: SoC) -> Dict[str, PlanNode]:
 
     # parameter planned-loads: one DMA per *non-static* param tensor (static
     # params are L2-resident from startup, strategy i — no runtime DMA)
-    statics = static_params(g, soc)
+    statics = static_params(g, soc, l2_budget)
     param_load: Dict[str, str] = {}
     for tname, ti in g.tensors.items():
         if ti.kind == "param" and tname not in l3res and tname not in statics:
@@ -308,30 +315,42 @@ class _SimState:
         (ok, time when every slot is available).  A False return leaves the
         allocator state untouched — blocked nodes defer without thrashing
         the DMA engine."""
-        if not needs:
-            return True, now
-        sizes = [int(b) for _, b, _ in needs]
-        for (t, b, _s) in needs:
-            if int(b) > self.capacity:
-                raise MemoryError(f"{t}: {b} B exceeds L2 "
-                                  f"({self.capacity} B)")
-        victims = self.alloc.eviction_candidates(protect)
-        hypo = self.alloc.segments_assuming_freed(victims)
-        if not L2Allocator.fits_all(hypo, sizes):
-            return False, now                      # no mutation
-        t_avail = now
-        while not L2Allocator.fits_all(
-                self.alloc.segments_assuming_freed([]), sizes):
-            victims = self.alloc.eviction_candidates(protect)
-            v = max(victims, key=lambda t: self.alloc.live[t].size)
-            vb = self.alloc.live[v].size
-            t_avail = self.dma_transfer(v, "out", t_avail, vb)
-            self.l2_free(v, t_avail)
-            self.state[v] = "l3"
-        for t, b, strat in needs:
-            a = self.alloc.alloc(t, int(b), t_avail, strat)
-            assert a is not None, t
-        return True, t_avail
+        return _reserve_slots(
+            self, needs, now,
+            candidates=lambda: self.alloc.eviction_candidates(protect),
+            choose=lambda vs: max(vs, key=lambda t: self.alloc.live[t].size),
+            do_alloc=lambda t, b, strat, ta: self.alloc.alloc(t, b, ta,
+                                                              strat))
+
+
+def _reserve_slots(st, needs: List[Tuple[str, int, str]], now: float,
+                   candidates, choose, do_alloc) -> Tuple[bool, float]:
+    """Shared all-or-nothing L2 reservation used by both the single-model
+    and the multi-tenant simulators; the policies differ only in victim
+    ordering/choice and in how allocations are attributed (``owner``)."""
+    if not needs:
+        return True, now
+    sizes = [int(b) for _, b, _ in needs]
+    for (t, b, _s) in needs:
+        if int(b) > st.capacity:
+            raise MemoryError(f"{t}: {b} B exceeds L2 ({st.capacity} B)")
+    hypo = st.alloc.segments_assuming_freed(candidates())
+    if not L2Allocator.fits_all(hypo, sizes):
+        return False, now                          # no mutation
+    t_avail = now
+    while not L2Allocator.fits_all(
+            st.alloc.segments_assuming_freed([]), sizes):
+        v = choose(candidates())
+        vb = st.alloc.live[v].size
+        t_avail = st.dma_transfer(v, "out", t_avail, vb)
+        st.alloc.free(v, t_avail)
+        st.state[v] = "l3"
+    for t, b, strat in needs:
+        a = do_alloc(t, int(b), strat, t_avail)
+        if a is None:              # fits_all said yes; placement must work
+            raise MemoryError(f"L2 reservation lost {t} ({b} B) after "
+                              f"eviction — allocator inconsistency")
+    return True, t_avail
 
 
 def simulate(tg: TiledGraph, soc: SoC, sequential: bool,
@@ -567,4 +586,409 @@ def validate_schedule(plan: ExecutionPlan) -> List[str]:
         for a, b in zip(comp, comp[1:]):
             if a.end > b.start + 1e-6:
                 errs.append(f"sequential mode overlap: {a.name} / {b.name}")
+    return errs
+
+
+# ---------------------------------------------------------------------------
+# Multi-tenant co-scheduling (inter-model concurrency)
+# ---------------------------------------------------------------------------
+#
+# The paper's Fig. 4 story generalized from intra-model to inter-model
+# concurrency: N independent models share one SoC.  Their execution DAGs are
+# merged under per-device mutual exclusion, a *shared* L2 allocator with
+# per-tenant budgets + contention-aware eviction (memplan.SharedL2Allocator),
+# and a double-buffered DMA discipline — planned loads are issued as soon as
+# a node's dependencies resolve, so DMA traffic of one tenant overlaps
+# compute of another instead of serializing (cf. arXiv:2308.05869).
+
+
+def default_budgets(soc: SoC, n: int) -> List[int]:
+    """Equal soft split of the shared L2 scratchpad across ``n`` tenants."""
+    return [soc.l2.size // n] * n
+
+
+def _check_budgets(budgets: Sequence[int], n_tenants: int) -> List[int]:
+    budgets = list(budgets)
+    if len(budgets) != n_tenants:
+        raise ValueError(f"budgets has {len(budgets)} entries for "
+                         f"{n_tenants} tenants")
+    if any(b <= 0 for b in budgets):
+        raise ValueError(f"budgets must be positive: {budgets}")
+    return budgets
+
+
+def _namespace_node(n: PlanNode, prefix: str, tenant: int) -> PlanNode:
+    """Copy of ``n`` with every node/tensor reference prefixed for its
+    tenant (shared by the co-scheduler DAG merge and the sequential
+    concatenation so the two can never desynchronize)."""
+    return dataclasses.replace(
+        n, name=prefix + n.name,
+        preds=[prefix + q for q in n.preds],
+        reads=[prefix + t for t in n.reads],
+        writes=[prefix + t for t in n.writes],
+        l3_traffic=[(prefix + t, d, b) for t, d, b in n.l3_traffic],
+        tenant=tenant)
+
+
+def build_multi_dag(tgs: Sequence[TiledGraph], soc: SoC,
+                    budgets: Sequence[int]) -> Dict[str, PlanNode]:
+    """Merge per-tenant execution DAGs into one namespaced DAG.
+
+    Node and tensor names are prefixed ``t{i}/`` so two instances of the
+    same model never collide; cross-tenant edges do not exist (tenants are
+    independent), coupling happens only through shared resources."""
+    budgets = _check_budgets(budgets, len(tgs))
+    merged: Dict[str, PlanNode] = {}
+    for i, tg in enumerate(tgs):
+        p = f"t{i}/"
+        for name, n in build_dag(tg, soc, l2_budget=budgets[i]).items():
+            merged[p + name] = _namespace_node(n, p, i)
+    return merged
+
+
+@dataclasses.dataclass
+class MultiExecutionPlan:
+    """A co-schedule of N independent models on one SoC."""
+    tenants: List[TiledGraph]
+    nodes: Dict[str, PlanNode]            # namespaced "t{i}/..."
+    order: List[str]                      # by start time
+    dmas: List[ScheduledDma]
+    memory: MemoryPlan
+    makespan: float
+    busy: Dict[str, float]
+    tenant_makespans: List[float]         # completion time of each tenant
+    budgets: List[int]
+    mode: str = "matcha"
+
+    def utilization(self) -> Dict[str, float]:
+        return {r: (b / self.makespan if self.makespan else 0.0)
+                for r, b in self.busy.items()}
+
+
+class _MultiSimState:
+    """Shared-resource simulation state for N tenants (one L2, one DMA)."""
+
+    def __init__(self, tgs: Sequence[TiledGraph], soc: SoC,
+                 budgets: Sequence[int]) -> None:
+        self.soc = soc
+        self.capacity = soc.l2.size
+        self.alloc = SharedL2Allocator(soc.l2.size, list(budgets))
+        self.res_free: Dict[str, float] = {d: 0.0 for d in soc.devices}
+        self.res_free[DMA] = 0.0
+        self.busy: Dict[str, float] = {r: 0.0 for r in self.res_free}
+        self.dmas: List[ScheduledDma] = []
+        self.swaps: List[SwapOp] = []
+        self.tensors: Dict[str, object] = {}     # namespaced -> TensorInfo
+        self.state: Dict[str, str] = {}
+        self.outputs: Set[str] = set()
+        for i, tg in enumerate(tgs):
+            p = f"t{i}/"
+            g = tg.graph
+            for t, ti in g.tensors.items():
+                self.tensors[p + t] = ti
+                self.state[p + t] = "none"
+            for t in l3_resident(g, soc):
+                self.state[p + t] = "l3r"
+            for t in static_params(g, soc, budgets[i]):
+                a = self.alloc.alloc(p + t, g.tensors[t].bytes, 0.0,
+                                     "static", owner=i)
+                if a is None:      # over-committed budgets: a real capacity
+                    raise MemoryError(   # condition, recoverable by caller
+                        f"static params exceed shared L2: {p + t} "
+                        f"({g.tensors[t].bytes} B) does not fit "
+                        f"(budgets={budgets})")
+                self.state[p + t] = "l2"
+            self.outputs.update(p + t for t in g.outputs)
+        self.remaining_consumers: Dict[str, int] = {}
+        # Monotonic clock over allocator mutations.  With double-buffered
+        # DMA, reservation times are pred-driven and can run *backwards*
+        # relative to the sequential allocator order; without the clamp a
+        # later reservation could reuse an address whose previous occupant
+        # is (in simulated time) not yet evicted, producing overlapping
+        # residency rectangles.  Allocations are therefore stamped no
+        # earlier than the latest allocator event.
+        self.mem_clock = 0.0
+
+    def nbytes(self, tensor: str) -> int:
+        return self.tensors[tensor].bytes
+
+    # identical single-engine DMA serialization as the single-model sim
+    dma_transfer = _SimState.dma_transfer
+
+    def reserve(self, needs: List[Tuple[str, int, str]], now: float,
+                protect: Set[str], owner: int) -> Tuple[bool, float]:
+        """Transactional multi-tenant reservation: same all-or-nothing
+        semantics as the single-model scheduler, but victims are chosen
+        contention-aware (over-budget *other* tenants pay first, in the
+        allocator's budget-aware order) and allocator mutations are
+        clamped to the monotonic ``mem_clock``."""
+        if not needs:
+            return True, now
+        now = max(now, self.mem_clock)
+        ok, t_avail = _reserve_slots(
+            self, needs, now,
+            candidates=lambda: self.alloc.eviction_candidates(protect,
+                                                              owner),
+            choose=lambda vs: vs[0],               # budget-aware order
+            do_alloc=lambda t, b, strat, ta: self.alloc.alloc(
+                t, b, ta, strat, owner=owner))
+        if ok:
+            self.mem_clock = max(self.mem_clock, t_avail)
+        return ok, t_avail
+
+
+def simulate_multi(tgs: Sequence[TiledGraph], soc: SoC,
+                   priority: Dict[str, float],
+                   nodes: Optional[Dict[str, PlanNode]] = None,
+                   budgets: Optional[Sequence[int]] = None
+                   ) -> MultiExecutionPlan:
+    """Greedy event-driven co-schedule construction over the merged DAG.
+
+    Differs from the single-model :func:`simulate` in two resource-model
+    respects: (a) L2 slots come from the shared budgeted allocator, and
+    (b) DMA is double-buffered — a node's reload / planned-load transfers
+    start when its *dependencies* resolve (not when its device frees up),
+    so loads for one tenant overlap compute of another; compute then waits
+    on max(transfers done, device free)."""
+    budgets = list(budgets) if budgets is not None \
+        else default_budgets(soc, len(tgs))
+    base = nodes or build_multi_dag(tgs, soc, budgets)
+    nodes = {k: dataclasses.replace(v, preds=list(v.preds),
+                                    reads=list(v.reads),
+                                    writes=list(v.writes))
+             for k, v in base.items()}
+    st = _MultiSimState(tgs, soc, budgets)
+
+    for n in nodes.values():
+        for t in n.reads:
+            st.remaining_consumers[t] = st.remaining_consumers.get(t, 0) + 1
+
+    succs: Dict[str, List[str]] = {n: [] for n in nodes}
+    indeg: Dict[str, int] = {}
+    for n in nodes.values():
+        indeg[n.name] = len(n.preds)
+        for p in n.preds:
+            succs[p].append(n.name)
+
+    pred_end: Dict[str, float] = {n: 0.0 for n in nodes}
+    ready: List[Tuple[float, str]] = []
+    for n, d in indeg.items():
+        if d == 0:
+            heapq.heappush(ready, (-priority.get(n, 0.0), n))
+    events: List[Tuple[float, str]] = []
+    deferred: List[str] = []
+    finished = 0
+    now = 0.0
+    order: List[str] = []
+
+    while finished < len(nodes):
+        progressed = False
+        attempt = [heapq.heappop(ready)[1] for _ in range(len(ready))]
+        attempt.extend(deferred)
+        deferred = []
+        for name in attempt:
+            n = nodes[name]
+            t0 = pred_end[name]
+            protect = set(n.reads) | set(n.writes)
+            needs: List[Tuple[str, int, str]] = []
+            reloads: List[str] = []
+            for t in n.reads:
+                if st.state[t] == "l3":
+                    needs.append((t, st.nbytes(t), "dynamic"))
+                    reloads.append(t)
+            for t in n.writes:
+                if st.state[t] == "none":
+                    strat = ("planned"
+                             if st.tensors[t].kind == "param" else "dynamic")
+                    needs.append((t, st.nbytes(t), strat))
+                elif st.state[t] == "l3":   # partial writer after eviction
+                    needs.append((t, st.nbytes(t), "dynamic"))
+                    reloads.append(t)
+            ok, t0 = st.reserve(needs, t0, protect, n.tenant)
+            if not ok:
+                deferred.append(name)
+                continue
+            for t, _, _ in needs:
+                st.state[t] = "l2"
+            for t in reloads:
+                t0 = st.dma_transfer(t, "in", t0, st.nbytes(t))
+            for t, dirn, b in n.l3_traffic:
+                t0 = st.dma_transfer(t, dirn, t0, int(b))
+            # double-buffering: transfers above ran off pred_end; the
+            # device only gates the compute start, not the DMA issue
+            n.start = max(t0, st.res_free[n.resource])
+            n.end = n.start + n.duration
+            st.res_free[n.resource] = n.end
+            st.busy[n.resource] += n.duration
+            heapq.heappush(events, (n.end, name))
+            order.append(name)
+            progressed = True
+
+        if not events:
+            if deferred and not progressed:
+                raise RuntimeError(
+                    f"co-scheduler deadlock: {len(deferred)} nodes blocked "
+                    f"on shared L2 ({soc.l2.size} B, budgets={budgets})")
+            continue
+        end, name = heapq.heappop(events)
+        now = end
+        finished += 1
+        n = nodes[name]
+        for t in n.reads:
+            st.remaining_consumers[t] -= 1
+            if (st.remaining_consumers[t] == 0 and st.state[t] == "l2"
+                    and t not in st.outputs):
+                st.alloc.free(t, now)
+                st.mem_clock = max(st.mem_clock, now)
+                st.state[t] = "dead"
+        for s in succs[name]:
+            indeg[s] -= 1
+            pred_end[s] = max(pred_end[s], end)
+            if indeg[s] == 0:
+                heapq.heappush(ready, (-priority.get(s, 0.0), s))
+
+    makespan = max((n.end for n in nodes.values()), default=0.0)
+    st.alloc.finish(makespan)
+    mem = MemoryPlan(capacity=soc.l2.size, allocations=st.alloc.history,
+                     swaps=st.swaps, peak=st.alloc.peak)
+    order.sort(key=lambda n: nodes[n].start)
+    tenant_ms = [0.0] * len(tgs)
+    for n in nodes.values():
+        tenant_ms[n.tenant] = max(tenant_ms[n.tenant], n.end)
+    return MultiExecutionPlan(tenants=list(tgs), nodes=nodes, order=order,
+                              dmas=st.dmas, memory=mem, makespan=makespan,
+                              busy=dict(st.busy),
+                              tenant_makespans=tenant_ms,
+                              budgets=budgets)
+
+
+def concat_plans(singles: Sequence[ExecutionPlan], soc: SoC,
+                 budgets: Optional[Sequence[int]] = None
+                 ) -> MultiExecutionPlan:
+    """Sequential multi-tenant baseline: tenant i's single-model schedule
+    runs after tenants 0..i-1 finish (compile-each-model-alone, run
+    back-to-back).  Also the co-scheduler's fallback, which guarantees
+    co-scheduled makespan <= sum of single-model makespans."""
+    tgs = [p.tiled for p in singles]
+    budgets = _check_budgets(budgets, len(singles)) if budgets is not None \
+        else default_budgets(soc, len(singles))
+    nodes: Dict[str, PlanNode] = {}
+    dmas: List[ScheduledDma] = []
+    allocs = []
+    swaps: List[SwapOp] = []
+    busy: Dict[str, float] = {}
+    tenant_ms: List[float] = []
+    offset = 0.0
+    for i, plan in enumerate(singles):
+        p = f"t{i}/"
+        for name, n in plan.nodes.items():
+            nodes[p + name] = dataclasses.replace(
+                _namespace_node(n, p, i),
+                start=n.start + offset, end=n.end + offset)
+        for d in plan.dmas:
+            dmas.append(ScheduledDma(p + d.tensor, d.direction,
+                                     d.start + offset, d.end + offset,
+                                     d.bytes))
+        for a in plan.memory.allocations:
+            allocs.append(dataclasses.replace(
+                a, tensor=p + a.tensor, t_alloc=a.t_alloc + offset,
+                t_free=(a.t_free + offset
+                        if a.t_free != float("inf") else a.t_free),
+                owner=i))
+        for s in plan.memory.swaps:
+            swaps.append(SwapOp(p + s.tensor, s.direction, s.bytes,
+                                s.time + offset))
+        for r, b in plan.busy.items():
+            busy[r] = busy.get(r, 0.0) + b
+        offset += plan.makespan
+        tenant_ms.append(offset)
+    order = sorted(nodes, key=lambda n: nodes[n].start)
+    mem = MemoryPlan(capacity=soc.l2.size, allocations=allocs,
+                     swaps=swaps,
+                     peak=max((p.memory.peak for p in singles), default=0))
+    return MultiExecutionPlan(tenants=tgs, nodes=nodes, order=order,
+                              dmas=dmas, memory=mem, makespan=offset,
+                              busy=busy, tenant_makespans=tenant_ms,
+                              budgets=budgets, mode="sequential")
+
+
+def schedule_multi(tgs: Sequence[TiledGraph], soc: SoC,
+                   budgets: Optional[Sequence[int]] = None,
+                   singles: Optional[Sequence[ExecutionPlan]] = None,
+                   restarts: int = 3, seed: int = 0) -> MultiExecutionPlan:
+    """Search for a minimum-makespan co-schedule of N tiled graphs.
+
+    Priority schemes: merged-DAG upward rank, per-tenant-interleaved rank,
+    topological index, and seeded perturbations — each simulated greedily
+    under the shared-resource model; the best feasible plan wins.  When the
+    single-model plans are supplied, the sequential concatenation is a
+    candidate too, so the result is never worse than running each model
+    alone back-to-back."""
+    budgets = _check_budgets(budgets, len(tgs)) if budgets is not None \
+        else default_budgets(soc, len(tgs))
+    dag = build_multi_dag(tgs, soc, budgets)
+    rank = _upward_rank(dag)
+    topo_idx = {n: float(-i) for i, n in enumerate(_topo(dag))}
+    # fairness scheme: normalize each tenant's ranks so no tenant's whole
+    # DAG dominates another's (round-robin-ish interleave)
+    tmax: Dict[int, float] = {}
+    for n, r in rank.items():
+        t = dag[n].tenant
+        tmax[t] = max(tmax.get(t, 0.0), r)
+    fair = {n: r / tmax[dag[n].tenant] for n, r in rank.items()
+            if tmax.get(dag[n].tenant)}
+    schemes: List[Dict[str, float]] = [rank, fair, topo_idx]
+    rng = random.Random(seed)
+    for _ in range(restarts):
+        schemes.append({n: r * (1.0 + 0.25 * rng.random())
+                        for n, r in rank.items()})
+
+    best: Optional[MultiExecutionPlan] = None
+    last_err: Optional[Exception] = None
+    for pr in schemes:
+        try:
+            plan = simulate_multi(tgs, soc, pr, nodes=dag, budgets=budgets)
+        except (MemoryError, RuntimeError) as e:
+            last_err = e
+            continue
+        if validate_multi_schedule(plan):
+            continue
+        if best is None or plan.makespan < best.makespan:
+            best = plan
+    if singles is not None:
+        seq = concat_plans(singles, soc, budgets)
+        if best is None or seq.makespan < best.makespan:
+            best = seq
+    if best is None:
+        raise RuntimeError(f"no feasible co-schedule found: {last_err}")
+    return best
+
+
+def validate_multi_schedule(plan: MultiExecutionPlan) -> List[str]:
+    """Co-schedule constraint checker: precedence, per-device mutual
+    exclusion, and single-DMA-engine exclusivity across *all* tenants
+    (explicit load/store nodes and inline swap/planned-load transfers)."""
+    errs: List[str] = []
+    for n in plan.nodes.values():
+        if n.start < -0.5:
+            errs.append(f"{n.name}: never scheduled")
+            continue
+        for p in n.preds:
+            if plan.nodes[p].end > n.start + 1e-6:
+                errs.append(f"precedence: {p} ends after {n.name} starts")
+    by_res: Dict[str, List[Tuple[float, float, str]]] = {}
+    for n in plan.nodes.values():
+        by_res.setdefault(n.resource, []).append((n.start, n.end, n.name))
+    # inline DMA transfers share the engine with load/store nodes
+    for d in plan.dmas:
+        by_res.setdefault(DMA, []).append(
+            (d.start, d.end, f"dma:{d.tensor}:{d.direction}@{d.start:.0f}"))
+    for r, ivs in by_res.items():
+        ivs.sort()
+        for a, b in zip(ivs, ivs[1:]):
+            if a[1] > b[0] + 1e-6:
+                errs.append(f"resource {r}: {a[2]} overlaps {b[2]}")
+    for i, tg in enumerate(plan.tenants):
+        if plan.tenant_makespans[i] > plan.makespan + 1e-6:
+            errs.append(f"tenant {i} finishes after the global makespan")
     return errs

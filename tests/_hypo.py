@@ -1,0 +1,115 @@
+"""Hypothesis shim: use the real library when installed, else a tiny
+deterministic stand-in so the property-based modules collect and run
+everywhere (the seed suite failed collection wherever ``hypothesis`` was
+missing).
+
+The stand-in implements exactly the strategy surface these tests use —
+``integers``, ``sampled_from``, ``lists``, ``tuples``, ``data`` — and a
+``@given`` that replays a fixed-seed random draw for a bounded number of
+examples (capped below ``max_examples`` to keep the fallback fast).  It is
+NOT a shrinking property-testing engine; environments with pip should
+``pip install -r requirements-dev.txt`` to get the real thing.
+"""
+
+from __future__ import annotations
+
+
+import random
+
+try:
+    from hypothesis import given, settings
+    import hypothesis.strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                   # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+    _STANDIN_SEED = 0xA11CE
+    _STANDIN_MAX = 10          # examples per test in the fallback engine
+
+    class _Strategy:
+        def __init__(self, draw_fn):
+            self._draw_fn = draw_fn
+
+        def draw(self, rng):
+            return self._draw_fn(rng)
+
+    class _DataStrategy(_Strategy):
+        def __init__(self):
+            super().__init__(lambda rng: _DataObject(rng))
+
+    class _DataObject:
+        """Stand-in for hypothesis's interactive ``data()`` object."""
+
+        def __init__(self, rng):
+            self._rng = rng
+
+        def draw(self, strategy):
+            return strategy.draw(self._rng)
+
+    class _St:
+        """Namespace mirroring ``hypothesis.strategies``."""
+
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda r: r.randint(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(seq):
+            items = list(seq)
+            return _Strategy(lambda r: items[r.randrange(len(items))])
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10):
+            def draw(r):
+                n = r.randint(min_size, max_size)
+                return [elements.draw(r) for _ in range(n)]
+            return _Strategy(draw)
+
+        @staticmethod
+        def tuples(*strategies):
+            return _Strategy(
+                lambda r: tuple(s.draw(r) for s in strategies))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda r: bool(r.randrange(2)))
+
+        @staticmethod
+        def floats(min_value=0.0, max_value=1.0):
+            return _Strategy(lambda r: r.uniform(min_value, max_value))
+
+        @staticmethod
+        def data():
+            return _DataStrategy()
+
+    st = _St()
+
+    def settings(max_examples=None, **_ignored):
+        """Records ``max_examples``; all other hypothesis knobs ignored."""
+        def deco(fn):
+            fn._standin_max_examples = max_examples
+            return fn
+        return deco
+
+    def given(*garg_strategies, **gkw_strategies):
+        def deco(fn):
+            def wrapper(*args, **kwargs):
+                limit = getattr(wrapper, "_standin_max_examples", None) \
+                    or getattr(fn, "_standin_max_examples", None) \
+                    or _STANDIN_MAX
+                limit = min(limit, _STANDIN_MAX)
+                rng = random.Random(_STANDIN_SEED)
+                for _ in range(limit):
+                    drawn = [s.draw(rng) for s in garg_strategies]
+                    drawn_kw = {k: s.draw(rng)
+                                for k, s in gkw_strategies.items()}
+                    fn(*args, *drawn, **kwargs, **drawn_kw)
+            # NOT functools.wraps: copying __wrapped__ would expose the
+            # strategy parameters to pytest's fixture resolution
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            return wrapper
+        return deco
+
+__all__ = ["given", "settings", "st", "HAVE_HYPOTHESIS"]

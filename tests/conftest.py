@@ -4,3 +4,5 @@ import os
 import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+# make the _hypo shim importable regardless of pytest's import mode
+sys.path.insert(0, os.path.dirname(__file__))

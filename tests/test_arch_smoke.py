@@ -11,6 +11,9 @@ from repro.models.api import get_model
 from repro.optim import adamw
 from repro.train.step import make_train_step
 
+# excluded from the fast CI lane (-m "not slow")
+pytestmark = pytest.mark.slow
+
 KEY = jax.random.PRNGKey(0)
 
 

@@ -1,8 +1,7 @@
 """CP solver: branch & bound vs exhaustive search (property-based)."""
 
-import hypothesis.strategies as st
 import pytest
-from hypothesis import given, settings
+from _hypo import given, settings, st
 
 from repro.core import cpsolver
 

@@ -8,6 +8,9 @@ import sys
 
 import pytest
 
+# excluded from the fast CI lane (-m "not slow")
+pytestmark = pytest.mark.slow
+
 ROOT = os.path.join(os.path.dirname(__file__), "..")
 
 

@@ -1,7 +1,6 @@
 """Memory planner invariants (property-based 2-D packing checks)."""
 
-import hypothesis.strategies as st
-from hypothesis import given, settings
+from _hypo import given, settings, st
 
 from repro.core.memplan import (Allocation, L2Allocator, MemoryPlan,
                                 validate_plan)

@@ -2,9 +2,8 @@
 [0, T) exactly (the executable form of Eq. 1), across random tile requests
 and modes (hypothesis)."""
 
-import hypothesis.strategies as st
 import pytest
-from hypothesis import given, settings
+from _hypo import given, settings, st
 
 from repro.core.rewrite import rewrite
 from repro.core.tiling import optimize_tiling

@@ -8,6 +8,9 @@ from repro.core.runtime import plan_matches_oracle
 from repro.models import edge
 from repro.soc.carfield import carfield_patterns, carfield_soc
 
+# excluded from the fast CI lane (-m "not slow")
+pytestmark = pytest.mark.slow
+
 SOC = carfield_soc()
 PATS = carfield_patterns()
 

@@ -7,6 +7,9 @@ from repro.core.tiling import conservation_ok, optimize_tiling
 from repro.models import edge
 from repro.soc.carfield import carfield_patterns, carfield_soc
 
+# excluded from the fast CI lane (-m "not slow")
+pytestmark = pytest.mark.slow
+
 SOC = carfield_soc()
 PATS = carfield_patterns()
 

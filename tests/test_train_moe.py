@@ -10,6 +10,9 @@ import pytest
 
 from repro.configs import registry
 from repro.models import moe as moe_mod
+
+# excluded from the fast CI lane (-m "not slow")
+pytestmark = pytest.mark.slow
 from repro.models.api import get_model
 from repro.optim import adamw
 from repro.train.step import IGNORE, cross_entropy, make_train_step

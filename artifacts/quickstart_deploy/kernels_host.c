@@ -1,0 +1,63 @@
+/* Kernels for device `host` with ZigZag L1 tiling baked in */
+#include "matcha_platform.h"
+
+void k_sn19_0_host_dense_bias_add(void *args) {
+  /* fused: dense+bias_add; tiles [14,16)/16;
+   * L1 mapping: order=ws f_spatial=1 f_channel=1 footprint=21056B */
+  MATCHA_KERNEL_BODY(sn19_0_host_dense_bias_add);
+}
+void k_sn20_0_host_dense_bias_add_relu(void *args) {
+  /* fused: dense+bias_add+relu; tiles [14,16)/16;
+   * L1 mapping: order=ws f_spatial=1 f_channel=1 footprint=21824B */
+  MATCHA_KERNEL_BODY(sn20_0_host_dense_bias_add_relu);
+}
+void k_sn21_0_host_dense_bias_add_relu(void *args) {
+  /* fused: dense+bias_add+relu; tiles [15,16)/16;
+   * L1 mapping: order=ws f_spatial=1 f_channel=1 footprint=2336B */
+  MATCHA_KERNEL_BODY(sn21_0_host_dense_bias_add_relu);
+}
+void k_sn22_0_host_dense_bias_add_relu(void *args) {
+  /* fused: dense+bias_add+relu; tiles [14,16)/16;
+   * L1 mapping: order=ws f_spatial=1 f_channel=1 footprint=4416B */
+  MATCHA_KERNEL_BODY(sn22_0_host_dense_bias_add_relu);
+}
+void k_sn23_0_host_dense_bias_add_relu(void *args) {
+  /* fused: dense+bias_add+relu; tiles [14,16)/16;
+   * L1 mapping: order=ws f_spatial=1 f_channel=1 footprint=4416B */
+  MATCHA_KERNEL_BODY(sn23_0_host_dense_bias_add_relu);
+}
+void k_sn24_0_host_dense_bias_add_relu(void *args) {
+  /* fused: dense+bias_add+relu; tiles [6,9)/16;
+   * L1 mapping: order=ws f_spatial=1 f_channel=1 footprint=496B */
+  MATCHA_KERNEL_BODY(sn24_0_host_dense_bias_add_relu);
+}
+void k_sn25_0_host_dense_bias_add_relu(void *args) {
+  /* fused: dense+bias_add+relu; tiles [14,16)/16;
+   * L1 mapping: order=ws f_spatial=1 f_channel=1 footprint=4416B */
+  MATCHA_KERNEL_BODY(sn25_0_host_dense_bias_add_relu);
+}
+void k_sn26_0_host_dense_bias_add_relu(void *args) {
+  /* fused: dense+bias_add+relu; tiles [14,16)/16;
+   * L1 mapping: order=ws f_spatial=1 f_channel=1 footprint=4416B */
+  MATCHA_KERNEL_BODY(sn26_0_host_dense_bias_add_relu);
+}
+void k_sn27_0_host_dense_bias_add_relu(void *args) {
+  /* fused: dense+bias_add+relu; tiles [14,16)/16;
+   * L1 mapping: order=ws f_spatial=1 f_channel=1 footprint=4416B */
+  MATCHA_KERNEL_BODY(sn27_0_host_dense_bias_add_relu);
+}
+void k_sn29_0_wildcard_host(void *args) {
+  /* fused: relu; tiles [4,8)/8;
+   * L1 mapping: order=ws f_spatial=1 f_channel=1 footprint=24B */
+  MATCHA_KERNEL_BODY(sn29_0_wildcard_host);
+}
+void k_sn30_0_wildcard_host(void *args) {
+  /* fused: bias_add; tiles [9,16)/16;
+   * L1 mapping: order=ws f_spatial=1 f_channel=1 footprint=480B */
+  MATCHA_KERNEL_BODY(sn30_0_wildcard_host);
+}
+void k_sn31_0_wildcard_host(void *args) {
+  /* fused: relu; tiles [9,16)/16;
+   * L1 mapping: order=ws f_spatial=1 f_channel=1 footprint=368B */
+  MATCHA_KERNEL_BODY(sn31_0_wildcard_host);
+}

@@ -1,0 +1,48 @@
+/* Kernels for device `pulp` with ZigZag L1 tiling baked in */
+#include "matcha_platform.h"
+
+void k_sn0_0_pulp_dense_bias_add_relu(void *args) {
+  /* fused: dense+bias_add+relu; tiles [0,4)/8;
+   * L1 mapping: order=ws f_spatial=1 f_channel=1 footprint=1296B */
+  MATCHA_KERNEL_BODY(sn0_0_pulp_dense_bias_add_relu);
+}
+void k_sn2_0_pulp_dense_bias_add(void *args) {
+  /* fused: dense+bias_add; tiles [0,5)/16;
+   * L1 mapping: order=ws f_spatial=1 f_channel=1 footprint=52256B */
+  MATCHA_KERNEL_BODY(sn2_0_pulp_dense_bias_add);
+}
+void k_sn3_0_pulp_dense_bias_add_relu(void *args) {
+  /* fused: dense+bias_add+relu; tiles [0,5)/16;
+   * L1 mapping: order=ws f_spatial=1 f_channel=1 footprint=52640B */
+  MATCHA_KERNEL_BODY(sn3_0_pulp_dense_bias_add_relu);
+}
+void k_sn4_0_pulp_dense_bias_add_relu(void *args) {
+  /* fused: dense+bias_add+relu; tiles [0,4)/16;
+   * L1 mapping: order=ws f_spatial=1 f_channel=1 footprint=8576B */
+  MATCHA_KERNEL_BODY(sn4_0_pulp_dense_bias_add_relu);
+}
+void k_sn5_0_pulp_dense_bias_add_relu(void *args) {
+  /* fused: dense+bias_add+relu; tiles [0,5)/16;
+   * L1 mapping: order=ws f_spatial=1 f_channel=1 footprint=10656B */
+  MATCHA_KERNEL_BODY(sn5_0_pulp_dense_bias_add_relu);
+}
+void k_sn6_0_pulp_dense_bias_add_relu(void *args) {
+  /* fused: dense+bias_add+relu; tiles [0,4)/16;
+   * L1 mapping: order=ws f_spatial=1 f_channel=1 footprint=8576B */
+  MATCHA_KERNEL_BODY(sn6_0_pulp_dense_bias_add_relu);
+}
+void k_sn7_0_pulp_dense_bias_add_relu(void *args) {
+  /* fused: dense+bias_add+relu; tiles [0,5)/16;
+   * L1 mapping: order=ws f_spatial=1 f_channel=1 footprint=10656B */
+  MATCHA_KERNEL_BODY(sn7_0_pulp_dense_bias_add_relu);
+}
+void k_sn8_0_pulp_dense_bias_add_relu(void *args) {
+  /* fused: dense+bias_add+relu; tiles [0,4)/16;
+   * L1 mapping: order=ws f_spatial=1 f_channel=1 footprint=8576B */
+  MATCHA_KERNEL_BODY(sn8_0_pulp_dense_bias_add_relu);
+}
+void k_sn9_0_pulp_dense_bias_add_relu(void *args) {
+  /* fused: dense+bias_add+relu; tiles [0,5)/16;
+   * L1 mapping: order=ws f_spatial=1 f_channel=1 footprint=10656B */
+  MATCHA_KERNEL_BODY(sn9_0_pulp_dense_bias_add_relu);
+}

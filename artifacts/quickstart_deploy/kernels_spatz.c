@@ -1,0 +1,58 @@
+/* Kernels for device `spatz` with ZigZag L1 tiling baked in */
+#include "matcha_platform.h"
+
+void k_sn1_0_spatz_dense_bias_add(void *args) {
+  /* fused: dense+bias_add; tiles [4,8)/8;
+   * L1 mapping: order=ws f_spatial=1 f_channel=1 footprint=1296B */
+  MATCHA_KERNEL_BODY(sn1_0_spatz_dense_bias_add);
+}
+void k_sn10_0_spatz_dense_bias_add(void *args) {
+  /* fused: dense+bias_add; tiles [5,14)/16;
+   * L1 mapping: order=os f_spatial=1 f_channel=2 footprint=47056B */
+  MATCHA_KERNEL_BODY(sn10_0_spatz_dense_bias_add);
+}
+void k_sn11_0_spatz_dense_bias_add_relu(void *args) {
+  /* fused: dense+bias_add+relu; tiles [5,14)/16;
+   * L1 mapping: order=os f_spatial=1 f_channel=2 footprint=47504B */
+  MATCHA_KERNEL_BODY(sn11_0_spatz_dense_bias_add_relu);
+}
+void k_sn12_0_spatz_dense_bias_add_relu(void *args) {
+  /* fused: dense+bias_add+relu; tiles [4,15)/16;
+   * L1 mapping: order=ws f_spatial=1 f_channel=1 footprint=23136B */
+  MATCHA_KERNEL_BODY(sn12_0_spatz_dense_bias_add_relu);
+}
+void k_sn13_0_spatz_dense_bias_add_relu(void *args) {
+  /* fused: dense+bias_add+relu; tiles [5,14)/16;
+   * L1 mapping: order=ws f_spatial=1 f_channel=1 footprint=18976B */
+  MATCHA_KERNEL_BODY(sn13_0_spatz_dense_bias_add_relu);
+}
+void k_sn14_0_spatz_dense_bias_add_relu(void *args) {
+  /* fused: dense+bias_add+relu; tiles [4,14)/16;
+   * L1 mapping: order=ws f_spatial=1 f_channel=1 footprint=21056B */
+  MATCHA_KERNEL_BODY(sn14_0_spatz_dense_bias_add_relu);
+}
+void k_sn15_0_spatz_dense_bias_add_relu(void *args) {
+  /* fused: dense+bias_add+relu; tiles [0,6)/16;
+   * L1 mapping: order=ws f_spatial=1 f_channel=1 footprint=976B */
+  MATCHA_KERNEL_BODY(sn15_0_spatz_dense_bias_add_relu);
+}
+void k_sn16_0_spatz_dense_bias_add_relu(void *args) {
+  /* fused: dense+bias_add+relu; tiles [5,14)/16;
+   * L1 mapping: order=ws f_spatial=1 f_channel=1 footprint=18976B */
+  MATCHA_KERNEL_BODY(sn16_0_spatz_dense_bias_add_relu);
+}
+void k_sn17_0_spatz_dense_bias_add_relu(void *args) {
+  /* fused: dense+bias_add+relu; tiles [4,14)/16;
+   * L1 mapping: order=ws f_spatial=1 f_channel=1 footprint=21056B */
+  MATCHA_KERNEL_BODY(sn17_0_spatz_dense_bias_add_relu);
+}
+void k_sn18_0_spatz_dense_bias_add_relu(void *args) {
+  /* fused: dense+bias_add+relu; tiles [5,14)/16;
+   * L1 mapping: order=ws f_spatial=1 f_channel=1 footprint=18976B */
+  MATCHA_KERNEL_BODY(sn18_0_spatz_dense_bias_add_relu);
+}
+void k_sn28_0_spatz_dense(void *args) {
+  /* fused: dense; tiles [9,16)/16;
+   * L1 mapping: order=ws f_spatial=1 f_channel=1 footprint=1024B */
+  MATCHA_KERNEL_BODY(sn28_0_spatz_dense);
+}

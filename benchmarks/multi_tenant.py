@@ -2,16 +2,23 @@
 story generalized from intra-model to inter-model concurrency).
 
 For each model mix, N MLPerf-Tiny models are compiled onto the Carfield
-SoC twice:
+SoC three ways:
 
   * sequential — each model compiled alone, run back-to-back
-    (sum of single-model makespans), and
-  * co-scheduled — ``compile_multi``: merged execution DAGs under
-    per-device mutual exclusion, shared budgeted L2, double-buffered DMA.
+    (sum of single-model makespans),
+  * PR-1 co-scheduled — ``compile_multi`` without re-tiling: merged
+    execution DAGs of the compile-alone tilings under per-device mutual
+    exclusion, shared budgeted L2, double-buffered DMA, and
+  * re-tiled co-scheduled — the full pipeline: stage 1 re-run per tenant
+    under contention-adjusted budgets (shrunk L2 slice, co-resident device
+    load, congested DMA) plus complementary candidate selection, with the
+    exact shared-resource model arbitrating.
 
-Reported per mix: per-tenant latency (completion time inside the round),
-aggregate throughput (inferences/s across the round), per-device
-utilization, and the co-scheduling speedup.
+Reported per mix: per-tenant latency, aggregate throughput, per-device
+utilization, the two co-scheduling speedups, and the shared-L2 eviction
+counts.  A final forced-contention section shrinks the shared L2 until
+the compile-alone tilings thrash, showing re-tiling reducing
+``SharedL2Allocator`` evictions while winning the makespan.
 
     PYTHONPATH=src python -m benchmarks.multi_tenant [--fast]
 """
@@ -23,8 +30,10 @@ import sys
 
 from repro.core.api import compile_multi
 from repro.core.runtime import multi_plan_matches_oracle
+from repro.core.schedule import _search_coschedule, default_budgets
 from repro.models import edge
 from repro.soc.carfield import carfield_patterns, carfield_soc
+from repro.soc.testbed import FORCED_L2_KIB, forced_contention_setup
 
 MIXES = [
     ("autoencoder", "ds_cnn"),
@@ -32,7 +41,6 @@ MIXES = [
     ("ds_cnn", "mobilenet"),
     ("autoencoder", "ds_cnn", "resnet"),
 ]
-
 
 def run(mixes=MIXES, check_numerics: bool = True, verbose: bool = True,
         time_budget_s: float = 2.0):
@@ -45,8 +53,9 @@ def run(mixes=MIXES, check_numerics: bool = True, verbose: bool = True,
         if check_numerics:
             assert multi_plan_matches_oracle(mc.plan)
         co_ms = mc.runtime_ms
+        pr1_ms = soc.cycles_to_ms(mc.baseline_makespan_cycles)
         seq_ms = soc.cycles_to_ms(mc.sequential_makespan_cycles)
-        rows.append((mix, mc, co_ms, seq_ms))
+        rows.append((mix, mc, co_ms, pr1_ms, seq_ms))
         if verbose:
             print(f"\nmix: {' + '.join(mix)}")
             print(f"  {'model':18s} {'alone (ms)':>11s} "
@@ -57,9 +66,16 @@ def run(mixes=MIXES, check_numerics: bool = True, verbose: bool = True,
                       f"{mc.tenant_latency_ms(i):14.2f}")
             thr_co = len(mix) / (co_ms / 1e3)
             thr_seq = len(mix) / (seq_ms / 1e3)
+            gain = (1.0 - co_ms / pr1_ms) * 100.0 if pr1_ms else 0.0
             print(f"  round makespan: sequential {seq_ms:.2f} ms  "
-                  f"co-scheduled {co_ms:.2f} ms  "
-                  f"(speedup {mc.speedup:.2f}x)")
+                  f"PR-1 co-scheduled {pr1_ms:.2f} ms  "
+                  f"re-tiled {co_ms:.2f} ms "
+                  f"({'+' if gain >= 0 else ''}{gain:.1f}% vs PR-1, "
+                  f"{mc.speedup:.2f}x vs sequential, "
+                  f"retiled={mc.retiled})")
+            print(f"  L2 evictions: PR-1 plan "
+                  f"{mc.baseline_plan.memory.evictions}  re-tiled plan "
+                  f"{mc.plan.memory.evictions}")
             print(f"  aggregate throughput: {thr_seq:.1f} -> {thr_co:.1f} "
                   f"inf/s")
             util = mc.plan.utilization()
@@ -73,7 +89,49 @@ def run(mixes=MIXES, check_numerics: bool = True, verbose: bool = True,
                 f"{d}={u:.0%}" for d, u in sorted(seq_util.items())))
             print("  utilization (co-scheduled): " + "  ".join(
                 f"{d}={u:.0%}" for d, u in sorted(util.items())))
+    if verbose:
+        improved = sum(1 for _, mc, co, pr1, _ in rows
+                       if mc.plan.makespan < mc.baseline_makespan_cycles)
+        print(f"\nre-tiled <= PR-1 on {len(rows)}/{len(rows)} mixes, "
+              f"strictly improved on {improved}")
     return rows
+
+
+# ---------------------------------------------------------------------------
+# Forced contention: shrunk shared L2, sole-occupancy tiles thrash
+# ---------------------------------------------------------------------------
+
+
+def run_forced_contention(verbose: bool = True):
+    """Two deep dense chains on a 2-accelerator SoC whose shared L2 holds
+    only ~3 of the weight tensors (``repro.soc.testbed``, shared with
+    tests/test_retile_contention.py): the compile-alone tilings split
+    every layer across both accelerators, stretching weight residency
+    across the co-tenant's interleaved kernels, and the co-schedule pays
+    contention evictions.  Re-tiling under the shrunk per-tenant budgets
+    wins the makespan with fewer SharedL2Allocator evictions."""
+    soc, pats, graphs = forced_contention_setup()
+    mc = compile_multi(graphs, soc, pats, requested_tiles=8,
+                       time_budget_s=0.5)
+    forced, err = _search_coschedule([cm.tiled for cm in mc.singles], soc,
+                                     default_budgets(soc, 2), 3, 0)
+    if verbose:
+        print(f"\nforced contention (shared L2 = {FORCED_L2_KIB} KiB, "
+              f"2 tenants x 7 dense layers of 18 KiB weights):")
+        print(f"  sequential concat:                    "
+              f"{mc.sequential_makespan_cycles:10.0f} cycles")
+        if forced is None:
+            print(f"  co-schedule of compile-alone tilings: infeasible "
+                  f"({err})")
+        else:
+            print(f"  co-schedule of compile-alone tilings: "
+                  f"{forced.makespan:10.0f} cycles, "
+                  f"{forced.memory.evictions} L2 evictions")
+        print(f"  contention-re-tiled co-schedule:      "
+              f"{mc.plan.makespan:10.0f} cycles, "
+              f"{mc.plan.memory.evictions} L2 evictions "
+              f"(retiled={mc.retiled})")
+    return mc, forced
 
 
 def main(argv=None) -> None:
@@ -82,9 +140,10 @@ def main(argv=None) -> None:
                     help="skip the numeric allclose re-validation")
     args = ap.parse_args(argv)
     print("=" * 72)
-    print("Multi-tenant co-scheduling — co-scheduled vs. sequential")
+    print("Multi-tenant co-scheduling — re-tiled vs. PR-1 vs. sequential")
     print("=" * 72)
     run(check_numerics=not args.fast, verbose=True)
+    run_forced_contention(verbose=True)
 
 
 if __name__ == "__main__":

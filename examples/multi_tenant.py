@@ -37,9 +37,11 @@ def main() -> None:
         alone = soc.cycles_to_ms(mc.singles[i].plan.makespan)
         print(f"{g.name:14s} {alone:11.2f} {mc.tenant_latency_ms(i):18.2f}")
     seq_ms = soc.cycles_to_ms(mc.sequential_makespan_cycles)
+    pr1_ms = soc.cycles_to_ms(mc.baseline_makespan_cycles)
     print(f"\nround makespan: {seq_ms:.2f} ms sequential -> "
-          f"{mc.runtime_ms:.2f} ms co-scheduled "
-          f"({mc.speedup:.2f}x, L2 budgets = "
+          f"{pr1_ms:.2f} ms co-scheduled -> "
+          f"{mc.runtime_ms:.2f} ms contention-re-tiled "
+          f"({mc.speedup:.2f}x, retiled={mc.retiled}, L2 budgets = "
           f"{[b // 1024 for b in mc.plan.budgets]} KiB)")
     util = mc.plan.utilization()
     print("utilization: " + "  ".join(f"{d}={u:.0%}"

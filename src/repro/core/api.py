@@ -29,9 +29,9 @@ from repro.core.ir import Graph
 from repro.core.patterns import Pattern
 from repro.core.rewrite import TiledGraph, rewrite
 from repro.core.schedule import (ExecutionPlan, MultiExecutionPlan,
-                                 schedule, schedule_multi, validate_schedule,
-                                 validate_multi_schedule)
-from repro.core.tiling import TilingSolution, optimize_tiling
+                                 contention_hints, schedule, schedule_multi,
+                                 validate_schedule, validate_multi_schedule)
+from repro.core.tiling import Contention, TilingSolution, optimize_tiling
 from repro.soc.device import SoC
 
 MODES = ("tvm", "match", "matcha_nt", "matcha")
@@ -46,6 +46,12 @@ class CompiledModel:
     tiled: TiledGraph
     plan: ExecutionPlan
     candidates: Dict[str, float]       # candidate label -> exact makespan
+    # every feasible stage-1 candidate's exact stage-2 plan (including the
+    # winner): runner-up tilings that lose compile-alone can still be the
+    # co-optimal choice in a multi-tenant compile (complementary device
+    # affinities), so compile_multi re-examines them
+    alt_plans: Dict[str, ExecutionPlan] = dataclasses.field(
+        default_factory=dict, repr=False)
 
     @property
     def makespan_cycles(self) -> float:
@@ -131,6 +137,7 @@ def compile_model(g: Graph, soc: SoC, patterns: Sequence[Pattern],
         trial.append(("heft", requested_tiles, True))
         trial.append(("heft", requested_tiles, False))   # join-free chains
 
+    alt_plans: Dict[str, ExecutionPlan] = {}
     for m, tiles, ht in trial:
         if m == "heft":
             got = _heft_candidate(g, soc, patterns, max(tiles, 1),
@@ -143,6 +150,7 @@ def compile_model(g: Graph, soc: SoC, patterns: Sequence[Pattern],
         sol, tg, plan = got
         label = f"{m}@T{tiles}" + ("" if ht else "!h")
         candidates[label] = plan.makespan
+        alt_plans[label] = plan
         if best is None or plan.makespan < best[2].makespan:
             best = (sol, tg, plan)
             best_label = label
@@ -152,7 +160,8 @@ def compile_model(g: Graph, soc: SoC, patterns: Sequence[Pattern],
     sol, tg, plan = best
     plan.mode = mode
     return CompiledModel(graph=g, soc=soc, mode=mode, solution=sol,
-                         tiled=tg, plan=plan, candidates=candidates)
+                         tiled=tg, plan=plan, candidates=candidates,
+                         alt_plans=alt_plans)
 
 
 # ---------------------------------------------------------------------------
@@ -166,13 +175,19 @@ class MultiCompiledModel:
 
     ``singles`` holds the per-model compilations (each model's best tiling
     and its compile-alone schedule — the sequential baseline); ``plan`` is
-    the merged resource-constrained co-schedule over the same tiled graphs.
+    the merged resource-constrained co-schedule, whose tilings may be the
+    compile-alone ones or a contention-aware re-tiling (whichever gave the
+    better makespan); ``baseline_plan`` is the co-schedule restricted to
+    the compile-alone tilings (the pre-re-tiling behaviour).
     """
     graphs: List[Graph]
     soc: SoC
     mode: str
     singles: List[CompiledModel]
     plan: MultiExecutionPlan
+    baseline_plan: Optional[MultiExecutionPlan] = None
+    _tenant_plans: Optional[List[Optional[ExecutionPlan]]] = \
+        dataclasses.field(default=None, repr=False)
 
     @property
     def makespan_cycles(self) -> float:
@@ -188,6 +203,19 @@ class MultiCompiledModel:
         return sum(cm.plan.makespan for cm in self.singles)
 
     @property
+    def baseline_makespan_cycles(self) -> float:
+        """Co-scheduled makespan with the compile-alone tilings (the PR-1
+        behaviour, before contention-aware re-tiling)."""
+        return (self.baseline_plan.makespan if self.baseline_plan is not None
+                else self.plan.makespan)
+
+    @property
+    def retiled(self) -> bool:
+        """True when the winning co-schedule uses re-tiled graphs."""
+        return any(tg is not cm.tiled
+                   for tg, cm in zip(self.plan.tenants, self.singles))
+
+    @property
     def speedup(self) -> float:
         return (self.sequential_makespan_cycles / self.plan.makespan
                 if self.plan.makespan else 1.0)
@@ -196,16 +224,149 @@ class MultiCompiledModel:
         """Completion time of tenant ``i`` inside the co-schedule."""
         return self.soc.cycles_to_ms(self.plan.tenant_makespans[i])
 
+    def tenant_plan(self, i: int) -> ExecutionPlan:
+        """Single-model schedule over the SAME tiled graph tenant ``i``
+        uses inside the co-schedule — the bitwise numeric reference for the
+        interleaved execution.  Equals ``singles[i].plan`` unless that
+        tenant was re-tiled (then a fresh schedule is built and cached)."""
+        if self.plan.tenants[i] is self.singles[i].tiled:
+            return self.singles[i].plan
+        if self._tenant_plans is None:
+            self._tenant_plans = [None] * len(self.graphs)
+        if self._tenant_plans[i] is None:
+            self._tenant_plans[i] = schedule(self.plan.tenants[i], self.soc,
+                                             self.mode, restarts=1,
+                                             anneal_iters=0)
+        return self._tenant_plans[i]
+
+    def plan_for(self, active: Sequence[int]
+                 ) -> Optional[MultiExecutionPlan]:
+        """Co-schedule covering exactly the ``active`` tenants, or None if
+        no pre-compiled plan matches that occupancy (the caller then falls
+        back to compile-alone plans).  Today only the full house is
+        pre-compiled; subset co-schedules are a ROADMAP follow-up."""
+        if sorted(set(active)) == list(range(len(self.graphs))):
+            return self.plan
+        return None
+
     def run(self, inputs_list, params_list):
         from repro.core.runtime import execute_multi_plan
         return execute_multi_plan(self.plan, inputs_list, params_list)
+
+
+def _tiling_sig(tg: TiledGraph) -> tuple:
+    return tuple(sorted((s.device, s.op_names, s.tile_lo, s.tile_hi)
+                        for s in tg.supernodes))
+
+
+def _retile_candidate_sets(graphs: Sequence[Graph], soc: SoC,
+                           patterns: Sequence[Pattern],
+                           hints: Sequence[Contention],
+                           singles: Sequence[CompiledModel], mode: str,
+                           requested_tiles: int, time_budget_s: float,
+                           max_complementary: int = 3
+                           ) -> List[List[TiledGraph]]:
+    """Joint tiling candidate sets for contention-aware re-tiling.
+
+    Three sources, all arbitrated later by the exact shared-resource model
+    in ``schedule_multi``:
+
+      (a) *contention re-runs* — stage 1 per tenant under its
+          :class:`Contention` context (shrunk L2 slice, congested DMA,
+          loaded devices), applied symmetrically (every tenant re-tiled)
+          and asymmetrically (one tenant re-tiled against the others'
+          compile-alone tilings — simultaneous best-response moves all
+          tenants off the same devices and helps nobody);
+      (b) the contention-priced *all-or-nothing corner* — fewest
+          concurrent chains, least shared-L2 pressure;
+      (c) *complementary selections* — cross-products of each tenant's
+          compile-alone candidate pool (``CompiledModel.alt_plans``:
+          runner-up tilings that lost alone can pair into a better mix),
+          ranked by the per-device congestion proxy
+          max_dev(sum_i busy_i[dev]) and capped at ``max_complementary``.
+
+    A tenant whose re-run fails keeps its compile-alone tiling so every
+    set stays schedulable; sets identical to the compile-alone tilings
+    (or to each other) are dropped."""
+    import itertools
+
+    base_tgs = [cm.tiled for cm in singles]
+
+    def sig_of(tgs):
+        return tuple(_tiling_sig(tg) for tg in tgs)
+
+    sets: List[List[TiledGraph]] = []
+    seen_sigs = {sig_of(base_tgs)}       # skip no-op re-tilings
+
+    def add(tgs) -> None:
+        sig = sig_of(tgs)
+        if sig not in seen_sigs:
+            seen_sigs.add(sig)
+            sets.append(list(tgs))
+
+    # (a) + (b): contention-priced stage-1 re-runs (the caller guarantees
+    # mode is one of the asynchronous matcha modes)
+    assert mode in ("matcha", "matcha_nt"), mode
+    stage1 = mode
+    variants = [stage1] + (["matcha_nt"] if stage1 != "matcha_nt" else [])
+    retiled: Dict[str, List[Optional[TiledGraph]]] = {}
+    for m in variants:
+        row: List[Optional[TiledGraph]] = []
+        for i, g in enumerate(graphs):
+            try:
+                sol = optimize_tiling(g, soc, patterns, mode=m,
+                                      requested_tiles=requested_tiles,
+                                      time_budget_s=time_budget_s,
+                                      contention=hints[i])
+                row.append(rewrite(g, soc, sol))
+            except Exception:
+                row.append(None)
+        retiled[m] = row
+        add([tg if tg is not None else base_tgs[i]
+             for i, tg in enumerate(row)])
+    for i, tg in enumerate(retiled[stage1]):      # asymmetric moves
+        if tg is not None:
+            add([tg if j == i else base_tgs[j]
+                 for j in range(len(graphs))])
+
+    # (c): complementary selections from the compile-alone pools
+    options: List[List[ExecutionPlan]] = []
+    for cm in singles:
+        uniq: List[ExecutionPlan] = []
+        opt_seen = set()
+        for _, p in sorted(cm.alt_plans.items(),
+                           key=lambda kv: kv[1].makespan):
+            s = _tiling_sig(p.tiled)
+            if s not in opt_seen:
+                opt_seen.add(s)
+                uniq.append(p)
+        options.append(uniq[:3])
+
+    def congestion(plans) -> float:
+        load: Dict[str, float] = {}
+        for p in plans:
+            for r, b in p.busy.items():
+                load[r] = load.get(r, 0.0) + b
+        return max(load.values(), default=0.0)
+
+    if all(options) and len(graphs) <= 6:
+        combos = sorted(itertools.product(*options), key=congestion)
+        picked = 0
+        for plans in combos:
+            if picked >= max_complementary:
+                break
+            before = len(sets)
+            add([p.tiled for p in plans])
+            picked += len(sets) - before
+    return sets
 
 
 def compile_multi(graphs: Sequence[Graph], soc: SoC,
                   patterns: Sequence[Pattern], mode: str = "matcha",
                   budgets: Optional[Sequence[int]] = None,
                   requested_tiles: int = 16,
-                  time_budget_s: float = 8.0) -> MultiCompiledModel:
+                  time_budget_s: float = 8.0,
+                  retile_for_contention: bool = True) -> MultiCompiledModel:
     """Compile N independent models into one multi-tenant co-schedule.
 
     Stage 1 runs per model exactly as :func:`compile_model` (each model
@@ -213,18 +374,43 @@ def compile_multi(graphs: Sequence[Graph], soc: SoC,
     merges the N execution DAGs under shared-resource constraints — per-
     device mutual exclusion, one DMA engine with double-buffered planned
     loads, and a shared L2 with per-tenant budgets (``budgets`` defaults to
-    an equal split).  The sequential concatenation of the single-model
-    schedules is always a candidate, so the co-scheduled makespan is never
-    worse than the compile-each-model-alone baseline."""
+    an equal split).
+
+    With ``retile_for_contention`` (the default) the merged schedule is
+    then summarized into per-tenant :class:`Contention` contexts
+    (L2 slice, co-resident device load, DMA congestion) and stage 1 is
+    re-run per tenant under those shrunk budgets; ``schedule_multi``
+    evaluates the compile-alone tilings and every re-tiled candidate set
+    under the exact shared-resource model and keeps the better makespan.
+    The sequential concatenation of the single-model schedules remains a
+    candidate throughout, so the final makespan is never worse than the
+    re-tiling-free co-schedule, which is never worse than the
+    compile-each-model-alone baseline."""
     assert len(graphs) >= 1
     singles = [compile_model(g, soc, patterns, mode=mode,
                              requested_tiles=requested_tiles,
                              time_budget_s=time_budget_s) for g in graphs]
-    plan = schedule_multi([cm.tiled for cm in singles], soc,
-                          budgets=budgets,
-                          singles=[cm.plan for cm in singles])
+    base_tgs = [cm.tiled for cm in singles]
+    single_plans = [cm.plan for cm in singles]
+    baseline = schedule_multi(base_tgs, soc, budgets=budgets,
+                              singles=single_plans)
+    plan = baseline
+    # tvm / match model strictly sequential host-centric baselines — the
+    # ablation must not re-tile them onto accelerators
+    if retile_for_contention and len(graphs) > 1 and \
+            mode in ("matcha", "matcha_nt"):
+        hints = contention_hints(baseline, soc)
+        alt_sets = _retile_candidate_sets(graphs, soc, patterns, hints,
+                                          singles, mode, requested_tiles,
+                                          time_budget_s)
+        if alt_sets:
+            plan = schedule_multi(base_tgs, soc, budgets=budgets,
+                                  alt_tgs=alt_sets, incumbent=baseline)
+            if plan.makespan > baseline.makespan:      # determinism guard
+                plan = baseline
     errs = validate_multi_schedule(plan)
     if errs:
         raise RuntimeError(f"infeasible co-schedule: {errs[:5]}")
     return MultiCompiledModel(graphs=list(graphs), soc=soc, mode=mode,
-                              singles=singles, plan=plan)
+                              singles=singles, plan=plan,
+                              baseline_plan=baseline)

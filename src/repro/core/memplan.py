@@ -54,6 +54,10 @@ class L2Allocator:
         self.history: List[Allocation] = []
         self.peak = 0
         self._used = 0
+        # capacity-forced swap-outs; incremented by the scheduler each time
+        # it evicts a victim to satisfy a reservation (the contention metric
+        # the multi-tenant benchmark reports)
+        self.evictions = 0
 
     def used(self) -> int:
         return self._used
@@ -237,6 +241,7 @@ class MemoryPlan:
     allocations: List[Allocation]
     swaps: List[SwapOp]
     peak: int
+    evictions: int = 0            # capacity-forced swap-outs (L2 -> L3)
 
     def static_tensors(self) -> List[str]:
         return [a.tensor for a in self.allocations if a.strategy == "static"]

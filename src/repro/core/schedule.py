@@ -344,6 +344,7 @@ def _reserve_slots(st, needs: List[Tuple[str, int, str]], now: float,
         vb = st.alloc.live[v].size
         t_avail = st.dma_transfer(v, "out", t_avail, vb)
         st.alloc.free(v, t_avail)
+        st.alloc.evictions += 1
         st.state[v] = "l3"
     for t, b, strat in needs:
         a = do_alloc(t, int(b), strat, t_avail)
@@ -489,7 +490,8 @@ def simulate(tg: TiledGraph, soc: SoC, sequential: bool,
     makespan = max((n.end for n in nodes.values()), default=0.0)
     st.alloc.finish(makespan)
     mem = MemoryPlan(capacity=soc.l2.size, allocations=st.alloc.history,
-                     swaps=st.swaps, peak=st.alloc.peak)
+                     swaps=st.swaps, peak=st.alloc.peak,
+                     evictions=st.alloc.evictions)
     order.sort(key=lambda n: nodes[n].start)
     busy = {r: b for r, b in st.busy.items() if r != "mutex"}
     return ExecutionPlan(mode="", tiled=tg, nodes=nodes, order=order,
@@ -850,7 +852,8 @@ def simulate_multi(tgs: Sequence[TiledGraph], soc: SoC,
     makespan = max((n.end for n in nodes.values()), default=0.0)
     st.alloc.finish(makespan)
     mem = MemoryPlan(capacity=soc.l2.size, allocations=st.alloc.history,
-                     swaps=st.swaps, peak=st.alloc.peak)
+                     swaps=st.swaps, peak=st.alloc.peak,
+                     evictions=st.alloc.evictions)
     order.sort(key=lambda n: nodes[n].start)
     tenant_ms = [0.0] * len(tgs)
     for n in nodes.values():
@@ -905,28 +908,26 @@ def concat_plans(singles: Sequence[ExecutionPlan], soc: SoC,
     order = sorted(nodes, key=lambda n: nodes[n].start)
     mem = MemoryPlan(capacity=soc.l2.size, allocations=allocs,
                      swaps=swaps,
-                     peak=max((p.memory.peak for p in singles), default=0))
+                     peak=max((p.memory.peak for p in singles), default=0),
+                     evictions=sum(p.memory.evictions for p in singles))
     return MultiExecutionPlan(tenants=tgs, nodes=nodes, order=order,
                               dmas=dmas, memory=mem, makespan=offset,
                               busy=busy, tenant_makespans=tenant_ms,
                               budgets=budgets, mode="sequential")
 
 
-def schedule_multi(tgs: Sequence[TiledGraph], soc: SoC,
-                   budgets: Optional[Sequence[int]] = None,
-                   singles: Optional[Sequence[ExecutionPlan]] = None,
-                   restarts: int = 3, seed: int = 0) -> MultiExecutionPlan:
-    """Search for a minimum-makespan co-schedule of N tiled graphs.
-
-    Priority schemes: merged-DAG upward rank, per-tenant-interleaved rank,
-    topological index, and seeded perturbations — each simulated greedily
-    under the shared-resource model; the best feasible plan wins.  When the
-    single-model plans are supplied, the sequential concatenation is a
-    candidate too, so the result is never worse than running each model
-    alone back-to-back."""
-    budgets = _check_budgets(budgets, len(tgs)) if budgets is not None \
-        else default_budgets(soc, len(tgs))
-    dag = build_multi_dag(tgs, soc, budgets)
+def _search_coschedule(tgs: Sequence[TiledGraph], soc: SoC,
+                       budgets: Sequence[int], restarts: int, seed: int
+                       ) -> Tuple[Optional[MultiExecutionPlan],
+                                  Optional[Exception]]:
+    """Priority-scheme search for ONE candidate tiling set: merged-DAG
+    upward rank, per-tenant-normalized rank, topological index, and seeded
+    perturbations — each simulated greedily under the shared-resource
+    model; the best feasible plan wins."""
+    try:
+        dag = build_multi_dag(tgs, soc, budgets)
+    except (MemoryError, RuntimeError, ValueError) as e:
+        return None, e
     rank = _upward_rank(dag)
     topo_idx = {n: float(-i) for i, n in enumerate(_topo(dag))}
     # fairness scheme: normalize each tenant's ranks so no tenant's whole
@@ -955,6 +956,43 @@ def schedule_multi(tgs: Sequence[TiledGraph], soc: SoC,
             continue
         if best is None or plan.makespan < best.makespan:
             best = plan
+    return best, last_err
+
+
+def schedule_multi(tgs: Sequence[TiledGraph], soc: SoC,
+                   budgets: Optional[Sequence[int]] = None,
+                   singles: Optional[Sequence[ExecutionPlan]] = None,
+                   restarts: int = 3, seed: int = 0,
+                   alt_tgs: Optional[Sequence[Sequence[TiledGraph]]] = None,
+                   incumbent: Optional[MultiExecutionPlan] = None
+                   ) -> MultiExecutionPlan:
+    """Search for a minimum-makespan co-schedule of N tiled graphs.
+
+    ``tgs`` holds each tenant's compile-alone tiling; ``alt_tgs`` supplies
+    alternative per-tenant tiling sets (e.g. contention-aware re-tilings
+    from ``core.api.compile_multi``) that are searched under the same
+    shared-resource model.  An alternative replaces the primary only on a
+    *strictly* better makespan, so with a fixed seed the result is never
+    worse than scheduling the compile-alone tilings.  When the
+    single-model plans are supplied, the sequential concatenation is a
+    candidate too, so the result is never worse than running each model
+    alone back-to-back.  ``incumbent`` injects a previously computed plan
+    for ``tgs`` (same budgets/seed) as the plan to beat, skipping the
+    deterministic re-search of the primary set."""
+    budgets = _check_budgets(budgets, len(tgs)) if budgets is not None \
+        else default_budgets(soc, len(tgs))
+    if incumbent is not None:
+        best, last_err = incumbent, None
+    else:
+        best, last_err = _search_coschedule(tgs, soc, budgets, restarts,
+                                            seed)
+    for alt in (alt_tgs or []):
+        cand, err = _search_coschedule(alt, soc, budgets, restarts, seed)
+        if cand is None:
+            last_err = err or last_err
+            continue
+        if best is None or cand.makespan < best.makespan - 1e-9:
+            best = cand
     if singles is not None:
         seq = concat_plans(singles, soc, budgets)
         if best is None or seq.makespan < best.makespan:
@@ -992,3 +1030,45 @@ def validate_multi_schedule(plan: MultiExecutionPlan) -> List[str]:
         if plan.tenant_makespans[i] > plan.makespan + 1e-6:
             errs.append(f"tenant {i} finishes after the global makespan")
     return errs
+
+
+def _tenant_of(namespaced: str) -> int:
+    """Tenant index from a namespaced node/tensor name ``t{i}/...``."""
+    return int(namespaced[1:namespaced.index("/")])
+
+
+def contention_hints(plan: MultiExecutionPlan, soc: SoC) -> List:
+    """Summarize a merged co-schedule into per-tenant
+    :class:`repro.core.tiling.Contention` contexts for re-tiling.
+
+    For tenant ``i``: the L2 slice is its ``SharedL2Allocator`` budget; the
+    device-affinity hint is the busy fraction its *co-residents* put on
+    each device; the DMA congestion factor is 1 + the co-residents' share
+    of the single system DMA engine (their traffic serializes with this
+    tenant's planned loads and swaps)."""
+    from repro.core.tiling import Contention
+    n = len(plan.tenants)
+    mk = plan.makespan or 1.0
+    busy: List[Dict[str, float]] = [{} for _ in range(n)]
+    dma_busy = [0.0] * n      # explicit load/store nodes + inline transfers
+    for nd in plan.nodes.values():
+        if nd.resource == DMA:
+            dma_busy[nd.tenant] += nd.duration
+            continue
+        busy[nd.tenant][nd.resource] = \
+            busy[nd.tenant].get(nd.resource, 0.0) + nd.duration
+    for d in plan.dmas:
+        dma_busy[_tenant_of(d.tensor)] += d.end - d.start
+    hints = []
+    for i in range(n):
+        load: Dict[str, float] = {}
+        for j in range(n):
+            if j == i:
+                continue
+            for dev, b in busy[j].items():
+                load[dev] = load.get(dev, 0.0) + b / mk
+        others_dma = sum(b for j, b in enumerate(dma_busy) if j != i) / mk
+        hints.append(Contention(l2_budget=plan.budgets[i],
+                                dma_scale=1.0 + others_dma,
+                                device_load=load))
+    return hints

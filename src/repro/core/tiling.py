@@ -31,7 +31,7 @@ of this optimization).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
 from repro.core import cpsolver
 from repro.core.ir import (Graph, Op, max_tiles, needs_input_slice, op_arith,
@@ -40,6 +40,36 @@ from repro.core.patterns import Match, Pattern, find_matches
 from repro.soc.device import SoC
 
 DELTA_HELPER = 400.0  # fixed host cycles per slice/concat invocation
+
+
+@dataclasses.dataclass(frozen=True)
+class Contention:
+    """Co-residency context for contention-aware re-tiling.
+
+    Stage 1 normally prices each model as if it owned the whole SoC; in a
+    multi-tenant compile the co-residents consume device time, shared-L2
+    space, and system-DMA bandwidth.  ``core.schedule.contention_hints``
+    summarizes a merged co-schedule into one of these per tenant, and
+    :func:`optimize_tiling` re-prices Eq. (2) with it (cf. the shared-
+    memory-contention-aware scheduling of Dagli & Belviranli,
+    arXiv:2308.05869):
+
+      * ``l2_budget`` — this tenant's slice of the shared L2 scratchpad
+        (from the ``SharedL2Allocator`` budgets); chains whose working set
+        exceeds it pay the swap round-trip as a fixed charge,
+      * ``dma_scale`` — >= 1; multiplier on every DMA-traffic slope term
+        (co-resident traffic serializes on the shared memory system),
+      * ``device_load`` — co-residents' busy fraction per device in the
+        merged schedule; devices loaded by co-residents get proportionally
+        slower, which steers tile shares toward idler devices (the
+        device-affinity hint).
+    """
+    l2_budget: Optional[int] = None
+    dma_scale: float = 1.0
+    device_load: Mapping[str, float] = dataclasses.field(default_factory=dict)
+
+    def device_scale(self, device: str) -> float:
+        return 1.0 + max(float(self.device_load.get(device, 0.0)), 0.0)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -86,21 +116,31 @@ def _match_tiles(g: Graph, m: Match, requested: int) -> Optional[int]:
     return ts[0]
 
 
-def _match_slope(g: Graph, m: Match, soc: SoC, T: int) -> float:
+def _match_slope(g: Graph, m: Match, soc: SoC, T: int,
+                 contention: Optional[Contention] = None) -> float:
     """Cycles per tile.  The paper's Eq. (2) uses the pure arithmetic model;
     we refine the slope with the ZigZag L1<->L2 traffic term so stage-1
     splits balance under the same cost model stage-2 evaluates (the eta of
     the paper 'absorbs memory-system stalls' — here the absorption is
-    explicit and shape-aware)."""
+    explicit and shape-aware).  Under ``contention`` the DMA-traffic term
+    is congestion-scaled and the whole slope is inflated by the
+    co-residents' load on this device (the device-affinity hint)."""
     from repro.core.zigzag import refined_tile_slope
-    return refined_tile_slope(g, m.ops, m.pattern.device, m.pattern.eta,
-                              T, soc)
+    dma_scale = contention.dma_scale if contention is not None else 1.0
+    slope = refined_tile_slope(g, m.ops, m.pattern.device, m.pattern.eta,
+                               T, soc, dma_scale=dma_scale)
+    if contention is not None:
+        slope *= contention.device_scale(m.pattern.device)
+    return slope
 
 
-def _helper_cost(g: Graph, m: Match, soc: SoC, T: int) -> Tuple[float, float]:
+def _helper_cost(g: Graph, m: Match, soc: SoC, T: int,
+                 contention: Optional[Contention] = None
+                 ) -> Tuple[float, float]:
     """(host cycles per tile, fixed cycles) for slice+concat of a partial
     conv-family match.  Dense/matmul tiling folds into the weight layout
-    (zero runtime overhead, §4)."""
+    (zero runtime overhead, §4).  Helper copies run on the host, so under
+    contention they are slowed by the co-residents' host load."""
     head = g.ops[m.ops[0]]
     tail = g.ops[m.ops[-1]]
     if not needs_input_slice(g, head):
@@ -117,12 +157,38 @@ def _helper_cost(g: Graph, m: Match, soc: SoC, T: int) -> Tuple[float, float]:
     out_bytes_per_tile = g.tensors[tail.output].bytes / T
     slope = (in_bytes_per_tile + halo_bytes + out_bytes_per_tile) \
         / host.copy_bandwidth
+    if contention is not None:
+        slope *= contention.device_scale(host.name)
     return slope, 2.0 * DELTA_HELPER
+
+
+def _spill_delta(g: Graph, m: Match, soc: SoC, c: Contention) -> float:
+    """Fixed charge for instantiating a match whose working set overflows
+    this tenant's shared-L2 slice.  Stage 2 keeps whole tensors L2-resident
+    while a chain executes (tiles are stitched into full buffers), so the
+    relevant footprint is the chain's full activations + params + output;
+    bytes beyond the slice swap to L3 and back through the congested system
+    DMA.  Charged once per instantiation (on the y indicator), which steers
+    the CP away from spreading a constrained mix across many concurrent
+    chains."""
+    if c.l2_budget is None:
+        return 0.0
+    head = g.ops[m.ops[0]]
+    tail = g.ops[m.ops[-1]]
+    ws = float(sum(t.bytes for t in g.act_inputs(head)))
+    for name in m.ops:
+        ws += sum(t.bytes for t in g.param_tensors(g.ops[name]))
+    ws += g.tensors[tail.output].bytes
+    excess = ws - float(c.l2_budget)
+    if excess <= 0.0:
+        return 0.0
+    return 2.0 * excess / soc.dma_l3_bandwidth * c.dma_scale
 
 
 def build_match_vars(g: Graph, soc: SoC, patterns: Sequence[Pattern],
                      requested_tiles: int,
-                     device_allow: Optional[Sequence[str]] = None
+                     device_allow: Optional[Sequence[str]] = None,
+                     contention: Optional[Contention] = None
                      ) -> List[_MVar]:
     mvars: List[_MVar] = []
     seen: Dict[Tuple[str, Tuple[str, ...]], _MVar] = {}
@@ -132,10 +198,13 @@ def build_match_vars(g: Graph, soc: SoC, patterns: Sequence[Pattern],
         T = _match_tiles(g, m, requested_tiles)
         if T is None:
             continue
-        slope = _match_slope(g, m, soc, T)
-        hs, hf = _helper_cost(g, m, soc, T)
+        slope = _match_slope(g, m, soc, T, contention)
+        hs, hf = _helper_cost(g, m, soc, T, contention)
+        delta = m.pattern.delta
+        if contention is not None:
+            delta += _spill_delta(g, m, soc, contention)
         key = (m.pattern.device, m.ops)
-        cand = _MVar(m, T, slope, m.pattern.delta, hs, hf)
+        cand = _MVar(m, T, slope, delta, hs, hf)
         prev = seen.get(key)
         if prev is None or (cand.slope, cand.delta) < (prev.slope, prev.delta):
             seen[key] = cand                 # drop dominated duplicates
@@ -146,16 +215,24 @@ def build_match_vars(g: Graph, soc: SoC, patterns: Sequence[Pattern],
 def optimize_tiling(g: Graph, soc: SoC, patterns: Sequence[Pattern],
                     mode: str = "matcha", requested_tiles: int = 16,
                     node_limit: int = 150_000, time_budget_s: float = 10.0,
-                    host_tiles: bool = True) -> TilingSolution:
+                    host_tiles: bool = True,
+                    contention: Optional[Contention] = None
+                    ) -> TilingSolution:
     """``host_tiles=False`` forbids host tile participation on operators that
     have accelerator coverage (the host still runs unsupported ops via the
     wildcard).  The stage-1 makespan objective cannot see that host work on a
     dependency chain serializes against both accelerators, so the compiler
-    evaluates both variants under the exact stage-2 model (core.api)."""
+    evaluates both variants under the exact stage-2 model (core.api).
+
+    ``contention`` re-prices every match for a multi-tenant co-compile
+    (shrunk L2 slice, congested DMA, loaded devices — see
+    :class:`Contention`); the solution shape is unchanged, only the cost
+    surface the CP optimizes over."""
     assert mode in ("tvm", "match", "matcha_nt", "matcha")
     g.validate()
     device_allow = [soc.host.name] if mode == "tvm" else None
-    mvars = build_match_vars(g, soc, patterns, requested_tiles, device_allow)
+    mvars = build_match_vars(g, soc, patterns, requested_tiles, device_allow,
+                             contention)
     if not host_tiles:
         accel_covered = set()
         for mv in mvars:

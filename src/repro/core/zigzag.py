@@ -114,10 +114,15 @@ def refine_latency(g: Graph, sn: Supernode, soc: SoC) -> float:
 
 
 def refined_tile_slope(g: Graph, op_names, device: str, eta: float, T: int,
-                       soc: SoC) -> float:
+                       soc: SoC, dma_scale: float = 1.0) -> float:
     """Per-tile refined latency (cycles/tile) for a fused chain at full
     coverage — the ZigZag-informed slope the stage-1 CP prices Eq. (2) with.
-    Stays linear in the tile count, which keeps the CP tractable (§3.1)."""
+    Stays linear in the tile count, which keeps the CP tractable (§3.1).
+
+    ``dma_scale`` >= 1 inflates the traffic term only: in a multi-tenant
+    co-compile the shared memory system carries the co-residents' traffic
+    too, so effective DMA bandwidth shrinks while compute is unaffected —
+    the mapping choice then re-balances toward lower-traffic tilings."""
     from repro.core.ir import tile_axis
     dev = soc.device(device)
     arith = sum(op_arith(g, g.ops[n]) for n in op_names)
@@ -138,10 +143,10 @@ def refined_tile_slope(g: Graph, op_names, device: str, eta: float, T: int,
             for order in ("ws", "os"):
                 traffic = (w_b + fk * in_b + out_b) if order == "ws" \
                     else (in_b + fs * w_b + out_b)
-                lat = compute + traffic / dev.dma_bandwidth
+                lat = compute + dma_scale * traffic / dev.dma_bandwidth
                 if best is None or lat < best:
                     best = lat
     if best is None:
         traffic = in_b * _FACTORS[-1] + w_b * _FACTORS[-1] + out_b
-        best = compute + traffic / dev.dma_bandwidth
+        best = compute + dma_scale * traffic / dev.dma_bandwidth
     return best / T

@@ -33,3 +33,14 @@ def use_pallas() -> bool:
 
 def interpret() -> bool:
     return not on_tpu()
+
+
+def tpu_compiler_params(**kwargs):
+    """Construct pallas TPU compiler params across jax versions: the class
+    was ``CompilerParams`` before 0.4.31, ``TPUCompilerParams`` through the
+    0.4/0.5 line (the baked-in toolchain), and ``CompilerParams`` again in
+    newer releases."""
+    from jax.experimental.pallas import tpu as pltpu
+    cls = getattr(pltpu, "TPUCompilerParams", None) \
+        or getattr(pltpu, "CompilerParams")
+    return cls(**kwargs)

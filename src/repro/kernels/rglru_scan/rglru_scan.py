@@ -17,6 +17,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.config import tpu_compiler_params
+
 
 def _rglru_kernel(a_ref, b_ref, h_ref, hout_ref, state_ref, *, L: int):
     ci = pl.program_id(1)
@@ -72,7 +74,7 @@ def rglru_pallas(a: jnp.ndarray, b: jnp.ndarray, chunk: int = 64,
         out_shape=[jax.ShapeDtypeStruct((B * nd, T, bd), a.dtype),
                    jax.ShapeDtypeStruct((B * nd, bd), jnp.float32)],
         scratch_shapes=[pltpu.VMEM((1, bd), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(af, bf)

@@ -183,23 +183,30 @@ class MultiModelEngine:
         return sum(len(q) for q in self.queues)
 
     def step(self) -> List[int]:
-        """Dispatch one serving round; returns the completed request ids."""
+        """Dispatch one serving round; returns the completed request ids.
+
+        The engine passes the round's occupancy (which tenants have queued
+        work) down to the compiled artifact: ``plan_for(active)`` answers
+        with a co-schedule covering exactly that occupancy when one exists
+        (today: the full house, possibly contention-aware re-tiled);
+        otherwise the active tenants run their compile-alone plans."""
         from repro.core.runtime import execute_multi_plan, execute_plan
         active = [q[0] for q in self.queues if q]
         if not active:
             return []
         self._round += 1
         completed: List[int] = []
-        if len(active) == self.n_tenants:
-            # full house: one co-scheduled round, all models concurrent
+        co_plan = self.compiled.plan_for([r.tenant for r in active])
+        if co_plan is not None:
+            # one co-scheduled round, all active models concurrent
             reqs = [q.pop(0) for q in self.queues]
-            outs = execute_multi_plan(self.compiled.plan,
+            outs = execute_multi_plan(co_plan,
                                       [r.inputs for r in reqs], self.params)
             self.co_rounds += 1
-            self.busy_cycles += self.compiled.plan.makespan
+            self.busy_cycles += co_plan.makespan
             for i, r in enumerate(reqs):
                 r.latency_ms = self.soc.cycles_to_ms(
-                    self.compiled.plan.tenant_makespans[i])
+                    co_plan.tenant_makespans[i])
                 r.wait_rounds = self._round - 1 - r.submit_round
                 r.co_scheduled = True
                 self.results[r.rid] = outs[i]
@@ -254,5 +261,7 @@ class MultiModelEngine:
             "solo_dispatches": self.solo_dispatches,
             "throughput_inf_per_s": served / secs if secs else 0.0,
             "speedup_vs_sequential": self.compiled.speedup,
+            "retiled": self.compiled.retiled,
+            "l2_evictions_per_co_round": self.compiled.plan.memory.evictions,
             "per_tenant": per_tenant,
         }

@@ -8,9 +8,6 @@ import pytest
 
 from repro.kernels import autotune
 
-# excluded from the fast CI lane (-m "not slow")
-pytestmark = pytest.mark.slow
-
 
 @pytest.mark.parametrize("M,N,K", [(512, 512, 512), (4096, 1024, 8192),
                                    (256, 12288, 4096)])

@@ -6,9 +6,6 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-# excluded from the fast CI lane (-m "not slow")
-pytestmark = pytest.mark.slow
-
 KEY = jax.random.PRNGKey(0)
 
 

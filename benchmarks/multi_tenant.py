@@ -16,16 +16,25 @@ SoC three ways:
 
 Reported per mix: per-tenant latency, aggregate throughput, per-device
 utilization, the two co-scheduling speedups, and the shared-L2 eviction
-counts.  A final forced-contention section shrinks the shared L2 until
-the compile-alone tilings thrash, showing re-tiling reducing
-``SharedL2Allocator`` evictions while winning the makespan.
+counts.  A forced-contention section shrinks the shared L2 until the
+compile-alone tilings thrash, showing re-tiling reducing
+``SharedL2Allocator`` evictions while winning the makespan.  A final
+partial-occupancy section replays a tenants-arriving/leaving trace
+against the session's occupancy-indexed plan store, reporting the subset
+co-schedule latency vs. the old compile-alone back-to-back fallback per
+round.
 
-    PYTHONPATH=src python -m benchmarks.multi_tenant [--fast]
+    PYTHONPATH=src python -m benchmarks.multi_tenant [--fast] [--json OUT]
+
+``--json OUT`` writes every reported number to ``OUT`` (uploaded as a CI
+artifact so the perf trajectory is recorded per-PR).
 """
 
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 
 from repro.core.api import compile_multi
@@ -97,6 +106,27 @@ def run(mixes=MIXES, check_numerics: bool = True, verbose: bool = True,
     return rows
 
 
+def rows_to_json(rows):
+    out = []
+    for mix, mc, co_ms, pr1_ms, seq_ms in rows:
+        out.append({
+            "mix": list(mix),
+            "sequential_ms": seq_ms,
+            "pr1_coscheduled_ms": pr1_ms,
+            "retiled_coscheduled_ms": co_ms,
+            "speedup_vs_sequential": mc.speedup,
+            "retiled": mc.retiled,
+            "hint_rounds": (mc.session.hint_rounds
+                            if mc.session is not None else None),
+            "l2_evictions_pr1": mc.baseline_plan.memory.evictions,
+            "l2_evictions_retiled": mc.plan.memory.evictions,
+            "tenant_latency_ms": [mc.tenant_latency_ms(i)
+                                  for i in range(len(mix))],
+            "utilization": mc.plan.utilization(),
+        })
+    return out
+
+
 # ---------------------------------------------------------------------------
 # Forced contention: shrunk shared L2, sole-occupancy tiles thrash
 # ---------------------------------------------------------------------------
@@ -134,16 +164,115 @@ def run_forced_contention(verbose: bool = True):
     return mc, forced
 
 
+# ---------------------------------------------------------------------------
+# Partial occupancy: tenants arriving/leaving, served from the plan store
+# ---------------------------------------------------------------------------
+
+
+# a tenants-arriving/leaving trace over a 3-tenant deployment: indices are
+# the tenants with queued work that round; repeats exercise the cache
+OCCUPANCY_TRACE = [(0, 1, 2), (0, 1), (1, 2), (0, 2), (1,), (0, 1),
+                   (0, 1, 2), (1, 2)]
+
+PARTIAL_MIX = ("autoencoder", "ds_cnn", "resnet")
+
+
+def run_partial_occupancy(verbose: bool = True, time_budget_s: float = 2.0,
+                          trace=OCCUPANCY_TRACE, mc=None):
+    """The occupancy win: before the deployment-session API, any round
+    where only some tenants had queued work fell back to compile-alone
+    plans run back-to-back; now ``plan_for(active)`` answers every subset
+    from the occupancy-indexed plan store (lazily compiled, then cached),
+    so partial rounds stay concurrent.
+
+    ``mc`` reuses an already-compiled artifact for ``PARTIAL_MIX`` (the
+    mix also appears in ``MIXES``, so ``main`` passes ``run``'s result
+    instead of paying the 3-tenant compile twice)."""
+    soc = carfield_soc()
+    if mc is None:
+        pats = carfield_patterns()
+        graphs = [edge.ALL_MODELS[m]() for m in PARTIAL_MIX]
+        mc = compile_multi(graphs, soc, pats, time_budget_s=time_budget_s)
+    rows = []
+    if verbose:
+        print(f"\npartial occupancy ({' + '.join(PARTIAL_MIX)}): subset "
+              f"co-schedule vs compile-alone back-to-back fallback")
+        print(f"  {'active tenants':22s} {'subset (ms)':>12s} "
+              f"{'fallback (ms)':>14s} {'gain':>7s}")
+    subset_total = fallback_total = 0.0
+    for occ in trace:
+        ids = sorted(occ)
+        plan = mc.plan_for(ids)
+        subset_ms = soc.cycles_to_ms(plan.makespan)
+        # the pre-session engine behaviour at partial occupancy: each
+        # active tenant's COMPILE-ALONE schedule, back-to-back (not the
+        # tenant_plan reference, which for a re-tiled tenant is a
+        # different schedule — the gain must be honest vs the old engine)
+        fallback_ms = soc.cycles_to_ms(
+            sum(mc.singles[i].plan.makespan for i in ids))
+        subset_total += subset_ms
+        fallback_total += fallback_ms
+        gain = (1.0 - subset_ms / fallback_ms) * 100.0 if fallback_ms else 0.0
+        rows.append({"active": ids,
+                     "subset_coschedule_ms": subset_ms,
+                     "compile_alone_fallback_ms": fallback_ms,
+                     "gain_pct": gain})
+        if verbose:
+            names = " + ".join(PARTIAL_MIX[i] for i in ids)
+            print(f"  {names:22s} {subset_ms:12.2f} {fallback_ms:14.2f} "
+                  f"{gain:6.1f}%")
+    stats = mc.store_stats()
+    if verbose:
+        gain = (1.0 - subset_total / fallback_total) * 100.0 \
+            if fallback_total else 0.0
+        print(f"  {'TOTAL over trace':22s} {subset_total:12.2f} "
+              f"{fallback_total:14.2f} {gain:6.1f}%")
+        print(f"  plan store: {stats['co_plans']} cached co-schedules, "
+              f"{stats['compiles']} compiles, {stats['hits']} hits "
+              f"({len(trace)} rounds)")
+    return {"mix": list(PARTIAL_MIX), "rounds": rows,
+            "subset_total_ms": subset_total,
+            "fallback_total_ms": fallback_total,
+            "plan_store": stats}
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true",
                     help="skip the numeric allclose re-validation")
+    ap.add_argument("--json", metavar="OUT", default=None,
+                    help="write all reported numbers to OUT as JSON")
     args = ap.parse_args(argv)
     print("=" * 72)
     print("Multi-tenant co-scheduling — re-tiled vs. PR-1 vs. sequential")
     print("=" * 72)
-    run(check_numerics=not args.fast, verbose=True)
-    run_forced_contention(verbose=True)
+    rows = run(check_numerics=not args.fast, verbose=True)
+    mc, forced = run_forced_contention(verbose=True)
+    partial_mc = next((m for mix, m, *_ in rows if tuple(mix) == PARTIAL_MIX),
+                      None)
+    partial = run_partial_occupancy(verbose=True, mc=partial_mc)
+    if args.json:
+        report = {
+            "mixes": rows_to_json(rows),
+            "forced_contention": {
+                "l2_kib": FORCED_L2_KIB,
+                "sequential_cycles": mc.sequential_makespan_cycles,
+                "compile_alone_coschedule_cycles":
+                    forced.makespan if forced is not None else None,
+                "compile_alone_evictions":
+                    forced.memory.evictions if forced is not None else None,
+                "retiled_cycles": mc.plan.makespan,
+                "retiled_evictions": mc.plan.memory.evictions,
+                "retiled": mc.retiled,
+            },
+            "partial_occupancy": partial,
+        }
+        out_dir = os.path.dirname(args.json)
+        if out_dir:
+            os.makedirs(out_dir, exist_ok=True)
+        with open(args.json, "w") as f:
+            json.dump(report, f, indent=2, sort_keys=True)
+        print(f"\nwrote JSON report to {args.json}")
 
 
 if __name__ == "__main__":

@@ -1,11 +1,17 @@
-"""Multi-tenant serving: two different DNNs co-compiled onto ONE Carfield
-SoC and served concurrently.
+"""Multi-tenant serving through the deployment-session API: two DNNs
+co-compiled onto ONE Carfield SoC and served concurrently at varying
+occupancy.
 
-The single-model pipeline (see ``quickstart.py``) raises utilization by
-running one model's tiles across all accelerators; ``compile_multi``
-generalizes that to *inter-model* concurrency — N independent models share
-the devices, the single system DMA (double-buffered planned loads), and
-the 1 MiB L2 scratchpad (per-tenant budgets, contention-aware eviction).
+A :class:`~repro.core.deploy.DeploymentSession` wraps the whole pipeline:
+a typed ``CompileRequest`` (graphs, SoC, patterns, tile budgets) and a
+typed ``Objective`` (makespan-primary, eviction-count tie-break) drive one
+unified candidate search; the session then owns an occupancy-indexed
+``PlanStore``, so ``plan_for(active)`` answers any subset of tenants with
+a real co-schedule — the serving engine never falls back to compile-alone
+plans when only some tenants have queued work.
+
+The legacy one-shot wrapper (``compile_multi``) is demoed at the end for
+compat; it builds the same session internally.
 
     PYTHONPATH=src python examples/multi_tenant.py
 """
@@ -16,6 +22,7 @@ import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from repro.core.api import compile_multi
+from repro.core.deploy import (CompileRequest, DeploymentSession, Objective)
 from repro.core.runtime import multi_plan_matches_oracle
 from repro.models import edge
 from repro.serve.engine import MultiModelEngine
@@ -27,9 +34,16 @@ def main() -> None:
     patterns = carfield_patterns()
     graphs = [edge.autoencoder(), edge.ds_cnn()]
 
+    # -- the session API ----------------------------------------------------
+    request = CompileRequest(graphs=graphs, soc=soc, patterns=patterns,
+                             mode="matcha", time_budget_s=3.0)
+    objective = Objective()            # makespan, evictions as tie-break
+    session = DeploymentSession(request, objective)
+
     print("co-compiling", " + ".join(g.name for g in graphs),
           "onto", soc.name, "...")
-    mc = compile_multi(graphs, soc, patterns, time_budget_s=3.0)
+    # pre-compile the useful partial occupancies alongside the full house
+    mc = session.compile(precompile=[[0], [1]])
     assert multi_plan_matches_oracle(mc.plan)   # co-exec == each alone
 
     print(f"\n{'model':14s} {'alone (ms)':>11s} {'co-scheduled (ms)':>18s}")
@@ -41,27 +55,44 @@ def main() -> None:
     print(f"\nround makespan: {seq_ms:.2f} ms sequential -> "
           f"{pr1_ms:.2f} ms co-scheduled -> "
           f"{mc.runtime_ms:.2f} ms contention-re-tiled "
-          f"({mc.speedup:.2f}x, retiled={mc.retiled}, L2 budgets = "
+          f"({mc.speedup:.2f}x, retiled={mc.retiled}, "
+          f"{session.hint_rounds} hint round(s), L2 budgets = "
           f"{[b // 1024 for b in mc.plan.budgets]} KiB)")
     util = mc.plan.utilization()
     print("utilization: " + "  ".join(f"{d}={u:.0%}"
                                       for d, u in sorted(util.items())))
 
-    # serve a small mixed-tenant workload through the engine
+    # any occupancy gets a validated co-schedule from the plan store
+    for active in ([0, 1], [0], [1]):
+        plan = session.plan_for(active)
+        names = " + ".join(graphs[i].name for i in active)
+        print(f"plan_for({active}): {names:28s} "
+              f"{soc.cycles_to_ms(plan.makespan):8.2f} ms")
+
+    # serve a mixed-tenant workload; the uneven tail is a real (cached)
+    # occupancy-1 dispatch, not a compile-alone fallback
     eng = MultiModelEngine(mc)
-    for k in range(3):
+    for _ in range(3):
         eng.submit("autoencoder")
         eng.submit("ds_cnn")
     eng.submit("autoencoder")           # one tenant deeper than the other
     eng.run()
     rep = eng.report()
     print(f"\nserved {rep['served']} requests: "
-          f"{rep['co_rounds']} co-scheduled rounds + "
+          f"{rep['co_rounds']} co-scheduled rounds "
+          f"({rep['subset_co_rounds']} at partial occupancy) + "
           f"{rep['solo_dispatches']} solo dispatches, "
           f"{rep['throughput_inf_per_s']:.1f} inf/s aggregate")
     for t in rep["per_tenant"]:
         print(f"  {t['model']:14s} served={t['served']}  "
               f"mean latency {t['mean_latency_ms']:.2f} ms")
+    print(f"plan store: {rep['plan_store']}")
+
+    # -- legacy wrapper, still working ------------------------------------
+    mc2 = compile_multi(graphs, soc, patterns, time_budget_s=3.0)
+    print(f"\ncompile_multi wrapper: same winning makespan = "
+          f"{mc2.runtime_ms:.2f} ms "
+          f"(session-backed: {mc2.session is not None})")
 
 
 if __name__ == "__main__":

@@ -1,364 +1,72 @@
-"""Public compile entry point: the full MATCHA pipeline (Fig. 1).
+"""Public compile entry points — thin wrappers over the deployment session.
 
-``compile_model(graph, soc, patterns, mode)`` runs
+The full MATCHA pipeline (Fig. 1)
 
     pre-process -> tile-centric CP pattern matching (stage 1, core.tiling)
                 -> IR rewrite (supernodes + helpers, core.rewrite)
                 -> scheduling & memory planning (stage 2, core.schedule)
                 -> (optionally) code generation (core.codegen)
 
-and returns a :class:`CompiledModel` whose ``plan`` carries the executable
-schedule + memory plan and whose ``run`` method executes the plan
-numerically in JAX.
+lives in :mod:`repro.core.deploy`: a :class:`~repro.core.deploy.
+DeploymentSession` over a typed :class:`~repro.core.deploy.CompileRequest`
+runs one unified candidate search (a registry of named
+:class:`~repro.core.deploy.CandidateStrategy` entries: tile-centric at
+several granularities, the all-or-nothing corner, HEFT, contention-priced
+re-runs, complementary selections), arbitrates every candidate under the
+exact stage-2 model with a typed :class:`~repro.core.deploy.Objective`
+(makespan-primary, eviction-count tie-break), iterates the contention-hint
+loop to a bounded fixpoint, and caches co-schedules per occupancy in an
+indexed :class:`~repro.core.deploy.PlanStore` — so
+``MultiCompiledModel.plan_for(active)`` answers *partial* occupancy.
 
-For ``mode="matcha"`` the compiler evaluates several stage-1 candidates —
-the tile-centric solution at a few tile granularities plus the all-or-nothing
-(no-tiling) corner case — under the *exact* stage-2 model, and keeps the
-best.  This realizes the paper's observation that layer-device assignment is
-a corner case of the tile-centric optimization (§3.1) and reproduces the
-Table-2 behaviour where depthwise-dominated nets reject tiling (slice/concat
-overheads outweigh the benefit) while ResNet/AutoEncoder embrace it.
+This module keeps the historical free-function surface:
+
+  * ``compile_model(graph, soc, patterns, mode)`` — one model, returns a
+    :class:`CompiledModel` whose ``plan`` carries the executable schedule +
+    memory plan and whose ``run`` method executes the plan numerically in
+    JAX.  For ``mode="matcha"`` the session evaluates several stage-1
+    candidates under the exact stage-2 model and keeps the best,
+    reproducing the Table-2 behaviour where depthwise-dominated nets
+    reject tiling while ResNet/AutoEncoder embrace it (§3.1).
+  * ``compile_multi(graphs, soc, patterns)`` — N models co-scheduled onto
+    one SoC, returns a session-backed :class:`MultiCompiledModel`.
+
+Both construct a session internally and return its artifacts unchanged, so
+callers that need the richer API (subset pre-compilation, explicit
+objectives, strategy selection) can build the session directly instead.
 """
 
 from __future__ import annotations
 
-import dataclasses
-from typing import Dict, List, Optional, Sequence
+from typing import Optional, Sequence
 
+from repro.core.deploy import (MODES, CandidateSpec, CandidateStrategy,
+                               CompiledModel, CompileRequest,
+                               DeploymentSession, MultiCompiledModel,
+                               Objective, PlanStore, default_strategy_names,
+                               get_strategy, register_strategy)
 from repro.core.ir import Graph
 from repro.core.patterns import Pattern
-from repro.core.rewrite import TiledGraph, rewrite
-from repro.core.schedule import (ExecutionPlan, MultiExecutionPlan,
-                                 contention_hints, schedule, schedule_multi,
-                                 validate_schedule, validate_multi_schedule)
-from repro.core.tiling import Contention, TilingSolution, optimize_tiling
 from repro.soc.device import SoC
 
-MODES = ("tvm", "match", "matcha_nt", "matcha")
-
-
-@dataclasses.dataclass
-class CompiledModel:
-    graph: Graph
-    soc: SoC
-    mode: str
-    solution: TilingSolution
-    tiled: TiledGraph
-    plan: ExecutionPlan
-    candidates: Dict[str, float]       # candidate label -> exact makespan
-    # every feasible stage-1 candidate's exact stage-2 plan (including the
-    # winner): runner-up tilings that lose compile-alone can still be the
-    # co-optimal choice in a multi-tenant compile (complementary device
-    # affinities), so compile_multi re-examines them
-    alt_plans: Dict[str, ExecutionPlan] = dataclasses.field(
-        default_factory=dict, repr=False)
-
-    @property
-    def makespan_cycles(self) -> float:
-        return self.plan.makespan
-
-    @property
-    def runtime_ms(self) -> float:
-        return self.soc.cycles_to_ms(self.plan.makespan)
-
-    def flops_per_s(self) -> float:
-        """FLOPS as reported in the paper's tables (2*MACs / runtime)."""
-        secs = self.plan.makespan / (self.soc.freq_mhz * 1e6)
-        return 2.0 * self.graph.total_macs() / secs if secs else 0.0
-
-    def run(self, inputs, params):
-        from repro.core.runtime import execute_plan
-        return execute_plan(self.plan, inputs, params)
-
-    def emit(self, out_dir: str):
-        from repro.core.codegen import generate
-        return generate(self.plan, self.soc, out_dir)
-
-
-def _one_candidate(g: Graph, soc: SoC, patterns: Sequence[Pattern],
-                   mode: str, tiles: int, time_budget_s: float,
-                   host_tiles: bool = True) -> Optional[tuple]:
-    try:
-        sol = optimize_tiling(g, soc, patterns, mode=mode,
-                              requested_tiles=tiles,
-                              time_budget_s=time_budget_s,
-                              host_tiles=host_tiles)
-        tg = rewrite(g, soc, sol)
-        plan = schedule(tg, soc, mode)
-    except Exception:
-        return None
-    errs = validate_schedule(plan)
-    if errs:
-        return None
-    return sol, tg, plan
-
-
-def _heft_candidate(g: Graph, soc: SoC, patterns: Sequence[Pattern],
-                    tiles: int, fuse_joins: bool = True) -> Optional[tuple]:
-    from repro.core.heft import heft_solution
-    try:
-        sol = heft_solution(g, soc, patterns, requested_tiles=tiles,
-                            fuse_joins=fuse_joins)
-        tg = rewrite(g, soc, sol)
-        plan = schedule(tg, soc, "matcha_nt")
-    except Exception:
-        return None
-    if validate_schedule(plan):
-        return None
-    return sol, tg, plan
+__all__ = [
+    "MODES", "CandidateSpec", "CandidateStrategy", "CompileRequest",
+    "CompiledModel", "DeploymentSession", "MultiCompiledModel", "Objective",
+    "PlanStore", "compile_model", "compile_multi",
+    "default_strategy_names", "get_strategy", "register_strategy",
+]
 
 
 def compile_model(g: Graph, soc: SoC, patterns: Sequence[Pattern],
                   mode: str = "matcha", requested_tiles: int = 16,
                   time_budget_s: float = 8.0) -> CompiledModel:
+    """Compile ONE model: a single-graph deployment session's
+    compile-alone artifact."""
     assert mode in MODES, mode
-    g.validate()
-
-    candidates: Dict[str, float] = {}
-    best = None
-    best_label = None
-
-    if mode == "matcha":
-        # tile-centric at two granularities, with and without host tile
-        # participation, + the all-or-nothing corner cases; the exact
-        # stage-2 model arbitrates (§3.1).
-        trial = [("matcha", requested_tiles, True),
-                 ("matcha", requested_tiles, False),
-                 ("matcha", requested_tiles // 2, True),
-                 ("matcha_nt", requested_tiles, True),
-                 ("match", requested_tiles, True)]
-    elif mode == "matcha_nt":
-        trial = [("matcha_nt", requested_tiles, True),
-                 ("match", requested_tiles, True)]
-    else:
-        trial = [(mode, requested_tiles if mode != "tvm" else 1, True)]
-
-    if mode in ("matcha", "matcha_nt"):
-        trial.append(("heft", requested_tiles, True))
-        trial.append(("heft", requested_tiles, False))   # join-free chains
-
-    alt_plans: Dict[str, ExecutionPlan] = {}
-    for m, tiles, ht in trial:
-        if m == "heft":
-            got = _heft_candidate(g, soc, patterns, max(tiles, 1),
-                                  fuse_joins=ht)
-        else:
-            got = _one_candidate(g, soc, patterns, m, max(tiles, 1),
-                                 time_budget_s, host_tiles=ht)
-        if got is None:
-            continue
-        sol, tg, plan = got
-        label = f"{m}@T{tiles}" + ("" if ht else "!h")
-        candidates[label] = plan.makespan
-        alt_plans[label] = plan
-        if best is None or plan.makespan < best[2].makespan:
-            best = (sol, tg, plan)
-            best_label = label
-    if best is None:
-        raise RuntimeError(f"compilation produced no feasible plan "
-                           f"(mode={mode})")
-    sol, tg, plan = best
-    plan.mode = mode
-    return CompiledModel(graph=g, soc=soc, mode=mode, solution=sol,
-                         tiled=tg, plan=plan, candidates=candidates,
-                         alt_plans=alt_plans)
-
-
-# ---------------------------------------------------------------------------
-# Multi-tenant compilation (N models co-scheduled on one SoC)
-# ---------------------------------------------------------------------------
-
-
-@dataclasses.dataclass
-class MultiCompiledModel:
-    """N independent models compiled into ONE co-schedule on one SoC.
-
-    ``singles`` holds the per-model compilations (each model's best tiling
-    and its compile-alone schedule — the sequential baseline); ``plan`` is
-    the merged resource-constrained co-schedule, whose tilings may be the
-    compile-alone ones or a contention-aware re-tiling (whichever gave the
-    better makespan); ``baseline_plan`` is the co-schedule restricted to
-    the compile-alone tilings (the pre-re-tiling behaviour).
-    """
-    graphs: List[Graph]
-    soc: SoC
-    mode: str
-    singles: List[CompiledModel]
-    plan: MultiExecutionPlan
-    baseline_plan: Optional[MultiExecutionPlan] = None
-    _tenant_plans: Optional[List[Optional[ExecutionPlan]]] = \
-        dataclasses.field(default=None, repr=False)
-
-    @property
-    def makespan_cycles(self) -> float:
-        return self.plan.makespan
-
-    @property
-    def runtime_ms(self) -> float:
-        return self.soc.cycles_to_ms(self.plan.makespan)
-
-    @property
-    def sequential_makespan_cycles(self) -> float:
-        """Compile-each-model-alone, run back-to-back (the baseline)."""
-        return sum(cm.plan.makespan for cm in self.singles)
-
-    @property
-    def baseline_makespan_cycles(self) -> float:
-        """Co-scheduled makespan with the compile-alone tilings (the PR-1
-        behaviour, before contention-aware re-tiling)."""
-        return (self.baseline_plan.makespan if self.baseline_plan is not None
-                else self.plan.makespan)
-
-    @property
-    def retiled(self) -> bool:
-        """True when the winning co-schedule uses re-tiled graphs."""
-        return any(tg is not cm.tiled
-                   for tg, cm in zip(self.plan.tenants, self.singles))
-
-    @property
-    def speedup(self) -> float:
-        return (self.sequential_makespan_cycles / self.plan.makespan
-                if self.plan.makespan else 1.0)
-
-    def tenant_latency_ms(self, i: int) -> float:
-        """Completion time of tenant ``i`` inside the co-schedule."""
-        return self.soc.cycles_to_ms(self.plan.tenant_makespans[i])
-
-    def tenant_plan(self, i: int) -> ExecutionPlan:
-        """Single-model schedule over the SAME tiled graph tenant ``i``
-        uses inside the co-schedule — the bitwise numeric reference for the
-        interleaved execution.  Equals ``singles[i].plan`` unless that
-        tenant was re-tiled (then a fresh schedule is built and cached)."""
-        if self.plan.tenants[i] is self.singles[i].tiled:
-            return self.singles[i].plan
-        if self._tenant_plans is None:
-            self._tenant_plans = [None] * len(self.graphs)
-        if self._tenant_plans[i] is None:
-            self._tenant_plans[i] = schedule(self.plan.tenants[i], self.soc,
-                                             self.mode, restarts=1,
-                                             anneal_iters=0)
-        return self._tenant_plans[i]
-
-    def plan_for(self, active: Sequence[int]
-                 ) -> Optional[MultiExecutionPlan]:
-        """Co-schedule covering exactly the ``active`` tenants, or None if
-        no pre-compiled plan matches that occupancy (the caller then falls
-        back to compile-alone plans).  Today only the full house is
-        pre-compiled; subset co-schedules are a ROADMAP follow-up."""
-        if sorted(set(active)) == list(range(len(self.graphs))):
-            return self.plan
-        return None
-
-    def run(self, inputs_list, params_list):
-        from repro.core.runtime import execute_multi_plan
-        return execute_multi_plan(self.plan, inputs_list, params_list)
-
-
-def _tiling_sig(tg: TiledGraph) -> tuple:
-    return tuple(sorted((s.device, s.op_names, s.tile_lo, s.tile_hi)
-                        for s in tg.supernodes))
-
-
-def _retile_candidate_sets(graphs: Sequence[Graph], soc: SoC,
-                           patterns: Sequence[Pattern],
-                           hints: Sequence[Contention],
-                           singles: Sequence[CompiledModel], mode: str,
-                           requested_tiles: int, time_budget_s: float,
-                           max_complementary: int = 3
-                           ) -> List[List[TiledGraph]]:
-    """Joint tiling candidate sets for contention-aware re-tiling.
-
-    Three sources, all arbitrated later by the exact shared-resource model
-    in ``schedule_multi``:
-
-      (a) *contention re-runs* — stage 1 per tenant under its
-          :class:`Contention` context (shrunk L2 slice, congested DMA,
-          loaded devices), applied symmetrically (every tenant re-tiled)
-          and asymmetrically (one tenant re-tiled against the others'
-          compile-alone tilings — simultaneous best-response moves all
-          tenants off the same devices and helps nobody);
-      (b) the contention-priced *all-or-nothing corner* — fewest
-          concurrent chains, least shared-L2 pressure;
-      (c) *complementary selections* — cross-products of each tenant's
-          compile-alone candidate pool (``CompiledModel.alt_plans``:
-          runner-up tilings that lost alone can pair into a better mix),
-          ranked by the per-device congestion proxy
-          max_dev(sum_i busy_i[dev]) and capped at ``max_complementary``.
-
-    A tenant whose re-run fails keeps its compile-alone tiling so every
-    set stays schedulable; sets identical to the compile-alone tilings
-    (or to each other) are dropped."""
-    import itertools
-
-    base_tgs = [cm.tiled for cm in singles]
-
-    def sig_of(tgs):
-        return tuple(_tiling_sig(tg) for tg in tgs)
-
-    sets: List[List[TiledGraph]] = []
-    seen_sigs = {sig_of(base_tgs)}       # skip no-op re-tilings
-
-    def add(tgs) -> None:
-        sig = sig_of(tgs)
-        if sig not in seen_sigs:
-            seen_sigs.add(sig)
-            sets.append(list(tgs))
-
-    # (a) + (b): contention-priced stage-1 re-runs (the caller guarantees
-    # mode is one of the asynchronous matcha modes)
-    assert mode in ("matcha", "matcha_nt"), mode
-    stage1 = mode
-    variants = [stage1] + (["matcha_nt"] if stage1 != "matcha_nt" else [])
-    retiled: Dict[str, List[Optional[TiledGraph]]] = {}
-    for m in variants:
-        row: List[Optional[TiledGraph]] = []
-        for i, g in enumerate(graphs):
-            try:
-                sol = optimize_tiling(g, soc, patterns, mode=m,
-                                      requested_tiles=requested_tiles,
-                                      time_budget_s=time_budget_s,
-                                      contention=hints[i])
-                row.append(rewrite(g, soc, sol))
-            except Exception:
-                row.append(None)
-        retiled[m] = row
-        add([tg if tg is not None else base_tgs[i]
-             for i, tg in enumerate(row)])
-    for i, tg in enumerate(retiled[stage1]):      # asymmetric moves
-        if tg is not None:
-            add([tg if j == i else base_tgs[j]
-                 for j in range(len(graphs))])
-
-    # (c): complementary selections from the compile-alone pools
-    options: List[List[ExecutionPlan]] = []
-    for cm in singles:
-        uniq: List[ExecutionPlan] = []
-        opt_seen = set()
-        for _, p in sorted(cm.alt_plans.items(),
-                           key=lambda kv: kv[1].makespan):
-            s = _tiling_sig(p.tiled)
-            if s not in opt_seen:
-                opt_seen.add(s)
-                uniq.append(p)
-        options.append(uniq[:3])
-
-    def congestion(plans) -> float:
-        load: Dict[str, float] = {}
-        for p in plans:
-            for r, b in p.busy.items():
-                load[r] = load.get(r, 0.0) + b
-        return max(load.values(), default=0.0)
-
-    if all(options) and len(graphs) <= 6:
-        combos = sorted(itertools.product(*options), key=congestion)
-        picked = 0
-        for plans in combos:
-            if picked >= max_complementary:
-                break
-            before = len(sets)
-            add([p.tiled for p in plans])
-            picked += len(sets) - before
-    return sets
+    request = CompileRequest(graphs=[g], soc=soc, patterns=patterns,
+                             mode=mode, requested_tiles=requested_tiles,
+                             time_budget_s=time_budget_s)
+    return DeploymentSession(request).compile_single(0)
 
 
 def compile_multi(graphs: Sequence[Graph], soc: SoC,
@@ -366,51 +74,29 @@ def compile_multi(graphs: Sequence[Graph], soc: SoC,
                   budgets: Optional[Sequence[int]] = None,
                   requested_tiles: int = 16,
                   time_budget_s: float = 8.0,
-                  retile_for_contention: bool = True) -> MultiCompiledModel:
+                  retile_for_contention: bool = True,
+                  max_hint_rounds: int = 3) -> MultiCompiledModel:
     """Compile N independent models into one multi-tenant co-schedule.
 
-    Stage 1 runs per model exactly as :func:`compile_model` (each model
-    keeps its individually-optimal tiling/device assignment); stage 2 then
-    merges the N execution DAGs under shared-resource constraints — per-
-    device mutual exclusion, one DMA engine with double-buffered planned
-    loads, and a shared L2 with per-tenant budgets (``budgets`` defaults to
-    an equal split).
+    Stage 1 runs per model exactly as :func:`compile_model`; stage 2 merges
+    the N execution DAGs under shared-resource constraints (per-device
+    mutual exclusion, one double-buffered DMA engine, a shared L2 with
+    per-tenant ``budgets`` — default an equal split).  With
+    ``retile_for_contention`` the session then iterates contention hints ->
+    per-tenant re-tiling -> exact re-arbitration until fixpoint (bounded by
+    ``max_hint_rounds``).  The sequential concatenation of the single-model
+    schedules remains a candidate throughout, so the final makespan is
+    never worse than the re-tiling-free co-schedule, which is never worse
+    than the compile-each-model-alone baseline.
 
-    With ``retile_for_contention`` (the default) the merged schedule is
-    then summarized into per-tenant :class:`Contention` contexts
-    (L2 slice, co-resident device load, DMA congestion) and stage 1 is
-    re-run per tenant under those shrunk budgets; ``schedule_multi``
-    evaluates the compile-alone tilings and every re-tiled candidate set
-    under the exact shared-resource model and keeps the better makespan.
-    The sequential concatenation of the single-model schedules remains a
-    candidate throughout, so the final makespan is never worse than the
-    re-tiling-free co-schedule, which is never worse than the
-    compile-each-model-alone baseline."""
+    The returned artifact is session-backed: ``plan_for(active)`` answers
+    any occupancy from the session's :class:`PlanStore` (lazily compiling
+    subset co-schedules on first miss) and ``tenant_plan`` reuses cached
+    reference schedules."""
     assert len(graphs) >= 1
-    singles = [compile_model(g, soc, patterns, mode=mode,
-                             requested_tiles=requested_tiles,
-                             time_budget_s=time_budget_s) for g in graphs]
-    base_tgs = [cm.tiled for cm in singles]
-    single_plans = [cm.plan for cm in singles]
-    baseline = schedule_multi(base_tgs, soc, budgets=budgets,
-                              singles=single_plans)
-    plan = baseline
-    # tvm / match model strictly sequential host-centric baselines — the
-    # ablation must not re-tile them onto accelerators
-    if retile_for_contention and len(graphs) > 1 and \
-            mode in ("matcha", "matcha_nt"):
-        hints = contention_hints(baseline, soc)
-        alt_sets = _retile_candidate_sets(graphs, soc, patterns, hints,
-                                          singles, mode, requested_tiles,
-                                          time_budget_s)
-        if alt_sets:
-            plan = schedule_multi(base_tgs, soc, budgets=budgets,
-                                  alt_tgs=alt_sets, incumbent=baseline)
-            if plan.makespan > baseline.makespan:      # determinism guard
-                plan = baseline
-    errs = validate_multi_schedule(plan)
-    if errs:
-        raise RuntimeError(f"infeasible co-schedule: {errs[:5]}")
-    return MultiCompiledModel(graphs=list(graphs), soc=soc, mode=mode,
-                              singles=singles, plan=plan,
-                              baseline_plan=baseline)
+    request = CompileRequest(graphs=list(graphs), soc=soc, patterns=patterns,
+                             mode=mode, requested_tiles=requested_tiles,
+                             time_budget_s=time_budget_s, budgets=budgets,
+                             retile_for_contention=retile_for_contention,
+                             max_hint_rounds=max_hint_rounds)
+    return DeploymentSession(request).compile()

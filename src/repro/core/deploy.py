@@ -1,0 +1,870 @@
+"""Deployment-session front-end for the MATCHA compiler.
+
+The pipeline (stage-1 tile-centric CP -> IR rewrite -> exact stage-2
+arbitration) used to be wired through two monolithic free functions with
+hardcoded trial lists (``core.api.compile_model`` / ``compile_multi``).
+This module redesigns that front-end around a :class:`DeploymentSession`
+— a long-lived compiler session over a fixed set of tenant models — the
+shape HaX-CoNN and MATCH expose, and the one mixed multi-tenant traffic
+at varying occupancy needs:
+
+  * :class:`CompileRequest` — the typed input: graphs, SoC, patterns,
+    mode, tile budgets, per-tenant L2 budgets, contention-iteration
+    bound, and an optional explicit strategy list;
+  * :class:`Objective` — the typed goal: makespan-primary with an
+    eviction-count tie-break (near-equal makespans resolve toward the
+    plan with less shared-L2 traffic), threaded through
+    ``schedule_multi``;
+  * :class:`CandidateStrategy` — a registry of named stage-1 candidate
+    sources (tile-centric at several granularities, the all-or-nothing
+    corner, HEFT, contention-priced re-runs, complementary selections
+    from the compile-alone pools) that replaces the duplicated trial-
+    list logic; one unified search core arbitrates every candidate
+    under the exact stage-2 model;
+  * :class:`PlanStore` — an occupancy-indexed plan cache keyed by
+    ``frozenset`` of active tenants: requested subsets are pre-compiled,
+    anything else is lazily compiled-and-cached on first miss, so
+    ``plan_for(active)`` answers *partial* occupancy instead of
+    returning ``None``.
+
+Inside the session's multi-tenant loop, ``contention_hints`` ->
+re-tile -> re-schedule iterates to a fixpoint (bounded by
+``CompileRequest.max_hint_rounds``, default 3) instead of the previous
+single round; each round's winner seeds the next round's hints.
+
+``core.api.compile_model`` / ``compile_multi`` remain as thin wrappers
+over a session, so every existing caller keeps working.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import (Callable, Dict, FrozenSet, List, Optional, Sequence,
+                    Tuple)
+
+from repro.core.ir import Graph
+from repro.core.patterns import Pattern
+from repro.core.rewrite import TiledGraph, rewrite
+from repro.core.schedule import (ExecutionPlan, MultiExecutionPlan,
+                                 contention_hints, schedule, schedule_multi,
+                                 validate_multi_schedule, validate_schedule)
+from repro.core.tiling import (Contention, TilingSolution, optimize_tiling,
+                               tile_granularities)
+from repro.soc.device import SoC
+
+MODES = ("tvm", "match", "matcha_nt", "matcha")
+
+# modes whose stage 2 exploits asynchronous inter-device concurrency —
+# the only ones contention-aware re-tiling applies to (the sequential
+# tvm / match ablation baselines must not be re-tiled onto accelerators)
+ASYNC_MODES = ("matcha", "matcha_nt")
+
+
+# ---------------------------------------------------------------------------
+# Typed objective
+# ---------------------------------------------------------------------------
+
+
+OBJECTIVE_PRIMARIES = ("makespan",)
+OBJECTIVE_TIE_BREAKS = (None, "evictions")
+
+
+@dataclasses.dataclass(frozen=True)
+class Objective:
+    """What the candidate search optimizes, as data instead of inlined
+    comparisons.
+
+    ``primary`` is minimized first; candidates whose primaries are within
+    ``tolerance`` of each other are resolved by ``tie_break``.  The default
+    closes the ROADMAP item: makespan-primary with an eviction-count
+    tie-break, so among near-equal makespans the plan with less forced
+    shared-L2 swap traffic wins."""
+    primary: str = "makespan"
+    tie_break: Optional[str] = "evictions"
+    tolerance: float = 1e-9
+
+    def __post_init__(self) -> None:
+        if self.primary not in OBJECTIVE_PRIMARIES:
+            raise ValueError(f"unknown primary objective {self.primary!r}; "
+                             f"expected one of {OBJECTIVE_PRIMARIES}")
+        if self.tie_break not in OBJECTIVE_TIE_BREAKS:
+            raise ValueError(f"unknown tie-break {self.tie_break!r}; "
+                             f"expected one of {OBJECTIVE_TIE_BREAKS}")
+        if self.tolerance < 0.0:
+            raise ValueError(f"tolerance must be >= 0: {self.tolerance}")
+
+    def value(self, plan) -> Tuple[float, float]:
+        """(primary, tie-break) score of an Execution/MultiExecutionPlan —
+        lexicographically smaller is better."""
+        secondary = (float(plan.memory.evictions)
+                     if self.tie_break == "evictions" else 0.0)
+        return (plan.makespan, secondary)
+
+    def better(self, cand, incumbent) -> bool:
+        """True when ``cand`` should replace ``incumbent``: strictly better
+        on the primary (beyond ``tolerance``), or tied on the primary and
+        strictly better on the tie-break."""
+        if incumbent is None:
+            return cand is not None
+        if cand is None:
+            return False
+        (cp, cs), (ip, is_) = self.value(cand), self.value(incumbent)
+        if cp < ip - self.tolerance:
+            return True
+        if cp > ip + self.tolerance:
+            return False
+        return cs < is_
+
+
+# ---------------------------------------------------------------------------
+# Typed compile request
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class CompileRequest:
+    """Everything a :class:`DeploymentSession` needs, as one typed value.
+
+    ``budgets`` fixes the per-tenant shared-L2 split (default: equal split
+    among however many tenants are active in a given plan); ``strategies``
+    overrides the mode-derived candidate-strategy list by registry name;
+    ``max_hint_rounds`` bounds the contention-hint fixpoint iteration."""
+    graphs: Sequence[Graph]
+    soc: SoC
+    patterns: Sequence[Pattern]
+    mode: str = "matcha"
+    requested_tiles: int = 16
+    time_budget_s: float = 8.0
+    budgets: Optional[Sequence[int]] = None
+    retile_for_contention: bool = True
+    max_hint_rounds: int = 3
+    strategies: Optional[Sequence[str]] = None
+
+    def __post_init__(self) -> None:
+        if self.mode not in MODES:
+            raise ValueError(f"unknown mode {self.mode!r}; "
+                             f"expected one of {MODES}")
+        if not self.graphs:
+            raise ValueError("CompileRequest needs at least one graph")
+        if self.max_hint_rounds < 1:
+            raise ValueError(f"max_hint_rounds must be >= 1: "
+                             f"{self.max_hint_rounds}")
+        if self.budgets is not None and len(self.budgets) != len(self.graphs):
+            raise ValueError(f"budgets has {len(self.budgets)} entries for "
+                             f"{len(self.graphs)} graphs")
+
+
+# ---------------------------------------------------------------------------
+# Candidate strategies (named, registered)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class CandidateSpec:
+    """One stage-1 trial: which optimizer variant, at which granularity,
+    with or without host tile participation."""
+    stage1: str                # matcha | matcha_nt | match | tvm | heft
+    tiles: int
+    host_tiles: bool = True
+
+    @property
+    def label(self) -> str:
+        return (f"{self.stage1}@T{self.tiles}"
+                + ("" if self.host_tiles else "!h"))
+
+
+class CandidateStrategy:
+    """A named source of stage-1 candidates for the unified search core.
+
+    ``single_candidates`` contributes :class:`CandidateSpec` trials to a
+    single-model compile; ``retile_sets`` contributes joint per-tenant
+    tiling sets (each a ``List[TiledGraph]``) to one round of the
+    multi-tenant contention loop via the deduplicating ``add`` callback.
+    Strategies are stateless; everything they need rides on the session."""
+
+    name = "base"
+    retiles = False            # contributes to the contention re-tile loop
+
+    def single_candidates(self, request: CompileRequest
+                          ) -> List[CandidateSpec]:
+        return []
+
+    def retile_sets(self, session: "DeploymentSession",
+                    hints: Sequence[Contention],
+                    plan: MultiExecutionPlan,
+                    add: Callable[[Sequence[TiledGraph]], bool]) -> None:
+        pass
+
+
+STRATEGY_REGISTRY: Dict[str, CandidateStrategy] = {}
+
+
+def register_strategy(strategy: CandidateStrategy) -> CandidateStrategy:
+    STRATEGY_REGISTRY[strategy.name] = strategy
+    return strategy
+
+
+def get_strategy(name: str) -> CandidateStrategy:
+    try:
+        return STRATEGY_REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown candidate strategy {name!r}; registered: "
+                       f"{sorted(STRATEGY_REGISTRY)}") from None
+
+
+def default_strategy_names(mode: str,
+                           retile_for_contention: bool = True) -> List[str]:
+    """The mode-derived strategy list the old hardcoded trial lists encoded:
+    tile-centric search only for full matcha, the all-or-nothing corner and
+    HEFT for both asynchronous modes, a single sequential trial for the
+    tvm / match ablation baselines."""
+    if mode == "matcha":
+        names = ["tile-centric", "all-or-nothing", "heft"]
+    elif mode == "matcha_nt":
+        names = ["all-or-nothing", "heft"]
+    else:
+        return ["sequential-baseline"]
+    if retile_for_contention:
+        names += ["contention-retile", "complementary"]
+    return names
+
+
+class TileCentricStrategy(CandidateStrategy):
+    """The paper's tile-centric CP at the granularity ladder from
+    :func:`repro.core.tiling.tile_granularities`, with and without host
+    tile participation at the full granularity (§3.1)."""
+
+    name = "tile-centric"
+
+    def single_candidates(self, request: CompileRequest
+                          ) -> List[CandidateSpec]:
+        if request.mode != "matcha":
+            return []
+        ladder = tile_granularities(request.requested_tiles)
+        specs = [CandidateSpec("matcha", ladder[0], True),
+                 CandidateSpec("matcha", ladder[0], False)]
+        specs.extend(CandidateSpec("matcha", t, True) for t in ladder[1:])
+        return specs
+
+
+class AllOrNothingStrategy(CandidateStrategy):
+    """The all-or-nothing (no-tiling) corner: layer-device assignment as a
+    corner case of the tile-centric optimization, plus the strictly
+    sequential match baseline as a feasibility backstop."""
+
+    name = "all-or-nothing"
+
+    def single_candidates(self, request: CompileRequest
+                          ) -> List[CandidateSpec]:
+        if request.mode not in ASYNC_MODES:
+            return []
+        return [CandidateSpec("matcha_nt", request.requested_tiles, True),
+                CandidateSpec("match", request.requested_tiles, True)]
+
+
+class HeftStrategy(CandidateStrategy):
+    """HEFT list-scheduling seeds (with and without join fusion) — cheap
+    candidates that occasionally beat the CP on join-free chains."""
+
+    name = "heft"
+
+    def single_candidates(self, request: CompileRequest
+                          ) -> List[CandidateSpec]:
+        if request.mode not in ASYNC_MODES:
+            return []
+        return [CandidateSpec("heft", request.requested_tiles, True),
+                CandidateSpec("heft", request.requested_tiles, False)]
+
+
+class SequentialBaselineStrategy(CandidateStrategy):
+    """One trial in the request's own (sequential) mode — the tvm / match
+    ablation baselines are a single stage-1 run, untiled for tvm."""
+
+    name = "sequential-baseline"
+
+    def single_candidates(self, request: CompileRequest
+                          ) -> List[CandidateSpec]:
+        if request.mode in ASYNC_MODES:
+            return []
+        tiles = request.requested_tiles if request.mode != "tvm" else 1
+        return [CandidateSpec(request.mode, tiles, True)]
+
+
+class ContentionRetileStrategy(CandidateStrategy):
+    """Contention-priced stage-1 re-runs: each tenant re-tiled under its
+    :class:`Contention` context (shrunk L2 slice, congested DMA, loaded
+    devices), applied symmetrically (every tenant re-tiled, per stage-1
+    variant including the all-or-nothing corner) and asymmetrically (one
+    tenant re-tiled against the incumbent plan's tilings — simultaneous
+    best-response moves all tenants off the same devices and helps
+    nobody).  A tenant whose re-run fails keeps its incumbent tiling so
+    every set stays schedulable."""
+
+    name = "contention-retile"
+    retiles = True
+
+    def retile_sets(self, session, hints, plan, add) -> None:
+        req = session.request
+        base_tgs = list(plan.tenants)
+        stage1 = req.mode
+        variants = [stage1] + (["matcha_nt"] if stage1 != "matcha_nt"
+                               else [])
+        retiled: Dict[str, List[Optional[TiledGraph]]] = {}
+        for m in variants:
+            row: List[Optional[TiledGraph]] = []
+            for i, g in enumerate(req.graphs):
+                try:
+                    sol = optimize_tiling(g, req.soc, req.patterns, mode=m,
+                                          requested_tiles=req.requested_tiles,
+                                          time_budget_s=req.time_budget_s,
+                                          contention=hints[i])
+                    row.append(rewrite(g, req.soc, sol))
+                except Exception:
+                    row.append(None)
+            retiled[m] = row
+            add([tg if tg is not None else base_tgs[i]
+                 for i, tg in enumerate(row)])
+        for i, tg in enumerate(retiled[stage1]):      # asymmetric moves
+            if tg is not None:
+                add([tg if j == i else base_tgs[j]
+                     for j in range(len(base_tgs))])
+
+
+class ComplementaryStrategy(CandidateStrategy):
+    """Complementary selections: cross-products of each tenant's
+    compile-alone candidate pool (``CompiledModel.alt_plans`` — runner-up
+    tilings that lost alone can pair into a better mix), ranked by the
+    per-device congestion proxy max_dev(sum_i busy_i[dev]) and capped at
+    ``max_complementary`` new sets per round."""
+
+    name = "complementary"
+    retiles = True
+    max_complementary = 3
+    max_pool = 3               # distinct tilings kept per tenant
+    max_tenants = 6            # cross-product guard
+
+    def retile_sets(self, session, hints, plan, add) -> None:
+        options: List[List[ExecutionPlan]] = []
+        for cm in session.singles:
+            uniq: List[ExecutionPlan] = []
+            seen = set()
+            for _, p in sorted(cm.alt_plans.items(),
+                               key=lambda kv: kv[1].makespan):
+                s = _tiling_sig(p.tiled)
+                if s not in seen:
+                    seen.add(s)
+                    uniq.append(p)
+            options.append(uniq[:self.max_pool])
+
+        def congestion(plans) -> float:
+            load: Dict[str, float] = {}
+            for p in plans:
+                for r, b in p.busy.items():
+                    load[r] = load.get(r, 0.0) + b
+            return max(load.values(), default=0.0)
+
+        if all(options) and len(options) <= self.max_tenants:
+            combos = sorted(itertools.product(*options), key=congestion)
+            picked = 0
+            for plans in combos:
+                if picked >= self.max_complementary:
+                    break
+                if add([p.tiled for p in plans]):
+                    picked += 1
+
+
+for _strategy in (TileCentricStrategy(), AllOrNothingStrategy(),
+                  HeftStrategy(), SequentialBaselineStrategy(),
+                  ContentionRetileStrategy(), ComplementaryStrategy()):
+    register_strategy(_strategy)
+
+
+# ---------------------------------------------------------------------------
+# Compiled artifacts
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class CompiledModel:
+    graph: Graph
+    soc: SoC
+    mode: str
+    solution: TilingSolution
+    tiled: TiledGraph
+    plan: ExecutionPlan
+    candidates: Dict[str, float]       # candidate label -> exact makespan
+    # every feasible stage-1 candidate's exact stage-2 plan (including the
+    # winner): runner-up tilings that lose compile-alone can still be the
+    # co-optimal choice in a multi-tenant compile (complementary device
+    # affinities), so the multi-tenant search re-examines them
+    alt_plans: Dict[str, ExecutionPlan] = dataclasses.field(
+        default_factory=dict, repr=False)
+
+    @property
+    def makespan_cycles(self) -> float:
+        return self.plan.makespan
+
+    @property
+    def runtime_ms(self) -> float:
+        return self.soc.cycles_to_ms(self.plan.makespan)
+
+    def flops_per_s(self) -> float:
+        """FLOPS as reported in the paper's tables (2*MACs / runtime)."""
+        secs = self.plan.makespan / (self.soc.freq_mhz * 1e6)
+        return 2.0 * self.graph.total_macs() / secs if secs else 0.0
+
+    def run(self, inputs, params):
+        from repro.core.runtime import execute_plan
+        return execute_plan(self.plan, inputs, params)
+
+    def emit(self, out_dir: str):
+        from repro.core.codegen import generate
+        return generate(self.plan, self.soc, out_dir)
+
+
+@dataclasses.dataclass
+class MultiCompiledModel:
+    """N independent models compiled into ONE co-schedule on one SoC.
+
+    ``singles`` holds the per-model compilations (each model's best tiling
+    and its compile-alone schedule — the sequential baseline); ``plan`` is
+    the merged resource-constrained co-schedule, whose tilings may be the
+    compile-alone ones or a contention-aware re-tiling (whichever gave the
+    better objective); ``baseline_plan`` is the co-schedule restricted to
+    the compile-alone tilings (the pre-re-tiling behaviour).  When built by
+    a :class:`DeploymentSession` (the normal path), ``plan_for`` and
+    ``tenant_plan`` route through the session's occupancy-indexed
+    :class:`PlanStore`, so partial occupancy gets a real (cached) subset
+    co-schedule instead of ``None``."""
+    graphs: List[Graph]
+    soc: SoC
+    mode: str
+    singles: List[CompiledModel]
+    plan: MultiExecutionPlan
+    baseline_plan: Optional[MultiExecutionPlan] = None
+    session: Optional["DeploymentSession"] = \
+        dataclasses.field(default=None, repr=False)
+    _tenant_plans: Optional[List[Optional[ExecutionPlan]]] = \
+        dataclasses.field(default=None, repr=False)
+
+    @property
+    def makespan_cycles(self) -> float:
+        return self.plan.makespan
+
+    @property
+    def runtime_ms(self) -> float:
+        return self.soc.cycles_to_ms(self.plan.makespan)
+
+    @property
+    def sequential_makespan_cycles(self) -> float:
+        """Compile-each-model-alone, run back-to-back (the baseline)."""
+        return sum(cm.plan.makespan for cm in self.singles)
+
+    @property
+    def baseline_makespan_cycles(self) -> float:
+        """Co-scheduled makespan with the compile-alone tilings (the PR-1
+        behaviour, before contention-aware re-tiling)."""
+        return (self.baseline_plan.makespan if self.baseline_plan is not None
+                else self.plan.makespan)
+
+    @property
+    def retiled(self) -> bool:
+        """True when the winning co-schedule uses re-tiled graphs."""
+        return any(tg is not cm.tiled
+                   for tg, cm in zip(self.plan.tenants, self.singles))
+
+    @property
+    def speedup(self) -> float:
+        return (self.sequential_makespan_cycles / self.plan.makespan
+                if self.plan.makespan else 1.0)
+
+    def tenant_latency_ms(self, i: int) -> float:
+        """Completion time of tenant ``i`` inside the co-schedule."""
+        return self.soc.cycles_to_ms(self.plan.tenant_makespans[i])
+
+    def tenant_plan(self, i: int) -> ExecutionPlan:
+        """Single-model schedule over the SAME tiled graph tenant ``i``
+        uses inside the co-schedule — the bitwise numeric reference for the
+        interleaved execution.  Equals ``singles[i].plan`` unless that
+        tenant was re-tiled; re-tiled schedules are built once and cached
+        in the session's :class:`PlanStore` (repeated engine rounds reuse
+        the cached schedule instead of re-deriving it)."""
+        if self.plan.tenants[i] is self.singles[i].tiled:
+            return self.singles[i].plan
+        if self.session is not None:
+            return self.session.tenant_plan(i)
+        # legacy path for hand-built artifacts without a session
+        if self._tenant_plans is None:
+            self._tenant_plans = [None] * len(self.graphs)
+        if self._tenant_plans[i] is None:
+            self._tenant_plans[i] = schedule(self.plan.tenants[i], self.soc,
+                                             self.mode, restarts=1,
+                                             anneal_iters=0)
+        return self._tenant_plans[i]
+
+    def plan_for(self, active: Sequence[int]
+                 ) -> Optional[MultiExecutionPlan]:
+        """Co-schedule covering exactly the ``active`` tenants.
+
+        Routed through the session's occupancy-indexed :class:`PlanStore`:
+        pre-compiled subsets hit the cache, anything else is compiled
+        lazily and cached, so *every* non-empty occupancy gets a validated
+        co-schedule.  Tenant indices inside the returned plan are
+        positional over ``sorted(set(active))``.  Returns ``None`` only on
+        a session-less artifact asked for a partial occupancy (the legacy
+        behaviour)."""
+        ids = sorted({int(a) for a in active})
+        if ids == list(range(len(self.graphs))):
+            return self.plan
+        if self.session is None:
+            return None
+        return self.session.plan_for(ids)
+
+    def store_stats(self) -> Optional[Dict[str, int]]:
+        """Hit/miss/compile counters of the session's plan store (``None``
+        for session-less artifacts)."""
+        return (self.session.store.stats()
+                if self.session is not None else None)
+
+    def run(self, inputs_list, params_list):
+        from repro.core.runtime import execute_multi_plan
+        return execute_multi_plan(self.plan, inputs_list, params_list)
+
+
+def _tiling_sig(tg: TiledGraph) -> tuple:
+    return tuple(sorted((s.device, s.op_names, s.tile_lo, s.tile_hi)
+                        for s in tg.supernodes))
+
+
+def _sets_sig(tgs: Sequence[TiledGraph]) -> tuple:
+    return tuple(_tiling_sig(tg) for tg in tgs)
+
+
+# ---------------------------------------------------------------------------
+# Occupancy-indexed plan store
+# ---------------------------------------------------------------------------
+
+
+class PlanStore:
+    """Cache of compiled schedules keyed by occupancy.
+
+    Co-schedules are keyed by ``frozenset`` of active tenant indices;
+    single-tenant reference schedules (the bitwise numeric references for
+    re-tiled tenants) are keyed by tenant index.  ``hits`` / ``misses`` /
+    ``compiles`` count lookups and lazy compilations across both maps —
+    a miss that compiles increments both ``misses`` and ``compiles``, so
+    the cache contract "miss compiles once, then hits" is assertable."""
+
+    def __init__(self) -> None:
+        self._co: Dict[FrozenSet[int], MultiExecutionPlan] = {}
+        self._tenant: Dict[int, ExecutionPlan] = {}
+        self.hits = 0
+        self.misses = 0
+        self.compiles = 0
+
+    def __len__(self) -> int:
+        return len(self._co) + len(self._tenant)
+
+    def __contains__(self, key) -> bool:
+        if isinstance(key, int):
+            return key in self._tenant
+        return frozenset(key) in self._co
+
+    def occupancies(self) -> List[FrozenSet[int]]:
+        """Cached co-schedule occupancies, smallest first."""
+        return sorted(self._co, key=lambda s: (len(s), sorted(s)))
+
+    def seed(self, active: Sequence[int], plan: MultiExecutionPlan) -> None:
+        """Register an already-compiled co-schedule (no counter changes)."""
+        self._co[frozenset(active)] = plan
+
+    def seed_tenant(self, tenant: int, plan: ExecutionPlan) -> None:
+        """Register an already-compiled tenant reference schedule (no
+        counter changes — reuse of an existing plan is not a compile)."""
+        self._tenant[tenant] = plan
+
+    def co_plan(self, active: Sequence[int],
+                build: Callable[[], MultiExecutionPlan]
+                ) -> MultiExecutionPlan:
+        key = frozenset(active)
+        if key in self._co:
+            self.hits += 1
+            return self._co[key]
+        self.misses += 1
+        plan = build()
+        self.compiles += 1
+        self._co[key] = plan
+        return plan
+
+    def tenant_plan(self, tenant: int,
+                    build: Callable[[], ExecutionPlan]) -> ExecutionPlan:
+        if tenant in self._tenant:
+            self.hits += 1
+            return self._tenant[tenant]
+        self.misses += 1
+        plan = build()
+        self.compiles += 1
+        self._tenant[tenant] = plan
+        return plan
+
+    def stats(self) -> Dict[str, int]:
+        return {"hits": self.hits, "misses": self.misses,
+                "compiles": self.compiles, "co_plans": len(self._co),
+                "tenant_plans": len(self._tenant)}
+
+
+# ---------------------------------------------------------------------------
+# The session
+# ---------------------------------------------------------------------------
+
+
+class DeploymentSession:
+    """A reusable compiler session over one :class:`CompileRequest`.
+
+    The session owns the per-model compilations (``singles``), the unified
+    candidate search (one loop over the registered
+    :class:`CandidateStrategy` entries, arbitrated by the exact stage-2
+    model under the typed :class:`Objective`), the bounded
+    contention-hint fixpoint iteration, and the occupancy-indexed
+    :class:`PlanStore` answering ``plan_for`` at any occupancy."""
+
+    def __init__(self, request: CompileRequest,
+                 objective: Optional[Objective] = None) -> None:
+        self.request = request
+        self.objective = objective if objective is not None else Objective()
+        names = (list(request.strategies) if request.strategies is not None
+                 else default_strategy_names(request.mode,
+                                             request.retile_for_contention))
+        self.strategies: List[CandidateStrategy] = \
+            [get_strategy(n) for n in names]
+        self.store = PlanStore()
+        self.hint_rounds = 0           # contention fixpoint rounds executed
+        self._singles: Optional[List[CompiledModel]] = None
+        self._multi: Optional[MultiCompiledModel] = None
+
+    # -- unified single-model candidate search ------------------------------
+
+    @property
+    def singles(self) -> List[CompiledModel]:
+        if self._singles is None:
+            self._singles = [self._compile_one(g)
+                             for g in self.request.graphs]
+        return self._singles
+
+    def compile_single(self, index: int = 0) -> CompiledModel:
+        """Compile-alone artifact for graph ``index`` (what the
+        ``compile_model`` wrapper returns)."""
+        return self.singles[index]
+
+    def _single_specs(self) -> List[CandidateSpec]:
+        specs: List[CandidateSpec] = []
+        for strat in self.strategies:
+            specs.extend(strat.single_candidates(self.request))
+        return specs
+
+    def _build_candidate(self, g: Graph, spec: CandidateSpec
+                         ) -> Optional[tuple]:
+        req = self.request
+        tiles = max(spec.tiles, 1)
+        if spec.stage1 == "heft":
+            from repro.core.heft import heft_solution
+            try:
+                sol = heft_solution(g, req.soc, req.patterns,
+                                    requested_tiles=tiles,
+                                    fuse_joins=spec.host_tiles)
+                tg = rewrite(g, req.soc, sol)
+                plan = schedule(tg, req.soc, "matcha_nt")
+            except Exception:
+                return None
+        else:
+            try:
+                sol = optimize_tiling(g, req.soc, req.patterns,
+                                      mode=spec.stage1,
+                                      requested_tiles=tiles,
+                                      time_budget_s=req.time_budget_s,
+                                      host_tiles=spec.host_tiles)
+                tg = rewrite(g, req.soc, sol)
+                plan = schedule(tg, req.soc, spec.stage1)
+            except Exception:
+                return None
+        if validate_schedule(plan):
+            return None
+        return sol, tg, plan
+
+    def _compile_one(self, g: Graph) -> CompiledModel:
+        req = self.request
+        g.validate()
+        candidates: Dict[str, float] = {}
+        alt_plans: Dict[str, ExecutionPlan] = {}
+        best: Optional[tuple] = None
+        for spec in self._single_specs():
+            got = self._build_candidate(g, spec)
+            if got is None:
+                continue
+            sol, tg, plan = got
+            candidates[spec.label] = plan.makespan
+            alt_plans[spec.label] = plan
+            if best is None or plan.makespan < best[2].makespan:
+                best = (sol, tg, plan)
+        if best is None:
+            raise RuntimeError(f"compilation produced no feasible plan "
+                               f"(mode={req.mode})")
+        sol, tg, plan = best
+        # the winner is registered in alt_plans under its candidate label;
+        # relabelling the returned plan with the *requested* mode must not
+        # drift the stored candidate, so label a shallow copy instead of
+        # mutating the shared object
+        plan = dataclasses.replace(plan, mode=req.mode)
+        return CompiledModel(graph=g, soc=req.soc, mode=req.mode,
+                             solution=sol, tiled=tg, plan=plan,
+                             candidates=candidates, alt_plans=alt_plans)
+
+    # -- multi-tenant compile with bounded contention fixpoint --------------
+
+    def compile(self, precompile: Optional[Sequence[Sequence[int]]] = None
+                ) -> MultiCompiledModel:
+        """Compile the full house; idempotent (the artifact is cached).
+
+        ``precompile`` optionally lists occupancy subsets to co-schedule
+        eagerly into the :class:`PlanStore` (anything else is compiled
+        lazily on the first ``plan_for`` miss)."""
+        if self._multi is None:
+            self._multi = self._compile_multi()
+        if precompile:
+            self.precompile(precompile)
+        return self._multi
+
+    def _compile_multi(self) -> MultiCompiledModel:
+        req = self.request
+        singles = self.singles
+        base_tgs = [cm.tiled for cm in singles]
+        single_plans = [cm.plan for cm in singles]
+        baseline = schedule_multi(base_tgs, req.soc, budgets=req.budgets,
+                                  singles=single_plans,
+                                  objective=self.objective)
+        plan = baseline
+        retilers = [s for s in self.strategies if s.retiles]
+        if (req.retile_for_contention and len(req.graphs) > 1
+                and req.mode in ASYNC_MODES and retilers):
+            plan = self._contention_fixpoint(baseline, base_tgs, retilers)
+        errs = validate_multi_schedule(plan)
+        if errs:
+            raise RuntimeError(f"infeasible co-schedule: {errs[:5]}")
+        mc = MultiCompiledModel(graphs=list(req.graphs), soc=req.soc,
+                                mode=req.mode, singles=singles, plan=plan,
+                                baseline_plan=baseline, session=self)
+        self.store.seed(range(len(req.graphs)), plan)
+        return mc
+
+    def _contention_fixpoint(self, baseline: MultiExecutionPlan,
+                             base_tgs: List[TiledGraph],
+                             retilers: Sequence[CandidateStrategy]
+                             ) -> MultiExecutionPlan:
+        """hints -> re-tile -> re-schedule until fixpoint (bounded by
+        ``max_hint_rounds``): each round summarizes the incumbent plan
+        into per-tenant :class:`Contention` contexts, asks every re-tiling
+        strategy for fresh joint candidate sets (deduplicated against all
+        earlier rounds), and re-arbitrates under the exact shared-resource
+        model.  The incumbent only ever improves under the objective, so
+        re-tiled <= PR-1 co-scheduled <= sequential still holds."""
+        req = self.request
+        plan = baseline
+        seen = {_sets_sig(base_tgs)}
+        for _ in range(req.max_hint_rounds):
+            hints = contention_hints(plan, req.soc)
+            alt_sets: List[List[TiledGraph]] = []
+
+            def add(tgs: Sequence[TiledGraph]) -> bool:
+                sig = _sets_sig(tgs)
+                if sig in seen:
+                    return False
+                seen.add(sig)
+                alt_sets.append(list(tgs))
+                return True
+
+            for strat in retilers:
+                strat.retile_sets(self, hints, plan, add)
+            if not alt_sets:
+                break                   # nothing new to try: fixpoint
+            self.hint_rounds += 1
+            new_plan = schedule_multi(base_tgs, req.soc, budgets=req.budgets,
+                                      alt_tgs=alt_sets, incumbent=plan,
+                                      objective=self.objective)
+            if new_plan is plan:
+                break                   # no candidate beat the incumbent
+            plan = new_plan
+        # determinism guard, under the same objective semantics the search
+        # used (a tolerance-free makespan comparison here could revert a
+        # winner the objective picked on the eviction tie-break)
+        if self.objective.better(baseline, plan):
+            plan = baseline
+        return plan
+
+    # -- occupancy-indexed plans --------------------------------------------
+
+    def _check_active(self, active: Sequence[int]) -> List[int]:
+        n = len(self.request.graphs)
+        ids = sorted({int(a) for a in active})
+        if not ids:
+            raise ValueError("plan_for needs at least one active tenant")
+        if ids[0] < 0 or ids[-1] >= n:
+            raise ValueError(f"active tenants {ids} out of range for "
+                             f"{n} graphs")
+        return ids
+
+    def plan_for(self, active: Sequence[int]) -> MultiExecutionPlan:
+        """Validated co-schedule covering exactly the ``active`` tenants,
+        from the :class:`PlanStore` (compiled lazily on the first miss).
+        Tenant indices inside the returned plan are positional over
+        ``sorted(set(active))``."""
+        self.compile()
+        ids = self._check_active(active)
+        return self.store.co_plan(ids, lambda: self._compile_subset(ids))
+
+    def precompile(self, subsets: Sequence[Sequence[int]]) -> None:
+        """Eagerly co-schedule the given occupancy subsets into the store."""
+        for subset in subsets:
+            self.plan_for(subset)
+
+    def _compile_subset(self, ids: List[int]) -> MultiExecutionPlan:
+        """Subset co-schedule over the tilings the full-house winner chose:
+        the active tenants keep their (possibly re-tiled) graphs, the L2
+        is re-split among just them (or sliced from the request's explicit
+        budgets), and the sequential concatenation of their reference
+        schedules stays a candidate — so a subset co-schedule is never
+        worse than running its members back-to-back, and its numerics are
+        bitwise those of the members' ``tenant_plan`` references."""
+        req = self.request
+        mc = self._multi
+        tgs = [mc.plan.tenants[i] for i in ids]
+        refs = [self.tenant_plan(i) for i in ids]
+        budgets = ([req.budgets[i] for i in ids]
+                   if req.budgets is not None else None)
+        plan = schedule_multi(tgs, req.soc, budgets=budgets, singles=refs,
+                              objective=self.objective)
+        errs = validate_multi_schedule(plan)
+        if errs:
+            raise RuntimeError(f"infeasible subset co-schedule for tenants "
+                               f"{ids}: {errs[:5]}")
+        return plan
+
+    def tenant_plan(self, i: int) -> ExecutionPlan:
+        """Single-model reference schedule for tenant ``i`` over the tiled
+        graph it uses inside the co-schedule, cached in the store."""
+        mc = self.compile()
+        tg = mc.plan.tenants[i]
+        if tg is self.singles[i].tiled:
+            return self.singles[i].plan
+        if i not in self.store:
+            # a complementary-selection winner's tiling already has a
+            # full-effort compile-alone plan in the candidate pool; seed
+            # it (reuse, not a compile) instead of re-scheduling at
+            # reduced effort
+            for p in self.singles[i].alt_plans.values():
+                if p.tiled is tg:
+                    self.store.seed_tenant(i, p)
+                    break
+        return self.store.tenant_plan(
+            i, lambda: schedule(tg, self.request.soc, self.request.mode,
+                                restarts=1, anneal_iters=0))

@@ -916,14 +916,32 @@ def concat_plans(singles: Sequence[ExecutionPlan], soc: SoC,
                               budgets=budgets, mode="sequential")
 
 
+def _objective_better(cand, incumbent, objective) -> bool:
+    """Candidate-vs-incumbent comparison for the co-schedule search.
+
+    ``objective`` is a typed objective (``core.deploy.Objective`` — duck-
+    typed here to keep this module free of a deploy import) whose
+    ``better`` resolves near-equal primary values by the tie-break
+    (eviction count by default); ``None`` falls back to the legacy pure-
+    makespan strict comparison."""
+    if incumbent is None:
+        return cand is not None
+    if cand is None:
+        return False
+    if objective is not None:
+        return objective.better(cand, incumbent)
+    return cand.makespan < incumbent.makespan - 1e-9
+
+
 def _search_coschedule(tgs: Sequence[TiledGraph], soc: SoC,
-                       budgets: Sequence[int], restarts: int, seed: int
+                       budgets: Sequence[int], restarts: int, seed: int,
+                       objective=None
                        ) -> Tuple[Optional[MultiExecutionPlan],
                                   Optional[Exception]]:
     """Priority-scheme search for ONE candidate tiling set: merged-DAG
     upward rank, per-tenant-normalized rank, topological index, and seeded
     perturbations — each simulated greedily under the shared-resource
-    model; the best feasible plan wins."""
+    model; the best feasible plan under ``objective`` wins."""
     try:
         dag = build_multi_dag(tgs, soc, budgets)
     except (MemoryError, RuntimeError, ValueError) as e:
@@ -954,7 +972,9 @@ def _search_coschedule(tgs: Sequence[TiledGraph], soc: SoC,
             continue
         if validate_multi_schedule(plan):
             continue
-        if best is None or plan.makespan < best.makespan:
+        if best is None or (objective.better(plan, best)
+                            if objective is not None
+                            else plan.makespan < best.makespan):
             best = plan
     return best, last_err
 
@@ -964,38 +984,43 @@ def schedule_multi(tgs: Sequence[TiledGraph], soc: SoC,
                    singles: Optional[Sequence[ExecutionPlan]] = None,
                    restarts: int = 3, seed: int = 0,
                    alt_tgs: Optional[Sequence[Sequence[TiledGraph]]] = None,
-                   incumbent: Optional[MultiExecutionPlan] = None
-                   ) -> MultiExecutionPlan:
-    """Search for a minimum-makespan co-schedule of N tiled graphs.
+                   incumbent: Optional[MultiExecutionPlan] = None,
+                   objective=None) -> MultiExecutionPlan:
+    """Search for a minimum-objective co-schedule of N tiled graphs.
 
     ``tgs`` holds each tenant's compile-alone tiling; ``alt_tgs`` supplies
     alternative per-tenant tiling sets (e.g. contention-aware re-tilings
-    from ``core.api.compile_multi``) that are searched under the same
-    shared-resource model.  An alternative replaces the primary only on a
-    *strictly* better makespan, so with a fixed seed the result is never
-    worse than scheduling the compile-alone tilings.  When the
-    single-model plans are supplied, the sequential concatenation is a
-    candidate too, so the result is never worse than running each model
-    alone back-to-back.  ``incumbent`` injects a previously computed plan
-    for ``tgs`` (same budgets/seed) as the plan to beat, skipping the
-    deterministic re-search of the primary set."""
+    from the deployment session) that are searched under the same
+    shared-resource model.  An alternative replaces the primary only when
+    *strictly* better under ``objective`` (a ``core.deploy.Objective``;
+    ``None`` = legacy pure makespan — the default typed objective adds an
+    eviction-count tie-break among near-equal makespans), so with a fixed
+    seed the result is never worse than scheduling the compile-alone
+    tilings.  When the single-model plans are supplied, the sequential
+    concatenation is a candidate too, so the result is never worse than
+    running each model alone back-to-back.  ``incumbent`` injects a
+    previously computed plan for ``tgs`` (same budgets/seed) as the plan
+    to beat, skipping the deterministic re-search of the primary set."""
     budgets = _check_budgets(budgets, len(tgs)) if budgets is not None \
         else default_budgets(soc, len(tgs))
     if incumbent is not None:
         best, last_err = incumbent, None
     else:
         best, last_err = _search_coschedule(tgs, soc, budgets, restarts,
-                                            seed)
+                                            seed, objective=objective)
     for alt in (alt_tgs or []):
-        cand, err = _search_coschedule(alt, soc, budgets, restarts, seed)
+        cand, err = _search_coschedule(alt, soc, budgets, restarts, seed,
+                                       objective=objective)
         if cand is None:
             last_err = err or last_err
             continue
-        if best is None or cand.makespan < best.makespan - 1e-9:
+        if _objective_better(cand, best, objective):
             best = cand
     if singles is not None:
         seq = concat_plans(singles, soc, budgets)
-        if best is None or seq.makespan < best.makespan:
+        if best is None or (objective.better(seq, best)
+                            if objective is not None
+                            else seq.makespan < best.makespan):
             best = seq
     if best is None:
         raise RuntimeError(f"no feasible co-schedule found: {last_err}")

@@ -108,6 +108,15 @@ class _MVar:
     y_var: int = -1
 
 
+def tile_granularities(requested_tiles: int) -> List[int]:
+    """Strategy hook: the tile-count ladder the tile-centric candidate
+    strategy (``core.deploy.TileCentricStrategy``) evaluates — the
+    requested granularity plus one coarser halving.  The exact stage-2
+    model arbitrates between them (§3.1); extending the ladder here widens
+    every deployment session's search without touching the session code."""
+    return [requested_tiles, requested_tiles // 2]
+
+
 def _match_tiles(g: Graph, m: Match, requested: int) -> Optional[int]:
     """Common T for all ops of the chain (None => invalid multi-op match)."""
     ts = [max_tiles(g, g.ops[name], requested) for name in m.ops]

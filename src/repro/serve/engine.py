@@ -7,11 +7,14 @@ runnable examples.
 
 :class:`MultiModelEngine` is the multi-tenant counterpart at the compiled-
 plan level: it admits inference requests for N *different* models compiled
-onto one SoC (``repro.core.api.compile_multi``) and dispatches them in
-co-scheduled rounds — when every tenant has work queued, one round executes
-the merged co-schedule (all models concurrently, per-tenant latency from
-the co-schedule's analytic model); otherwise the active tenants fall back
-to their compile-alone plans.
+onto one SoC (``repro.core.api.compile_multi`` / a
+``repro.core.deploy.DeploymentSession``) and dispatches them in
+co-scheduled rounds — whenever two or more tenants have work queued, the
+round executes the co-schedule covering exactly that occupancy
+(``plan_for(active)``, answered from the session's occupancy-indexed plan
+store, compiled lazily on the first miss); a lone active tenant runs its
+cached single-model reference schedule.  The compile-alone back-to-back
+fallback remains only for session-less artifacts.
 """
 
 from __future__ import annotations
@@ -133,12 +136,13 @@ class MultiModelEngine:
     """Admits requests for N co-compiled models and serves them in rounds.
 
     Each call to :meth:`step` dispatches at most one request per tenant.
-    If *every* tenant has a request queued, the round runs the merged
-    multi-tenant co-schedule (``execute_multi_plan``) — all models advance
-    concurrently and the round costs the co-schedule makespan; otherwise
-    each active tenant runs its compile-alone plan back-to-back (the
-    sequential baseline).  Per-request latency is taken from the analytic
-    schedule model (cycles -> ms at the SoC clock)."""
+    Whenever two or more tenants have a request queued, the round runs the
+    co-schedule covering exactly that occupancy (``plan_for`` from the
+    session's occupancy-indexed plan store) — the active models advance
+    concurrently and the round costs that co-schedule's makespan; a lone
+    active tenant runs its cached single-model reference schedule.
+    Per-request latency is taken from the analytic schedule model
+    (cycles -> ms at the SoC clock)."""
 
     def __init__(self, compiled, params_list=None, seed: int = 0):
         from repro.core.runtime import init_params
@@ -156,6 +160,7 @@ class MultiModelEngine:
         self._next_rid = 0
         self._round = 0
         self.co_rounds = 0
+        self.subset_co_rounds = 0     # co-rounds at partial occupancy
         self.solo_dispatches = 0
         self.busy_cycles = 0.0
 
@@ -187,47 +192,55 @@ class MultiModelEngine:
 
         The engine passes the round's occupancy (which tenants have queued
         work) down to the compiled artifact: ``plan_for(active)`` answers
-        with a co-schedule covering exactly that occupancy when one exists
-        (today: the full house, possibly contention-aware re-tiled);
-        otherwise the active tenants run their compile-alone plans."""
+        with a co-schedule covering exactly that occupancy (full house or
+        any subset — the session's plan store compiles subset co-schedules
+        lazily and caches them).  A lone active tenant runs its cached
+        single-model reference schedule (``tenant_plan``); the back-to-back
+        compile-alone fallback only remains for session-less artifacts
+        whose ``plan_for`` still answers ``None`` at partial occupancy."""
         from repro.core.runtime import execute_multi_plan, execute_plan
-        active = [q[0] for q in self.queues if q]
+        active = [q[0] for q in self.queues if q]   # tenant-sorted by scan
         if not active:
             return []
         self._round += 1
         completed: List[int] = []
-        co_plan = self.compiled.plan_for([r.tenant for r in active])
+        co_plan = (self.compiled.plan_for([r.tenant for r in active])
+                   if len(active) >= 2 else None)
         if co_plan is not None:
-            # one co-scheduled round, all active models concurrent
-            reqs = [q.pop(0) for q in self.queues]
-            outs = execute_multi_plan(co_plan,
-                                      [r.inputs for r in reqs], self.params)
+            # one co-scheduled round covering exactly the active tenants;
+            # positions in the subset plan follow sorted tenant ids, which
+            # is the order ``active`` was gathered in
+            reqs = [self.queues[r.tenant].pop(0) for r in active]
+            outs = execute_multi_plan(co_plan, [r.inputs for r in reqs],
+                                      [self.params[r.tenant] for r in reqs])
             self.co_rounds += 1
+            if len(reqs) < self.n_tenants:
+                self.subset_co_rounds += 1
             self.busy_cycles += co_plan.makespan
-            for i, r in enumerate(reqs):
+            for pos, r in enumerate(reqs):
                 r.latency_ms = self.soc.cycles_to_ms(
-                    co_plan.tenant_makespans[i])
+                    co_plan.tenant_makespans[pos])
                 r.wait_rounds = self._round - 1 - r.submit_round
                 r.co_scheduled = True
-                self.results[r.rid] = outs[i]
+                self.results[r.rid] = outs[pos]
                 self.done[r.rid] = r
                 completed.append(r.rid)
         else:
-            # partial occupancy: compile-alone plans, back-to-back; each
+            # a lone tenant (or a session-less artifact at partial
+            # occupancy): single-model schedules, back-to-back; each
             # request's latency includes the in-round wait behind the
             # tenants dispatched before it (consistent with the
-            # co-scheduled path, which charges tenant_makespans[i])
+            # co-scheduled path, which charges tenant_makespans[pos])
             round_offset = 0.0
             for r in active:
                 self.queues[r.tenant].pop(0)
-                single = self.compiled.singles[r.tenant]
-                outs = execute_plan(single.plan, r.inputs,
-                                    self.params[r.tenant])
+                plan = self.compiled.tenant_plan(r.tenant)
+                outs = execute_plan(plan, r.inputs, self.params[r.tenant])
                 self.solo_dispatches += 1
-                self.busy_cycles += single.plan.makespan
+                self.busy_cycles += plan.makespan
                 r.latency_ms = self.soc.cycles_to_ms(
-                    round_offset + single.plan.makespan)
-                round_offset += single.plan.makespan
+                    round_offset + plan.makespan)
+                round_offset += plan.makespan
                 r.wait_rounds = self._round - 1 - r.submit_round
                 self.results[r.rid] = outs
                 self.done[r.rid] = r
@@ -255,10 +268,14 @@ class MultiModelEngine:
                 "mean_wait_rounds": (sum(r.wait_rounds for r in reqs)
                                      / len(reqs) if reqs else 0.0),
             })
+        stats = (self.compiled.store_stats()
+                 if hasattr(self.compiled, "store_stats") else None)
         return {
             "served": served,
             "co_rounds": self.co_rounds,
+            "subset_co_rounds": self.subset_co_rounds,
             "solo_dispatches": self.solo_dispatches,
+            "plan_store": stats,
             "throughput_inf_per_s": served / secs if secs else 0.0,
             "speedup_vs_sequential": self.compiled.speedup,
             "retiled": self.compiled.retiled,

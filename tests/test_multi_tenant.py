@@ -72,6 +72,20 @@ def test_multi_numerics_bitmatch_single_plan(golden_mc):
                                   np.asarray(multi_out[i][t])), (g.name, t)
 
 
+def test_plan_for_partial_occupancy_no_fallback(golden_mc):
+    """The session-backed artifact answers partial occupancy with a real
+    validated co-schedule (the pre-PR-3 behaviour returned None and the
+    engine fell back to compile-alone plans)."""
+    for active in ([0], [1]):
+        plan = golden_mc.plan_for(active)
+        assert plan is not None
+        assert validate_multi_schedule(plan) == []
+        assert plan.makespan <= \
+            golden_mc.tenant_plan(active[0]).makespan + 1e-6
+    assert golden_mc.plan_for([0, 1]) is golden_mc.plan
+    assert golden_mc.store_stats()["co_plans"] >= 1
+
+
 def test_multi_engine_mixed_traffic(golden_mc):
     eng = MultiModelEngine(golden_mc)
     rids = [eng.submit("autoencoder"), eng.submit("ds_cnn"),
@@ -94,13 +108,15 @@ def test_multi_engine_mixed_traffic(golden_mc):
 
 def test_multi_engine_output_correctness(golden_mc):
     """Engine-served outputs equal the direct single-plan execution for the
-    same inputs and the engine's own parameters."""
+    same inputs and the engine's own parameters.  The solo dispatch path
+    runs the tenant's reference schedule (``tenant_plan`` — identical to
+    ``singles[0].plan`` unless the tenant was contention-re-tiled)."""
     eng = MultiModelEngine(golden_mc, seed=7)
     g0 = golden_mc.graphs[0]
     x = init_inputs(g0, 99)
     rid = eng.submit(0, inputs=x)
     eng.run()
-    want = execute_plan(golden_mc.singles[0].plan, x, eng.params[0])
+    want = execute_plan(golden_mc.tenant_plan(0), x, eng.params[0])
     for t in g0.outputs:
         assert np.array_equal(np.asarray(want[t]),
                               np.asarray(eng.results[rid][t]))

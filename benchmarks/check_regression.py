@@ -1,0 +1,121 @@
+"""Benchmark-regression gate for the multi-tenant co-scheduling benchmark.
+
+Compares a fresh ``benchmarks.multi_tenant --json`` report against the
+committed ``benchmarks/baseline.json`` and fails (exit 1) when any mix's
+co-scheduled makespan regressed by more than ``--tolerance`` (default 5%),
+or when the partial-occupancy trace got slower overall, or when any
+negative-gain subset round appeared (per-occupancy re-tiling makes the
+compile-alone back-to-back fallback a hard floor, so that count must stay
+zero).  Mixes present in only one of the two reports are listed but do not
+fail the gate (baselines refresh when the mix list changes).
+
+Usage (the CI bench lane):
+
+    PYTHONPATH=src python -m benchmarks.multi_tenant --fast \\
+        --json artifacts/multi_tenant.json
+    PYTHONPATH=src python -m benchmarks.check_regression \\
+        artifacts/multi_tenant.json
+
+Refreshing the baseline after an intentional perf change:
+
+    PYTHONPATH=src python -m benchmarks.multi_tenant --fast \\
+        --json benchmarks/baseline.json
+
+then commit the updated ``benchmarks/baseline.json`` with a note in the
+PR about why the numbers moved.  The makespans come from the analytic
+schedule model (deterministic seeds), but CP solves are time-budgeted, so
+a much slower CI machine can legitimately land on a different plan; the
+tolerance absorbs that, and a flaky failure on an untouched mix usually
+means the budget, not the code, moved.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+DEFAULT_BASELINE = os.path.join(os.path.dirname(__file__), "baseline.json")
+DEFAULT_TOLERANCE = 0.05
+
+
+def _mix_key(row) -> str:
+    return "+".join(row["mix"])
+
+
+def compare(report: dict, baseline: dict,
+            tolerance: float = DEFAULT_TOLERANCE) -> list:
+    """Returns a list of human-readable regression messages (empty = ok)."""
+    failures = []
+    base_mixes = {_mix_key(r): r for r in baseline.get("mixes", [])}
+    new_mixes = {_mix_key(r): r for r in report.get("mixes", [])}
+    for key, new in new_mixes.items():
+        base = base_mixes.get(key)
+        if base is None:
+            print(f"  [new mix, no baseline] {key}")
+            continue
+        got = new["retiled_coscheduled_ms"]
+        want = base["retiled_coscheduled_ms"]
+        ratio = got / want if want else 1.0
+        mark = "REGRESSION" if ratio > 1.0 + tolerance else "ok"
+        print(f"  {key:40s} baseline {want:9.2f} ms   now {got:9.2f} ms "
+              f"({(ratio - 1.0) * 100.0:+.1f}%)  {mark}")
+        if ratio > 1.0 + tolerance:
+            failures.append(
+                f"mix {key}: co-scheduled makespan {got:.2f} ms vs "
+                f"baseline {want:.2f} ms (+{(ratio - 1.0) * 100.0:.1f}% "
+                f"> {tolerance * 100.0:.0f}%)")
+    for key in base_mixes:
+        if key not in new_mixes:
+            print(f"  [mix dropped from report] {key}")
+
+    new_part = report.get("partial_occupancy") or {}
+    base_part = baseline.get("partial_occupancy") or {}
+    neg = new_part.get("negative_gain_rounds")
+    if neg:
+        failures.append(f"partial occupancy: {neg} negative-gain subset "
+                        f"rounds (expected 0)")
+    got = new_part.get("subset_total_ms")
+    want = base_part.get("subset_total_ms")
+    if got is not None and want:
+        ratio = got / want
+        mark = "REGRESSION" if ratio > 1.0 + tolerance else "ok"
+        print(f"  {'partial-occupancy trace total':40s} baseline "
+              f"{want:9.2f} ms   now {got:9.2f} ms "
+              f"({(ratio - 1.0) * 100.0:+.1f}%)  {mark}")
+        if ratio > 1.0 + tolerance:
+            failures.append(
+                f"partial-occupancy trace: {got:.2f} ms vs baseline "
+                f"{want:.2f} ms (+{(ratio - 1.0) * 100.0:.1f}%)")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("report", help="fresh multi_tenant --json output")
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE,
+                    help="committed baseline (default benchmarks/"
+                         "baseline.json)")
+    ap.add_argument("--tolerance", type=float, default=DEFAULT_TOLERANCE,
+                    help="allowed relative makespan growth (default 0.05)")
+    args = ap.parse_args(argv)
+    with open(args.report) as f:
+        report = json.load(f)
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    print(f"benchmark regression gate (tolerance "
+          f"{args.tolerance * 100.0:.0f}%):")
+    failures = compare(report, baseline, args.tolerance)
+    if failures:
+        print("\nFAIL:")
+        for msg in failures:
+            print(f"  - {msg}")
+        return 1
+    print("\nok: no makespan regression beyond tolerance, "
+          "no negative-gain rounds")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -52,11 +52,14 @@ def main() -> None:
         print(f"{g.name:14s} {alone:11.2f} {mc.tenant_latency_ms(i):18.2f}")
     seq_ms = soc.cycles_to_ms(mc.sequential_makespan_cycles)
     pr1_ms = soc.cycles_to_ms(mc.baseline_makespan_cycles)
+    br_ms = soc.cycles_to_ms(mc.best_response_makespan_cycles)
     print(f"\nround makespan: {seq_ms:.2f} ms sequential -> "
           f"{pr1_ms:.2f} ms co-scheduled -> "
-          f"{mc.runtime_ms:.2f} ms contention-re-tiled "
-          f"({mc.speedup:.2f}x, retiled={mc.retiled}, "
-          f"{session.hint_rounds} hint round(s), L2 budgets = "
+          f"{br_ms:.2f} ms best-response re-tiled -> "
+          f"{mc.runtime_ms:.2f} ms joint "
+          f"({mc.speedup:.2f}x, origin={mc.plan.origin}, "
+          f"{session.hint_rounds} hint round(s), "
+          f"joint={mc.joint_stats()}, L2 budgets = "
           f"{[b // 1024 for b in mc.plan.budgets]} KiB)")
     util = mc.plan.utilization()
     print("utilization: " + "  ".join(f"{d}={u:.0%}"

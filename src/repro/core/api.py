@@ -12,12 +12,15 @@ DeploymentSession` over a typed :class:`~repro.core.deploy.CompileRequest`
 runs one unified candidate search (a registry of named
 :class:`~repro.core.deploy.CandidateStrategy` entries: tile-centric at
 several granularities, the all-or-nothing corner, HEFT, contention-priced
-re-runs, complementary selections), arbitrates every candidate under the
-exact stage-2 model with a typed :class:`~repro.core.deploy.Objective`
-(makespan-primary, eviction-count tie-break), iterates the contention-hint
-loop to a bounded fixpoint, and caches co-schedules per occupancy in an
-indexed :class:`~repro.core.deploy.PlanStore` — so
-``MultiCompiledModel.plan_for(active)`` answers *partial* occupancy.
+re-runs, complementary selections, and the joint cross-tenant CP — one
+constraint program over every tenant's tile variables), arbitrates every
+candidate under the exact stage-2 model with a typed
+:class:`~repro.core.deploy.Objective` (makespan-primary, configurable
+ordered tie-break chain), iterates the contention-hint loop to a bounded
+fixpoint, and caches co-schedules per occupancy in an LRU-bounded
+:class:`~repro.core.deploy.PlanStore` — so
+``MultiCompiledModel.plan_for(active)`` answers *partial* occupancy with
+tilings re-decided for that occupancy.
 
 This module keeps the historical free-function surface:
 
@@ -75,7 +78,9 @@ def compile_multi(graphs: Sequence[Graph], soc: SoC,
                   requested_tiles: int = 16,
                   time_budget_s: float = 8.0,
                   retile_for_contention: bool = True,
-                  max_hint_rounds: int = 3) -> MultiCompiledModel:
+                  max_hint_rounds: int = 3,
+                  joint_tiling: bool = True,
+                  joint_time_budget_s: float = 6.0) -> MultiCompiledModel:
     """Compile N independent models into one multi-tenant co-schedule.
 
     Stage 1 runs per model exactly as :func:`compile_model`; stage 2 merges
@@ -84,19 +89,26 @@ def compile_multi(graphs: Sequence[Graph], soc: SoC,
     per-tenant ``budgets`` — default an equal split).  With
     ``retile_for_contention`` the session then iterates contention hints ->
     per-tenant re-tiling -> exact re-arbitration until fixpoint (bounded by
-    ``max_hint_rounds``).  The sequential concatenation of the single-model
-    schedules remains a candidate throughout, so the final makespan is
-    never worse than the re-tiling-free co-schedule, which is never worse
-    than the compile-each-model-alone baseline.
+    ``max_hint_rounds``), followed by the *joint* cross-tenant stage-1
+    solve (one CP over every tenant's tile variables — shared device
+    loads, one shared-L2 capacity constraint, coupled DMA; disabled with
+    ``joint_tiling=False``, time-bounded by ``joint_time_budget_s`` with a
+    best-response fallback).  The sequential concatenation of the
+    single-model schedules remains a candidate throughout, so
+
+        joint <= best-response <= re-tiling-free co-schedule <= sequential.
 
     The returned artifact is session-backed: ``plan_for(active)`` answers
     any occupancy from the session's :class:`PlanStore` (lazily compiling
-    subset co-schedules on first miss) and ``tenant_plan`` reuses cached
-    reference schedules."""
+    subset co-schedules on first miss — tiling re-decided per occupancy,
+    with the L2 re-split among the active tenants) and ``tenant_plan`` /
+    ``reference_plan`` reuse cached reference schedules."""
     assert len(graphs) >= 1
     request = CompileRequest(graphs=list(graphs), soc=soc, patterns=patterns,
                              mode=mode, requested_tiles=requested_tiles,
                              time_budget_s=time_budget_s, budgets=budgets,
                              retile_for_contention=retile_for_contention,
-                             max_hint_rounds=max_hint_rounds)
+                             max_hint_rounds=max_hint_rounds,
+                             joint_tiling=joint_tiling,
+                             joint_time_budget_s=joint_time_budget_s)
     return DeploymentSession(request).compile()

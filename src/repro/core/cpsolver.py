@@ -242,6 +242,95 @@ class CpModel:
                         wall_s=time.perf_counter() - t0)
 
 
+class JointCpModel:
+    """Multi-tenant composition layer over :class:`CpModel` (§3.1 lifted to
+    N co-resident networks, cf. HaX-CoNN's single SMT over all tenants).
+
+    Every tenant's decision variables live in ONE variable space; what makes
+    the model *joint* is how costs and capacities couple across tenants:
+
+      * loads are **keyed** by shared resource (a device name, the system
+        DMA engine): ``add_load(key, ...)`` contributions from different
+        tenants accumulate into one makespan term per key, so the objective
+        is the true co-resident makespan ``max_resource sum_tenants work``
+        instead of N independent per-tenant makespans;
+      * **capacity** constraints (the one shared-L2 budget) span every
+        tenant's variables: ``add_capacity`` states
+        ``sum(coeffs * x) <= cap`` over any mix of tenants' indicators.
+
+    ``new_int`` tags each variable with its tenant, so a joint solution can
+    be split back into per-tenant assignments (``tenant_values``).
+    """
+
+    def __init__(self) -> None:
+        self.model = CpModel()
+        self._keyed: Dict[str, Tuple[Dict[int, float], float]] = {}
+        self._tenant_of: List[int] = []        # var index -> tenant
+        self._finalized = False
+
+    # -- building ------------------------------------------------------------
+    def new_int(self, tenant: int, lo: int, hi: int, name: str = "") -> int:
+        v = self.model.new_int(lo, hi, name)
+        self._tenant_of.append(int(tenant))
+        return v
+
+    def add_le(self, coeffs: Dict[int, float], const: float = 0.0) -> None:
+        self.model.add_le(coeffs, const)
+
+    def add_eq(self, coeffs: Dict[int, float], const: float = 0.0) -> None:
+        self.model.add_eq(coeffs, const)
+
+    def add_capacity(self, coeffs: Dict[int, float], cap: float) -> None:
+        """Shared capacity: sum(coeffs * x) <= cap (spans tenants)."""
+        self.model.add_le(dict(coeffs), -float(cap))
+
+    def add_load(self, key: str, coeffs: Dict[int, float],
+                 const: float = 0.0) -> None:
+        """Accumulate a contribution into the makespan term for ``key``.
+
+        Contributions with the same key — typically one per (tenant, match)
+        on the same device — are summed into a single load, which is what
+        couples the tenants' tile variables in the objective."""
+        cur, cur_const = self._keyed.setdefault(key, ({}, 0.0))
+        for i, c in coeffs.items():
+            cur[i] = cur.get(i, 0.0) + c
+        self._keyed[key] = (cur, cur_const + float(const))
+
+    @property
+    def num_vars(self) -> int:
+        return self.model.num_vars
+
+    def load_keys(self) -> List[str]:
+        return sorted(self._keyed)
+
+    def tenant_values(self, values: Sequence[int], tenant: int
+                      ) -> Dict[int, int]:
+        """{var index -> value} restricted to one tenant's variables."""
+        return {i: int(values[i]) for i in range(len(self._tenant_of))
+                if self._tenant_of[i] == tenant}
+
+    # -- solving -------------------------------------------------------------
+    def _finalize(self) -> None:
+        if not self._finalized:
+            for key in self.load_keys():
+                coeffs, const = self._keyed[key]
+                self.model.add_load(coeffs, const)
+            self._finalized = True
+
+    def solve(self, hint: Optional[Sequence[int]] = None,
+              node_limit: int = 200_000,
+              time_budget_s: float = 10.0) -> Solution:
+        """One branch & bound over all tenants' variables.  A non-positive
+        ``time_budget_s`` means the joint solve's budget is already spent:
+        the caller's best-response fallback must engage, so we raise rather
+        than silently return the warm start as a 'joint' optimum."""
+        if time_budget_s <= 0.0:
+            raise Infeasible("joint solve time budget exhausted")
+        self._finalize()
+        return self.model.solve(hint=hint, node_limit=node_limit,
+                                time_budget_s=time_budget_s)
+
+
 def brute_force(model: CpModel) -> Solution:
     """Exhaustive search for tests (tiny domains only)."""
     n = model.num_vars

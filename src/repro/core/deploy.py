@@ -30,7 +30,19 @@ at varying occupancy needs:
 Inside the session's multi-tenant loop, ``contention_hints`` ->
 re-tile -> re-schedule iterates to a fixpoint (bounded by
 ``CompileRequest.max_hint_rounds``, default 3) instead of the previous
-single round; each round's winner seeds the next round's hints.
+single round; each round's winner seeds the next round's hints.  Since
+PR 4 the fixpoint has two phases: the per-tenant *best-response*
+strategies run first (the exact PR 2/3 trajectory, recorded as
+``best_response_plan``), then the ``joint-cp`` strategy — ONE constraint
+program over every tenant's tile variables
+(:class:`repro.core.tiling.JointTilingProblem`: shared device loads, one
+shared-L2 capacity constraint, DMA coupling) — continues from that
+incumbent, so ``joint <= best-response <= PR-1 <= sequential`` holds by
+construction.  ``plan_for`` misses re-decide tiling *per occupancy* (the
+L2 re-split among just the active tenants, compile-alone tilings as warm
+starts) with the compile-alone back-to-back concatenation as a hard
+floor, and numerics stay bitwise via per-``(tenant, tiling)`` reference
+schedules.
 
 ``core.api.compile_model`` / ``compile_multi`` remain as thin wrappers
 over a session, so every existing caller keeps working.
@@ -40,16 +52,20 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
-from typing import (Callable, Dict, FrozenSet, List, Optional, Sequence,
-                    Tuple)
+from collections import OrderedDict
+from typing import (Callable, Dict, FrozenSet, Hashable, List, Optional,
+                    Sequence, Set, Tuple)
 
+from repro.core import cpsolver
 from repro.core.ir import Graph
 from repro.core.patterns import Pattern
 from repro.core.rewrite import TiledGraph, rewrite
 from repro.core.schedule import (ExecutionPlan, MultiExecutionPlan,
-                                 contention_hints, schedule, schedule_multi,
-                                 validate_multi_schedule, validate_schedule)
-from repro.core.tiling import (Contention, TilingSolution, optimize_tiling,
+                                 concat_plans, contention_hints, schedule,
+                                 schedule_multi, validate_multi_schedule,
+                                 validate_schedule)
+from repro.core.tiling import (Contention, JointTilingProblem,
+                               TilingSolution, optimize_tiling,
                                tile_granularities)
 from repro.soc.device import SoC
 
@@ -67,7 +83,16 @@ ASYNC_MODES = ("matcha", "matcha_nt")
 
 
 OBJECTIVE_PRIMARIES = ("makespan",)
-OBJECTIVE_TIE_BREAKS = (None, "evictions")
+
+# tie-break key -> plan accessor; keys absent from a plan type score 0
+# (``retile_rounds`` only exists on MultiExecutionPlan, stamped by the
+# session's contention fixpoint)
+TIE_BREAK_KEYS = {
+    "evictions": lambda plan: float(plan.memory.evictions),
+    "dma_bytes": lambda plan: float(sum(d.bytes for d in plan.dmas)),
+    "retile_rounds": lambda plan: float(getattr(plan, "retile_rounds", 0)),
+}
+OBJECTIVE_TIE_BREAKS = (None,) + tuple(sorted(TIE_BREAK_KEYS))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -76,12 +101,17 @@ class Objective:
     comparisons.
 
     ``primary`` is minimized first; candidates whose primaries are within
-    ``tolerance`` of each other are resolved by ``tie_break``.  The default
-    closes the ROADMAP item: makespan-primary with an eviction-count
-    tie-break, so among near-equal makespans the plan with less forced
-    shared-L2 swap traffic wins."""
+    ``tolerance`` of each other are resolved by the ordered tie-break
+    chain.  ``tie_breaks`` accepts any ordered tuple of keys from
+    ``TIE_BREAK_KEYS`` (evictions, dma_bytes, retile_rounds), compared
+    lexicographically; the legacy single-key ``tie_break`` remains as a
+    convenience spelling for a one-element chain.  The default keeps the
+    PR-3 behaviour: makespan-primary with an eviction-count tie-break, so
+    among near-equal makespans the plan with less forced shared-L2 swap
+    traffic wins."""
     primary: str = "makespan"
     tie_break: Optional[str] = "evictions"
+    tie_breaks: Optional[Tuple[str, ...]] = None
     tolerance: float = 1e-9
 
     def __post_init__(self) -> None:
@@ -91,30 +121,43 @@ class Objective:
         if self.tie_break not in OBJECTIVE_TIE_BREAKS:
             raise ValueError(f"unknown tie-break {self.tie_break!r}; "
                              f"expected one of {OBJECTIVE_TIE_BREAKS}")
+        if self.tie_breaks is not None:
+            for key in self.tie_breaks:
+                if key not in TIE_BREAK_KEYS:
+                    raise ValueError(
+                        f"unknown tie-break {key!r} in chain "
+                        f"{self.tie_breaks}; expected keys from "
+                        f"{sorted(TIE_BREAK_KEYS)}")
         if self.tolerance < 0.0:
             raise ValueError(f"tolerance must be >= 0: {self.tolerance}")
 
-    def value(self, plan) -> Tuple[float, float]:
-        """(primary, tie-break) score of an Execution/MultiExecutionPlan —
-        lexicographically smaller is better."""
-        secondary = (float(plan.memory.evictions)
-                     if self.tie_break == "evictions" else 0.0)
-        return (plan.makespan, secondary)
+    @property
+    def chain(self) -> Tuple[str, ...]:
+        """The effective ordered tie-break chain."""
+        if self.tie_breaks is not None:
+            return tuple(self.tie_breaks)
+        return () if self.tie_break is None else (self.tie_break,)
+
+    def value(self, plan) -> Tuple[float, ...]:
+        """(primary, *tie-break chain) score of an Execution/
+        MultiExecutionPlan — lexicographically smaller is better."""
+        return (plan.makespan,) + tuple(TIE_BREAK_KEYS[k](plan)
+                                        for k in self.chain)
 
     def better(self, cand, incumbent) -> bool:
         """True when ``cand`` should replace ``incumbent``: strictly better
         on the primary (beyond ``tolerance``), or tied on the primary and
-        strictly better on the tie-break."""
+        strictly better somewhere down the tie-break chain."""
         if incumbent is None:
             return cand is not None
         if cand is None:
             return False
-        (cp, cs), (ip, is_) = self.value(cand), self.value(incumbent)
-        if cp < ip - self.tolerance:
+        cv, iv = self.value(cand), self.value(incumbent)
+        if cv[0] < iv[0] - self.tolerance:
             return True
-        if cp > ip + self.tolerance:
+        if cv[0] > iv[0] + self.tolerance:
             return False
-        return cs < is_
+        return cv[1:] < iv[1:]
 
 
 # ---------------------------------------------------------------------------
@@ -129,7 +172,18 @@ class CompileRequest:
     ``budgets`` fixes the per-tenant shared-L2 split (default: equal split
     among however many tenants are active in a given plan); ``strategies``
     overrides the mode-derived candidate-strategy list by registry name;
-    ``max_hint_rounds`` bounds the contention-hint fixpoint iteration."""
+    ``max_hint_rounds`` bounds the contention-hint fixpoint iteration.
+
+    ``joint_time_budget_s`` caps each joint cross-tenant CP solve (the
+    tentpole compile-latency bound: a solve that produces nothing within
+    the budget makes the session fall back to per-tenant best-response
+    re-tiling, so adding the joint stage never unbounds compile time);
+    ``joint_tiling=False`` disables the joint stage entirely (the
+    ``joint-cp`` strategy then contributes nothing).  The joint stage
+    rides the contention re-tiling loop, so it also needs
+    ``retile_for_contention=True`` (the default) — to ablate the joint CP
+    *against* best-response, pass an explicit ``strategies`` list
+    containing ``joint-cp``."""
     graphs: Sequence[Graph]
     soc: SoC
     patterns: Sequence[Pattern]
@@ -140,6 +194,9 @@ class CompileRequest:
     retile_for_contention: bool = True
     max_hint_rounds: int = 3
     strategies: Optional[Sequence[str]] = None
+    joint_tiling: bool = True
+    joint_time_budget_s: float = 6.0
+    store_max_entries: int = 64
 
     def __post_init__(self) -> None:
         if self.mode not in MODES:
@@ -153,6 +210,9 @@ class CompileRequest:
         if self.budgets is not None and len(self.budgets) != len(self.graphs):
             raise ValueError(f"budgets has {len(self.budgets)} entries for "
                              f"{len(self.graphs)} graphs")
+        if self.store_max_entries < 1:
+            raise ValueError(f"store_max_entries must be >= 1: "
+                             f"{self.store_max_entries}")
 
 
 # ---------------------------------------------------------------------------
@@ -218,7 +278,10 @@ def default_strategy_names(mode: str,
     """The mode-derived strategy list the old hardcoded trial lists encoded:
     tile-centric search only for full matcha, the all-or-nothing corner and
     HEFT for both asynchronous modes, a single sequential trial for the
-    tvm / match ablation baselines."""
+    tvm / match ablation baselines.  The multi-tenant re-tiling strategies
+    end with ``joint-cp`` — the joint cross-tenant CP runs *after* the
+    best-response strategies so the session's two-phase fixpoint can report
+    an exact best-response incumbent for the joint solve to beat."""
     if mode == "matcha":
         names = ["tile-centric", "all-or-nothing", "heft"]
     elif mode == "matcha_nt":
@@ -226,7 +289,7 @@ def default_strategy_names(mode: str,
     else:
         return ["sequential-baseline"]
     if retile_for_contention:
-        names += ["contention-retile", "complementary"]
+        names += ["contention-retile", "complementary", "joint-cp"]
     return names
 
 
@@ -374,9 +437,45 @@ class ComplementaryStrategy(CandidateStrategy):
                     picked += 1
 
 
+class JointTilingStrategy(CandidateStrategy):
+    """The tentpole: ONE constraint program over every tenant's tile
+    variables (:class:`repro.core.tiling.JointTilingProblem` — per-device
+    loads summed across tenants, one shared-L2 capacity constraint, DMA
+    congestion coupled through a shared makespan term), warm-started from
+    the incumbent plan's tilings and solved under the request's
+    ``joint_time_budget_s``.  A solve that produces nothing within the
+    budget falls back to per-tenant best-response re-tiling (delegated to
+    ``contention-retile`` when that strategy is not already running), so
+    enabling the joint stage never unbounds compile latency."""
+
+    name = "joint-cp"
+    retiles = True
+    joint = True               # session runs this in the second fixpoint
+    #                            phase, after the best-response incumbent
+
+    def retile_sets(self, session, hints, plan, add) -> None:
+        req = session.request
+        if not req.joint_tiling or req.mode not in ASYNC_MODES:
+            return
+        tgs = session.joint_tilings(list(range(len(req.graphs))),
+                                    warm=list(plan.tenants))
+        if tgs is not None:
+            add(tgs)
+            return
+        if not any(s.name == "contention-retile"
+                   for s in session.strategies):
+            # delegated fallback candidates must carry the *delegate's*
+            # label — a best-response plan must not be attributed to the
+            # joint solver in plan.origin
+            get_strategy("contention-retile").retile_sets(
+                session, hints, plan,
+                lambda tgs: add(tgs, "contention-retile"))
+
+
 for _strategy in (TileCentricStrategy(), AllOrNothingStrategy(),
                   HeftStrategy(), SequentialBaselineStrategy(),
-                  ContentionRetileStrategy(), ComplementaryStrategy()):
+                  ContentionRetileStrategy(), ComplementaryStrategy(),
+                  JointTilingStrategy()):
     register_strategy(_strategy)
 
 
@@ -469,6 +568,35 @@ class MultiCompiledModel:
                 else self.plan.makespan)
 
     @property
+    def best_response_makespan_cycles(self) -> float:
+        """Makespan after per-tenant best-response re-tiling only (the
+        PR 2/3 behaviour — phase A of the session's fixpoint, before the
+        joint cross-tenant solve).  By construction
+        ``plan.makespan <= best_response <= baseline <= sequential``."""
+        if self.session is not None and \
+                self.session.best_response_plan is not None:
+            return self.session.best_response_plan.makespan
+        return self.plan.makespan
+
+    def reference_plan(self, i: int, tg=None) -> ExecutionPlan:
+        """Reference schedule for tenant ``i`` over ``tg`` (default: the
+        full-house tiling) — see :meth:`DeploymentSession.reference_plan`."""
+        if tg is None or tg is self.plan.tenants[i]:
+            return self.tenant_plan(i)
+        if self.session is not None:
+            return self.session.reference_plan(i, tg)
+        raise ValueError("session-less artifact has no per-occupancy "
+                         "reference plans")
+
+    def joint_stats(self) -> Optional[Dict[str, int]]:
+        """Joint cross-tenant solver counters (``None`` for session-less
+        artifacts): successful solves and best-response fallbacks."""
+        if self.session is None:
+            return None
+        return {"solves": self.session.joint_solves,
+                "fallbacks": self.session.joint_fallbacks}
+
+    @property
     def retiled(self) -> bool:
         """True when the winning co-schedule uses re-tiled graphs."""
         return any(tg is not cm.tiled
@@ -547,39 +675,80 @@ def _sets_sig(tgs: Sequence[TiledGraph]) -> tuple:
 
 
 class PlanStore:
-    """Cache of compiled schedules keyed by occupancy.
+    """Cache of compiled schedules keyed by occupancy, LRU-bounded.
 
     Co-schedules are keyed by ``frozenset`` of active tenant indices;
     single-tenant reference schedules (the bitwise numeric references for
-    re-tiled tenants) are keyed by tenant index.  ``hits`` / ``misses`` /
+    re-tiled / per-occupancy tenants) are keyed by tenant index or by a
+    ``(tenant, tiling-signature)`` pair.  ``hits`` / ``misses`` /
     ``compiles`` count lookups and lazy compilations across both maps —
     a miss that compiles increments both ``misses`` and ``compiles``, so
-    the cache contract "miss compiles once, then hits" is assertable."""
+    the cache contract "miss compiles once, then hits" is assertable.
 
-    def __init__(self) -> None:
-        self._co: Dict[FrozenSet[int], MultiExecutionPlan] = {}
-        self._tenant: Dict[int, ExecutionPlan] = {}
+    The co-schedule map grows ``2^N - 1`` occupancies worst-case, so it is
+    bounded by ``max_entries`` (generous default): when full, the least-
+    recently-``co_plan``'d occupancy is dropped (an evicted occupancy
+    recompiles on its next miss).  Protected occupancies — the full house,
+    registered via :meth:`protect` — and the tenant reference schedules
+    (the numerics contract) are never evicted.  ``evictions`` in
+    :meth:`stats` counts the drops."""
+
+    def __init__(self, max_entries: int = 64) -> None:
+        if max_entries < 1:
+            raise ValueError(f"max_entries must be >= 1: {max_entries}")
+        self._co: "OrderedDict[FrozenSet[int], MultiExecutionPlan]" = \
+            OrderedDict()
+        self._tenant: Dict[Hashable, ExecutionPlan] = {}
+        self._protected: Set[FrozenSet[int]] = set()
+        self.max_entries = max_entries
         self.hits = 0
         self.misses = 0
         self.compiles = 0
+        self.lru_evictions = 0
 
     def __len__(self) -> int:
         return len(self._co) + len(self._tenant)
 
     def __contains__(self, key) -> bool:
-        if isinstance(key, int):
+        """ints and tuples query the tenant-reference map (tuples are the
+        ``(tenant, tiling-signature)`` keys); query occupancies with a
+        list / set / frozenset, never a tuple."""
+        if isinstance(key, (int, tuple)):
             return key in self._tenant
         return frozenset(key) in self._co
+
+    def has_tenant(self, key: Hashable) -> bool:
+        return key in self._tenant
 
     def occupancies(self) -> List[FrozenSet[int]]:
         """Cached co-schedule occupancies, smallest first."""
         return sorted(self._co, key=lambda s: (len(s), sorted(s)))
 
+    def protect(self, active: Sequence[int]) -> None:
+        """Exempt an occupancy from LRU eviction (the full house)."""
+        self._protected.add(frozenset(active))
+
+    def _evict_lru(self, keep: Optional[FrozenSet[int]] = None) -> None:
+        """Drop LRU occupancies down to the bound; never drops protected
+        occupancies or ``keep`` (the entry being inserted — evicting it
+        would break 'miss compiles once, then hits'), so the bound can be
+        exceeded by the protected set."""
+        while len(self._co) > self.max_entries:
+            victim = next((k for k in self._co
+                           if k not in self._protected and k != keep), None)
+            if victim is None:
+                return                       # everything left is exempt
+            del self._co[victim]
+            self.lru_evictions += 1
+
     def seed(self, active: Sequence[int], plan: MultiExecutionPlan) -> None:
         """Register an already-compiled co-schedule (no counter changes)."""
-        self._co[frozenset(active)] = plan
+        key = frozenset(active)
+        self._co[key] = plan
+        self._co.move_to_end(key)
+        self._evict_lru(keep=key)
 
-    def seed_tenant(self, tenant: int, plan: ExecutionPlan) -> None:
+    def seed_tenant(self, tenant: Hashable, plan: ExecutionPlan) -> None:
         """Register an already-compiled tenant reference schedule (no
         counter changes — reuse of an existing plan is not a compile)."""
         self._tenant[tenant] = plan
@@ -590,14 +759,17 @@ class PlanStore:
         key = frozenset(active)
         if key in self._co:
             self.hits += 1
+            self._co.move_to_end(key)
             return self._co[key]
         self.misses += 1
         plan = build()
         self.compiles += 1
         self._co[key] = plan
+        self._co.move_to_end(key)
+        self._evict_lru(keep=key)
         return plan
 
-    def tenant_plan(self, tenant: int,
+    def tenant_plan(self, tenant: Hashable,
                     build: Callable[[], ExecutionPlan]) -> ExecutionPlan:
         if tenant in self._tenant:
             self.hits += 1
@@ -611,7 +783,9 @@ class PlanStore:
     def stats(self) -> Dict[str, int]:
         return {"hits": self.hits, "misses": self.misses,
                 "compiles": self.compiles, "co_plans": len(self._co),
-                "tenant_plans": len(self._tenant)}
+                "tenant_plans": len(self._tenant),
+                "evictions": self.lru_evictions,
+                "max_entries": self.max_entries}
 
 
 # ---------------------------------------------------------------------------
@@ -638,8 +812,14 @@ class DeploymentSession:
                                              request.retile_for_contention))
         self.strategies: List[CandidateStrategy] = \
             [get_strategy(n) for n in names]
-        self.store = PlanStore()
+        self.store = PlanStore(max_entries=request.store_max_entries)
         self.hint_rounds = 0           # contention fixpoint rounds executed
+        self.joint_solves = 0          # successful joint cross-tenant solves
+        self.joint_fallbacks = 0       # joint solves that fell back to
+        #                                best-response (budget exhausted)
+        # the exact best-response incumbent (phase A of the fixpoint): what
+        # PR 2/3 would have shipped — the bound the joint CP must beat
+        self.best_response_plan: Optional[MultiExecutionPlan] = None
         self._singles: Optional[List[CompiledModel]] = None
         self._multi: Optional[MultiCompiledModel] = None
 
@@ -755,51 +935,131 @@ class DeploymentSession:
                                 mode=req.mode, singles=singles, plan=plan,
                                 baseline_plan=baseline, session=self)
         self.store.seed(range(len(req.graphs)), plan)
+        self.store.protect(range(len(req.graphs)))
         return mc
 
     def _contention_fixpoint(self, baseline: MultiExecutionPlan,
                              base_tgs: List[TiledGraph],
                              retilers: Sequence[CandidateStrategy]
                              ) -> MultiExecutionPlan:
-        """hints -> re-tile -> re-schedule until fixpoint (bounded by
-        ``max_hint_rounds``): each round summarizes the incumbent plan
-        into per-tenant :class:`Contention` contexts, asks every re-tiling
-        strategy for fresh joint candidate sets (deduplicated against all
-        earlier rounds), and re-arbitrates under the exact shared-resource
-        model.  The incumbent only ever improves under the objective, so
-        re-tiled <= PR-1 co-scheduled <= sequential still holds."""
+        """Two-phase hints -> re-tile -> re-schedule fixpoint.
+
+        Phase A runs the per-tenant *best-response* strategies alone
+        (exactly the PR 2/3 loop) and records its final incumbent as
+        ``best_response_plan``.  Phase B continues from that incumbent
+        with the joint cross-tenant strategies added (the best-response
+        strategies keep running too, reacting to joint winners).  Because
+        the incumbent is only ever replaced on strict objective
+        improvement, the final plan satisfies, by construction,
+
+            joint-CP  <=  best-response  <=  PR-1 baseline  <=  sequential
+
+        — and phase A's trajectory is bitwise the trajectory of a session
+        configured without ``joint-cp``, so 'best-response' here means the
+        real thing, not a degraded re-run."""
         req = self.request
-        plan = baseline
+        br = [s for s in retilers if not getattr(s, "joint", False)]
+        joint = [s for s in retilers if getattr(s, "joint", False)]
         seen = {_sets_sig(base_tgs)}
-        for _ in range(req.max_hint_rounds):
-            hints = contention_hints(plan, req.soc)
-            alt_sets: List[List[TiledGraph]] = []
-
-            def add(tgs: Sequence[TiledGraph]) -> bool:
-                sig = _sets_sig(tgs)
-                if sig in seen:
-                    return False
-                seen.add(sig)
-                alt_sets.append(list(tgs))
-                return True
-
-            for strat in retilers:
-                strat.retile_sets(self, hints, plan, add)
-            if not alt_sets:
-                break                   # nothing new to try: fixpoint
-            self.hint_rounds += 1
-            new_plan = schedule_multi(base_tgs, req.soc, budgets=req.budgets,
-                                      alt_tgs=alt_sets, incumbent=plan,
-                                      objective=self.objective)
-            if new_plan is plan:
-                break                   # no candidate beat the incumbent
-            plan = new_plan
+        plan = self._fixpoint_rounds(baseline, base_tgs, br, seen)
+        self.best_response_plan = plan
+        if joint:
+            # phase B opens with the joint strategies alone — phase A just
+            # converged the best-response strategies on these exact hints,
+            # so re-running them here would only recompute already-seen
+            # candidate sets.  They re-enter for the remaining rounds only
+            # when the joint solve actually moved the incumbent (fresh
+            # hints to respond to).
+            improved = self._fixpoint_rounds(plan, base_tgs, joint, seen,
+                                             rounds=1)
+            if improved is not plan and req.max_hint_rounds > 1:
+                improved = self._fixpoint_rounds(
+                    improved, base_tgs, list(retilers), seen,
+                    rounds=req.max_hint_rounds - 1)
+            plan = improved
         # determinism guard, under the same objective semantics the search
         # used (a tolerance-free makespan comparison here could revert a
         # winner the objective picked on the eviction tie-break)
         if self.objective.better(baseline, plan):
             plan = baseline
         return plan
+
+    def _fixpoint_rounds(self, plan: MultiExecutionPlan,
+                         base_tgs: List[TiledGraph],
+                         retilers: Sequence[CandidateStrategy],
+                         seen: set,
+                         rounds: Optional[int] = None
+                         ) -> MultiExecutionPlan:
+        """Up to ``rounds`` (default ``max_hint_rounds``) rounds of the
+        contention loop with the given strategies: summarize the incumbent
+        into per-tenant :class:`Contention` hints, collect fresh candidate
+        tiling sets (deduplicated against every earlier round via
+        ``seen``, labelled by contributing strategy for ``plan.origin``
+        attribution), and re-arbitrate under the exact shared-resource
+        model."""
+        req = self.request
+        for _ in range(rounds if rounds is not None
+                       else req.max_hint_rounds):
+            hints = contention_hints(plan, req.soc)
+            alt_sets: List[List[TiledGraph]] = []
+            labels: List[str] = []
+            current = [""]
+
+            def add(tgs: Sequence[TiledGraph],
+                    label: Optional[str] = None) -> bool:
+                sig = _sets_sig(tgs)
+                if sig in seen:
+                    return False
+                seen.add(sig)
+                alt_sets.append(list(tgs))
+                labels.append(label if label is not None else current[0])
+                return True
+
+            for strat in retilers:
+                current[0] = strat.name
+                strat.retile_sets(self, hints, plan, add)
+            if not alt_sets:
+                break                   # nothing new to try: fixpoint
+            self.hint_rounds += 1
+            new_plan = schedule_multi(base_tgs, req.soc, budgets=req.budgets,
+                                      alt_tgs=alt_sets, incumbent=plan,
+                                      objective=self.objective,
+                                      alt_labels=labels,
+                                      retile_round=self.hint_rounds)
+            if new_plan is plan:
+                break                   # no candidate beat the incumbent
+            plan = new_plan
+        return plan
+
+    def joint_tilings(self, ids: Sequence[int],
+                      warm: Optional[Sequence[TiledGraph]] = None
+                      ) -> Optional[List[TiledGraph]]:
+        """One joint cross-tenant stage-1 solve over the tenants in ``ids``
+        (the full house or any occupancy subset), warm-started from the
+        given tiled graphs' solutions, bounded by
+        ``request.joint_time_budget_s``.  Returns the coordinated
+        per-tenant tile graphs, or ``None`` when the solver produced
+        nothing within the budget — the caller's best-response fallback
+        then engages (counted in ``joint_fallbacks``)."""
+        req = self.request
+        graphs = [req.graphs[i] for i in ids]
+        try:
+            problem = JointTilingProblem(
+                graphs, req.soc, req.patterns,
+                requested_tiles=req.requested_tiles, mode=req.mode)
+            warm_sols = ([tg.solution for tg in warm]
+                         if warm is not None else None)
+            sols = problem.solve(warm=warm_sols,
+                                 time_budget_s=req.joint_time_budget_s)
+        except cpsolver.Infeasible:
+            # the designed fallback path: budget exhausted with nothing
+            # feasible found.  Real programming errors propagate — they
+            # must not masquerade as budget exhaustion.
+            self.joint_fallbacks += 1
+            return None
+        tgs = [rewrite(g, req.soc, s) for g, s in zip(graphs, sols)]
+        self.joint_solves += 1
+        return tgs
 
     # -- occupancy-indexed plans --------------------------------------------
 
@@ -817,7 +1077,13 @@ class DeploymentSession:
         """Validated co-schedule covering exactly the ``active`` tenants,
         from the :class:`PlanStore` (compiled lazily on the first miss).
         Tenant indices inside the returned plan are positional over
-        ``sorted(set(active))``."""
+        ``sorted(set(active))``.
+
+        A miss pays the subset compile — including up to
+        ``joint_time_budget_s`` of per-occupancy joint solving — on the
+        caller's thread; latency-sensitive callers (a serving engine's
+        first round at a new occupancy) should :meth:`precompile` the
+        occupancies they expect."""
         self.compile()
         ids = self._check_active(active)
         return self.store.co_plan(ids, lambda: self._compile_subset(ids))
@@ -828,21 +1094,61 @@ class DeploymentSession:
             self.plan_for(subset)
 
     def _compile_subset(self, ids: List[int]) -> MultiExecutionPlan:
-        """Subset co-schedule over the tilings the full-house winner chose:
-        the active tenants keep their (possibly re-tiled) graphs, the L2
-        is re-split among just them (or sliced from the request's explicit
-        budgets), and the sequential concatenation of their reference
-        schedules stays a candidate — so a subset co-schedule is never
-        worse than running its members back-to-back, and its numerics are
-        bitwise those of the members' ``tenant_plan`` references."""
+        """Per-occupancy compile: tiling is re-decided for the subset
+        instead of blindly reusing the full-house winner's tilings.
+
+        Candidate tiling sets, arbitrated under the exact shared-resource
+        model with the shared L2 re-split among just the active tenants
+        (or sliced from the request's explicit budgets):
+
+          * the full-house winner's tilings (the PR-3 behaviour — right
+            when the subset's contention resembles the full house),
+          * the members' compile-alone tilings (right at low occupancy,
+            where a tenant runs nearly alone),
+          * a fresh joint cross-tenant solve over just the subset,
+            warm-started from the compile-alone tilings.
+
+        The sequential concatenation of the members' reference schedules
+        is a candidate inside ``schedule_multi``, and the compile-alone
+        back-to-back concatenation (the pre-session engine fallback) is a
+        hard floor at the end — so every occupancy's co-schedule beats (or
+        ties) both, and the partial-occupancy benchmark can no longer
+        report negative-gain rounds.  Numerics stay bitwise: whichever
+        tiling set wins, each tenant's reference schedule for *that*
+        tiling is served by :meth:`reference_plan`."""
         req = self.request
         mc = self._multi
-        tgs = [mc.plan.tenants[i] for i in ids]
+        full_tgs = [mc.plan.tenants[i] for i in ids]
+        alone_tgs = [self.singles[i].tiled for i in ids]
         refs = [self.tenant_plan(i) for i in ids]
         budgets = ([req.budgets[i] for i in ids]
                    if req.budgets is not None else None)
-        plan = schedule_multi(tgs, req.soc, budgets=budgets, singles=refs,
-                              objective=self.objective)
+        sigs = {_sets_sig(full_tgs)}
+        alt_sets: List[List[TiledGraph]] = []
+        labels: List[str] = []
+
+        def offer(tgs: List[TiledGraph], label: str) -> None:
+            sig = _sets_sig(tgs)
+            if sig not in sigs:
+                sigs.add(sig)
+                alt_sets.append(tgs)
+                labels.append(label)
+
+        offer(alone_tgs, "compile-alone")
+        if (len(ids) > 1 and req.joint_tiling and req.mode in ASYNC_MODES
+                and any(getattr(s, "joint", False)
+                        for s in self.strategies)):
+            jtgs = self.joint_tilings(ids, warm=alone_tgs)
+            if jtgs is not None:
+                offer(jtgs, "joint-cp")
+        plan = schedule_multi(full_tgs, req.soc, budgets=budgets,
+                              singles=refs, alt_tgs=alt_sets,
+                              alt_labels=labels, objective=self.objective)
+        seq_alone = concat_plans([self.singles[i].plan for i in ids],
+                                 req.soc, budgets)
+        seq_alone.origin = "sequential-alone"
+        if self.objective.better(seq_alone, plan):
+            plan = seq_alone
         errs = validate_multi_schedule(plan)
         if errs:
             raise RuntimeError(f"infeasible subset co-schedule for tenants "
@@ -851,20 +1157,29 @@ class DeploymentSession:
 
     def tenant_plan(self, i: int) -> ExecutionPlan:
         """Single-model reference schedule for tenant ``i`` over the tiled
-        graph it uses inside the co-schedule, cached in the store."""
+        graph it uses inside the *full-house* co-schedule, cached in the
+        store."""
         mc = self.compile()
-        tg = mc.plan.tenants[i]
+        return self.reference_plan(i, mc.plan.tenants[i])
+
+    def reference_plan(self, i: int, tg: TiledGraph) -> ExecutionPlan:
+        """Single-model reference schedule for tenant ``i`` over exactly
+        the tiled graph ``tg`` — the bitwise numerics reference for any
+        occupancy's co-schedule (per-occupancy plans may tile a tenant
+        differently from the full house, so references are cached per
+        ``(tenant, tiling-signature)``)."""
         if tg is self.singles[i].tiled:
             return self.singles[i].plan
-        if i not in self.store:
+        key: Hashable = (i, _tiling_sig(tg))
+        if not self.store.has_tenant(key):
             # a complementary-selection winner's tiling already has a
             # full-effort compile-alone plan in the candidate pool; seed
             # it (reuse, not a compile) instead of re-scheduling at
             # reduced effort
             for p in self.singles[i].alt_plans.values():
                 if p.tiled is tg:
-                    self.store.seed_tenant(i, p)
+                    self.store.seed_tenant(key, p)
                     break
         return self.store.tenant_plan(
-            i, lambda: schedule(tg, self.request.soc, self.request.mode,
-                                restarts=1, anneal_iters=0))
+            key, lambda: schedule(tg, self.request.soc, self.request.mode,
+                                  restarts=1, anneal_iters=0))

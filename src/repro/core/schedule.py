@@ -661,6 +661,13 @@ class MultiExecutionPlan:
     tenant_makespans: List[float]         # completion time of each tenant
     budgets: List[int]
     mode: str = "matcha"
+    # which candidate source won the arbitration ("primary", a labelled
+    # alternative tiling set such as "joint-cp", or "sequential") — stamped
+    # by schedule_multi so benchmark regressions are attributable
+    origin: str = "primary"
+    # contention-fixpoint rounds that produced this plan (a tie-break key:
+    # among near-equal plans the less-re-tiled one is the stabler choice)
+    retile_rounds: int = 0
 
     def utilization(self) -> Dict[str, float]:
         return {r: (b / self.makespan if self.makespan else 0.0)
@@ -985,7 +992,9 @@ def schedule_multi(tgs: Sequence[TiledGraph], soc: SoC,
                    restarts: int = 3, seed: int = 0,
                    alt_tgs: Optional[Sequence[Sequence[TiledGraph]]] = None,
                    incumbent: Optional[MultiExecutionPlan] = None,
-                   objective=None) -> MultiExecutionPlan:
+                   objective=None,
+                   alt_labels: Optional[Sequence[str]] = None,
+                   retile_round: int = 0) -> MultiExecutionPlan:
     """Search for a minimum-objective co-schedule of N tiled graphs.
 
     ``tgs`` holds each tenant's compile-alone tiling; ``alt_tgs`` supplies
@@ -1000,7 +1009,15 @@ def schedule_multi(tgs: Sequence[TiledGraph], soc: SoC,
     concatenation is a candidate too, so the result is never worse than
     running each model alone back-to-back.  ``incumbent`` injects a
     previously computed plan for ``tgs`` (same budgets/seed) as the plan
-    to beat, skipping the deterministic re-search of the primary set."""
+    to beat, skipping the deterministic re-search of the primary set.
+    ``alt_labels`` (parallel to ``alt_tgs``) names each alternative set;
+    the winner's label is stamped on ``plan.origin`` — freshly-built
+    candidates are labelled in place, an incumbent keeps the origin it
+    arrived with (relabelling a cached plan would mutate shared state).
+    ``retile_round`` is stamped on every fresh candidate as its
+    ``retile_rounds`` before arbitration, so the objective's optional
+    retile-rounds tie-break compares the incumbent's (earlier) round
+    against the current one rather than against a default 0."""
     budgets = _check_budgets(budgets, len(tgs)) if budgets is not None \
         else default_budgets(soc, len(tgs))
     if incumbent is not None:
@@ -1008,16 +1025,23 @@ def schedule_multi(tgs: Sequence[TiledGraph], soc: SoC,
     else:
         best, last_err = _search_coschedule(tgs, soc, budgets, restarts,
                                             seed, objective=objective)
-    for alt in (alt_tgs or []):
+        if best is not None:
+            best.retile_rounds = retile_round
+    for k, alt in enumerate(alt_tgs or []):
         cand, err = _search_coschedule(alt, soc, budgets, restarts, seed,
                                        objective=objective)
         if cand is None:
             last_err = err or last_err
             continue
+        cand.origin = (alt_labels[k] if alt_labels is not None
+                       and k < len(alt_labels) else f"alt{k}")
+        cand.retile_rounds = retile_round
         if _objective_better(cand, best, objective):
             best = cand
     if singles is not None:
         seq = concat_plans(singles, soc, budgets)
+        seq.origin = "sequential"
+        seq.retile_rounds = retile_round
         if best is None or (objective.better(seq, best)
                             if objective is not None
                             else seq.makespan < best.makespan):

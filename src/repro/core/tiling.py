@@ -31,6 +31,7 @@ of this optimization).
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
 from repro.core import cpsolver
@@ -171,6 +172,53 @@ def _helper_cost(g: Graph, m: Match, soc: SoC, T: int,
     return slope, 2.0 * DELTA_HELPER
 
 
+def _match_ws_parts(g: Graph, m: Match) -> Tuple[float, float, float]:
+    """(activation-input, param, output) bytes of a chain match — THE
+    footprint definition shared by the best-response spill pricing
+    (:func:`_spill_delta` via :func:`_match_working_set`) and the joint
+    CP's shared-L2 capacity terms (:func:`_match_ws_linear`); the two cost
+    models only agree as long as both build from these parts."""
+    head = g.ops[m.ops[0]]
+    tail = g.ops[m.ops[-1]]
+    acts = float(sum(t.bytes for t in g.act_inputs(head)))
+    params = float(sum(sum(t.bytes for t in g.param_tensors(g.ops[n]))
+                       for n in m.ops))
+    out = float(g.tensors[tail.output].bytes)
+    return acts, params, out
+
+
+def _match_working_set(g: Graph, m: Match) -> float:
+    """Full L2 footprint of a chain match while it executes: the head's
+    activation inputs + every covered op's params + the tail's output."""
+    return sum(_match_ws_parts(g, m))
+
+
+def _match_ws_linear(g: Graph, m: Match, T: int) -> Tuple[float, float]:
+    """Linearized working set of a match: ``(per-tile, fixed)`` bytes so the
+    footprint of a *partial* instantiation is ``per_tile * t + fixed * y``.
+
+    Neuron-tiled chains (dense/matmul on the output-feature axis) slice
+    their weights with the tile share but read the full input; row-tiled
+    chains (conv family) slice activations but need the full weights — the
+    same split :func:`repro.core.zigzag._chain_bytes` uses for L1 traffic.
+    The joint CP's shared-L2 capacity constraint is built from these terms,
+    which is what lets it see that *splitting* a neuron-tiled layer across
+    devices does not duplicate its weights."""
+    from repro.core.ir import tile_axis
+    head = g.ops[m.ops[0]]
+    acts, params, out = _match_ws_parts(g, m)
+    ax = tile_axis(g, head)
+    out_rank = len(g.tensors[head.output].shape)
+    neuron = ax is not None and ax == out_rank - 1
+    if neuron:
+        per_tile = (params + out) / max(T, 1)
+        fixed = acts
+    else:
+        per_tile = (acts + out) / max(T, 1)
+        fixed = params
+    return per_tile, fixed
+
+
 def _spill_delta(g: Graph, m: Match, soc: SoC, c: Contention) -> float:
     """Fixed charge for instantiating a match whose working set overflows
     this tenant's shared-L2 slice.  Stage 2 keeps whole tensors L2-resident
@@ -182,13 +230,7 @@ def _spill_delta(g: Graph, m: Match, soc: SoC, c: Contention) -> float:
     chains."""
     if c.l2_budget is None:
         return 0.0
-    head = g.ops[m.ops[0]]
-    tail = g.ops[m.ops[-1]]
-    ws = float(sum(t.bytes for t in g.act_inputs(head)))
-    for name in m.ops:
-        ws += sum(t.bytes for t in g.param_tensors(g.ops[name]))
-    ws += g.tensors[tail.output].bytes
-    excess = ws - float(c.l2_budget)
+    excess = _match_working_set(g, m) - float(c.l2_budget)
     if excess <= 0.0:
         return 0.0
     return 2.0 * excess / soc.dma_l3_bandwidth * c.dma_scale
@@ -498,6 +540,219 @@ def _local_search(model: cpsolver.CpModel, mvars: List[_MVar],
         if not improved:
             break
     return x
+
+
+# ---------------------------------------------------------------------------
+# Joint cross-tenant tiling: one CP over all co-resident tenants
+# ---------------------------------------------------------------------------
+
+
+L2_QUANTUM = 4096              # granularity of the shared-L2 overflow var
+
+
+class JointTilingProblem:
+    """ONE constraint program over every co-resident tenant's tile
+    variables (the MATCHA stage-1 model lifted from "fixed hints in -> one
+    tenant out" to a joint solve, cf. HaX-CoNN's single SMT over all
+    co-located networks).
+
+    Per tenant: the usual Eq. (1) tile-conservation constraints and
+    ``t <= T * y`` indicators over that tenant's match variables.  The
+    *joint* couplings, built on :class:`repro.core.cpsolver.JointCpModel`:
+
+      * **per-device load balance** — every device's makespan term sums the
+        match latencies of ALL tenants assigned to it, so the objective is
+        the true co-resident makespan, not N independent ones;
+      * **one shared-L2 capacity constraint** — the linearized working
+        sets (:func:`_match_ws_linear`) of every tenant's instantiated
+        matches share the single ``soc.l2`` budget; a quantized overflow
+        variable absorbs any excess so the model is never infeasible;
+      * **congested-DMA coupling** — one ``dma`` makespan term accumulates
+        every tenant's planned-load traffic plus the overflow's swap
+        round-trips, so L2 pressure from one tenant surfaces as DMA time
+        charged against the whole mix.
+
+    ``solve`` warm-starts from per-tenant compile-alone / incumbent
+    :class:`TilingSolution`\\ s (always feasible — the overflow variable
+    absorbs their combined footprint) under a caller-supplied time budget;
+    the deployment session falls back to per-tenant best-response re-tiling
+    when the budget is exhausted."""
+
+    def __init__(self, graphs: Sequence[Graph], soc: SoC,
+                 patterns: Sequence[Pattern], requested_tiles: int = 16,
+                 mode: str = "matcha") -> None:
+        assert mode in ("matcha", "matcha_nt")
+        self.graphs = list(graphs)
+        self.soc = soc
+        self.mode = mode
+        self.requested_tiles = requested_tiles
+        self.joint = cpsolver.JointCpModel()
+        self.mvars: List[List[_MVar]] = []
+        self.tiles_per_op: List[Dict[str, int]] = []
+        host = soc.host.name
+
+        cap_coeffs: Dict[int, float] = {}
+        max_ws = 0.0
+        dma_const = 0.0
+        for i, g in enumerate(self.graphs):
+            g.validate()
+            mvars = build_match_vars(g, soc, patterns, requested_tiles)
+            self.mvars.append(mvars)
+            tiles = {op.name: max_tiles(g, op, requested_tiles)
+                     for op in g.topo_ops()}
+            self.tiles_per_op.append(tiles)
+            for mv in mvars:
+                mv.t_var = self.joint.new_int(i, 0, mv.T,
+                                              f"t{i}[{mv.match!r}]")
+                mv.y_var = self.joint.new_int(i, 0, 1, f"y{i}[{mv.match!r}]")
+                self.joint.add_le({mv.t_var: 1.0, mv.y_var: -float(mv.T)})
+                if mode != "matcha":
+                    self.joint.add_eq({mv.t_var: 1.0,
+                                       mv.y_var: -float(mv.T)})
+                d = mv.match.pattern.device
+                self.joint.add_load(f"dev:{d}", {mv.t_var: mv.slope,
+                                                 mv.y_var: mv.delta})
+                if mode == "matcha" and mv.helper_slope > 0.0:
+                    self.joint.add_load(f"dev:{host}",
+                                        {mv.t_var: mv.helper_slope,
+                                         mv.y_var: mv.helper_fix})
+                if not soc.device(d).is_host:
+                    self.joint.add_load(f"dev:{host}",
+                                        {mv.y_var: soc.mailbox_latency})
+                per_tile, fixed = _match_ws_linear(g, mv.match, mv.T)
+                if per_tile > 0.0:
+                    cap_coeffs[mv.t_var] = per_tile
+                if fixed > 0.0:
+                    cap_coeffs[mv.y_var] = fixed
+                max_ws += per_tile * mv.T + fixed
+            # Eq. (1) per tenant
+            cover: Dict[str, List[_MVar]] = {op.name: []
+                                             for op in g.topo_ops()}
+            for mv in mvars:
+                for name in mv.match.ops:
+                    cover[name].append(mv)
+            for op in g.topo_ops():
+                mvs = cover[op.name]
+                if not mvs:
+                    raise ValueError(
+                        f"tenant {i}: op {op.name} ({op.op_type}) matches "
+                        f"no pattern (wildcard missing?)")
+                self.joint.add_eq({mv.t_var: 1.0 for mv in mvs},
+                                  -float(tiles[op.name]))
+            dma_const += self._planned_load_bytes(g) / soc.dma_l3_bandwidth
+
+        # one shared-L2 capacity constraint over all tenants, with a
+        # quantized overflow variable priced as swap round-trips on the
+        # shared system DMA
+        cap = float(soc.l2.size)
+        o_hi = max(int(math.ceil(max(max_ws - cap, 0.0) / L2_QUANTUM)), 0)
+        self.o_var = self.joint.new_int(-1, 0, o_hi, "l2_overflow")
+        cap_coeffs[self.o_var] = -float(L2_QUANTUM)
+        self.joint.add_capacity(cap_coeffs, cap)
+        self._cap_coeffs = dict(cap_coeffs)
+        self.joint.add_load(
+            "dma", {self.o_var: 2.0 * L2_QUANTUM / soc.dma_l3_bandwidth},
+            const=dma_const)
+
+    def _planned_load_bytes(self, g: Graph) -> float:
+        """Tenant traffic that rides the shared system DMA regardless of
+        tiling: non-static parameter planned loads plus graph input/output
+        transfers (L3-resident tensors stream instead — still DMA)."""
+        from repro.core.schedule import static_params
+        statics = static_params(g, self.soc,
+                                self.soc.l2.size // max(len(self.graphs), 1))
+        total = 0.0
+        for t, ti in g.tensors.items():
+            if ti.kind == "param" and t not in statics:
+                total += ti.bytes
+        total += sum(g.tensors[t].bytes for t in g.inputs)
+        total += sum(g.tensors[t].bytes for t in g.outputs)
+        return total
+
+    def _map_tenant_hint(self, i: int, sol: TilingSolution,
+                         hint: List[int]) -> bool:
+        """Write tenant ``i``'s solution into ``hint`` (matched by
+        (device, op-chain) key); False when the solution was built at a
+        foreign granularity and cannot be mapped (hint left zeroed for
+        this tenant's variables)."""
+        by_key = {(mv.match.pattern.device, mv.match.ops): mv
+                  for mv in self.mvars[i]}
+        staged: Dict[int, int] = {}
+        ys: Dict[int, int] = {}
+        for a in sol.assignments:
+            mv = by_key.get((a.match.pattern.device, a.match.ops))
+            if mv is None:
+                return False             # foreign granularity: no mapping
+            staged[mv.t_var] = staged.get(mv.t_var, 0) + a.tiles
+            ys[mv.y_var] = 1
+        got: Dict[str, int] = {op: 0 for op in self.tiles_per_op[i]}
+        for mv in self.mvars[i]:
+            for op in mv.match.ops:
+                got[op] += staged.get(mv.t_var, 0)
+        if got != self.tiles_per_op[i]:
+            return False                 # conservation mismatch (other T)
+        for v, t in staged.items():
+            hint[v] = min(t, self.joint.model._hi[v])
+        for v, y in ys.items():
+            hint[v] = y
+        return True
+
+    def _greedy_tenant_hint(self, i: int, hint: List[int]) -> None:
+        """MATCH-style greedy cover for tenant ``i`` (:func:`_greedy_hint`
+        over this tenant's match variables, whose indices already live in
+        the joint space) — the always-available warm start when no
+        per-tenant solution maps onto the joint variable space."""
+        sub = _greedy_hint(self.graphs[i], self.mvars[i],
+                           self.tiles_per_op[i], self.joint.num_vars,
+                           self.mode, self.soc)
+        for mv in self.mvars[i]:
+            hint[mv.t_var] = sub[mv.t_var]
+            hint[mv.y_var] = sub[mv.y_var]
+
+    def _set_overflow(self, hint: List[int]) -> None:
+        used = sum(c * hint[v] for v, c in self._cap_coeffs.items()
+                   if v != self.o_var)
+        over = max(used - float(self.soc.l2.size), 0.0)
+        hint[self.o_var] = min(int(math.ceil(over / L2_QUANTUM)),
+                               self.joint.model._hi[self.o_var])
+
+    def warm_start(self, solutions: Optional[Sequence[TilingSolution]]
+                   ) -> Optional[List[int]]:
+        """Joint warm start: each tenant's solution is mapped onto the
+        joint variable space where possible, with the greedy cover filling
+        in for tenants whose solutions were built at a foreign granularity
+        (or when ``solutions`` is None); the overflow variable absorbs the
+        combined footprint, so the start is always capacity-feasible."""
+        hint = [0] * self.joint.num_vars
+        for i in range(len(self.graphs)):
+            sol = (solutions[i] if solutions is not None
+                   and len(solutions) == len(self.graphs) else None)
+            if sol is None or not self._map_tenant_hint(i, sol, hint):
+                self._greedy_tenant_hint(i, hint)
+        self._set_overflow(hint)
+        return hint
+
+    def solve(self, warm: Optional[Sequence[TilingSolution]] = None,
+              time_budget_s: float = 10.0,
+              node_limit: int = 200_000) -> List[TilingSolution]:
+        """One joint solve; returns coordinated per-tenant solutions (the
+        shared objective value is the joint co-resident makespan bound).
+        Raises :class:`repro.core.cpsolver.Infeasible` when no solution is
+        found within the budget (callers fall back to best-response)."""
+        hint = self.warm_start(warm)
+        sol = self.joint.solve(hint=hint, node_limit=node_limit,
+                               time_budget_s=time_budget_s)
+        out: List[TilingSolution] = []
+        for i in range(len(self.graphs)):
+            assignments = [Assignment(mv.match, sol.values[mv.t_var])
+                           for mv in self.mvars[i]
+                           if sol.values[mv.t_var] > 0]
+            out.append(TilingSolution(
+                mode=self.mode, assignments=assignments,
+                tiles_per_op=dict(self.tiles_per_op[i]),
+                objective=sol.objective, optimal=sol.optimal,
+                solver_nodes=sol.nodes, wall_s=sol.wall_s))
+        return out
 
 
 def conservation_ok(g: Graph, sol: TilingSolution) -> bool:

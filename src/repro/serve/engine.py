@@ -9,12 +9,13 @@ runnable examples.
 plan level: it admits inference requests for N *different* models compiled
 onto one SoC (``repro.core.api.compile_multi`` / a
 ``repro.core.deploy.DeploymentSession``) and dispatches them in
-co-scheduled rounds — whenever two or more tenants have work queued, the
-round executes the co-schedule covering exactly that occupancy
-(``plan_for(active)``, answered from the session's occupancy-indexed plan
-store, compiled lazily on the first miss); a lone active tenant runs its
-cached single-model reference schedule.  The compile-alone back-to-back
-fallback remains only for session-less artifacts.
+co-scheduled rounds — every round executes the plan covering exactly that
+occupancy (``plan_for(active)``, answered from the session's
+occupancy-indexed plan store, compiled lazily on the first miss with the
+tiling re-decided for the subset), including singleton occupancies, whose
+one-tenant plan is never worse than the full-house reference schedule.
+The compile-alone back-to-back fallback remains only for session-less
+artifacts.
 """
 
 from __future__ import annotations
@@ -140,7 +141,8 @@ class MultiModelEngine:
     co-schedule covering exactly that occupancy (``plan_for`` from the
     session's occupancy-indexed plan store) — the active models advance
     concurrently and the round costs that co-schedule's makespan; a lone
-    active tenant runs its cached single-model reference schedule.
+    active tenant runs its cached singleton occupancy plan (falling back
+    to the single-model reference schedule on session-less artifacts).
     Per-request latency is taken from the analytic schedule model
     (cycles -> ms at the SoC clock)."""
 
@@ -194,8 +196,12 @@ class MultiModelEngine:
         work) down to the compiled artifact: ``plan_for(active)`` answers
         with a co-schedule covering exactly that occupancy (full house or
         any subset — the session's plan store compiles subset co-schedules
-        lazily and caches them).  A lone active tenant runs its cached
-        single-model reference schedule (``tenant_plan``); the back-to-back
+        lazily and caches them, with tiling re-decided per occupancy).  A
+        lone active tenant also dispatches through ``plan_for`` — its
+        singleton occupancy plan is never worse than the full-house
+        reference schedule, which matters when the full-house winner
+        re-tiled the tenant for contention it no longer faces (still
+        counted as a solo dispatch, not a co-round).  The back-to-back
         compile-alone fallback only remains for session-less artifacts
         whose ``plan_for`` still answers ``None`` at partial occupancy."""
         from repro.core.runtime import execute_multi_plan, execute_plan
@@ -204,24 +210,28 @@ class MultiModelEngine:
             return []
         self._round += 1
         completed: List[int] = []
-        co_plan = (self.compiled.plan_for([r.tenant for r in active])
-                   if len(active) >= 2 else None)
+        co_plan = self.compiled.plan_for([r.tenant for r in active])
         if co_plan is not None:
-            # one co-scheduled round covering exactly the active tenants;
-            # positions in the subset plan follow sorted tenant ids, which
-            # is the order ``active`` was gathered in
+            # one occupancy-plan round covering exactly the active tenants
+            # (a lone tenant dispatches its cached singleton plan — a solo
+            # dispatch, not a co-round); positions in the subset plan
+            # follow sorted tenant ids, which is the order ``active`` was
+            # gathered in
             reqs = [self.queues[r.tenant].pop(0) for r in active]
             outs = execute_multi_plan(co_plan, [r.inputs for r in reqs],
                                       [self.params[r.tenant] for r in reqs])
-            self.co_rounds += 1
-            if len(reqs) < self.n_tenants:
-                self.subset_co_rounds += 1
+            if len(reqs) == 1:
+                self.solo_dispatches += 1
+            else:
+                self.co_rounds += 1
+                if len(reqs) < self.n_tenants:
+                    self.subset_co_rounds += 1
             self.busy_cycles += co_plan.makespan
             for pos, r in enumerate(reqs):
                 r.latency_ms = self.soc.cycles_to_ms(
                     co_plan.tenant_makespans[pos])
                 r.wait_rounds = self._round - 1 - r.submit_round
-                r.co_scheduled = True
+                r.co_scheduled = len(reqs) > 1
                 self.results[r.rid] = outs[pos]
                 self.done[r.rid] = r
                 completed.append(r.rid)
@@ -270,12 +280,15 @@ class MultiModelEngine:
             })
         stats = (self.compiled.store_stats()
                  if hasattr(self.compiled, "store_stats") else None)
+        joint = (self.compiled.joint_stats()
+                 if hasattr(self.compiled, "joint_stats") else None)
         return {
             "served": served,
             "co_rounds": self.co_rounds,
             "subset_co_rounds": self.subset_co_rounds,
             "solo_dispatches": self.solo_dispatches,
             "plan_store": stats,
+            "joint_cp": joint,
             "throughput_inf_per_s": served / secs if secs else 0.0,
             "speedup_vs_sequential": self.compiled.speedup,
             "retiled": self.compiled.retiled,

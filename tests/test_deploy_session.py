@@ -56,17 +56,21 @@ def two_subsets(n):
 # ---------------------------------------------------------------------------
 
 
-def test_plan_for_answers_every_two_tenant_subset(mc):
+def test_plan_for_answers_every_two_tenant_subset(mc, session):
     """Every 2-tenant subset of a 3-tenant compile gets a real, validated
-    co-schedule — no ``None`` fallback."""
+    co-schedule — no ``None`` fallback.  Since PR 4 the subset's tilings
+    are re-decided per occupancy (full-house winner, compile-alone, or a
+    fresh joint solve over just the subset), so each tenant's tiling must
+    be one with a servable reference schedule rather than necessarily the
+    full-house winner's."""
     for ids in two_subsets(len(mc.graphs)):
         plan = mc.plan_for(ids)
         assert isinstance(plan, MultiExecutionPlan)
         assert len(plan.tenants) == len(ids)
         assert validate_multi_schedule(plan) == []
-        # the subset keeps the tilings the full-house winner chose
         for pos, i in enumerate(ids):
-            assert plan.tenants[pos] is mc.plan.tenants[i]
+            ref = session.reference_plan(i, plan.tenants[pos])
+            assert ref.tiled is plan.tenants[pos]
 
 
 def test_subset_makespan_beats_member_concat(mc):
@@ -79,10 +83,11 @@ def test_subset_makespan_beats_member_concat(mc):
         assert plan.makespan <= seq + 1e-6
 
 
-def test_subset_numerics_bitmatch_tenant_plan(mc):
+def test_subset_numerics_bitmatch_tenant_plan(mc, session):
     """Subset co-scheduled execution is bitwise the members' single-model
-    ``tenant_plan`` execution — partial occupancy must not perturb
-    numerics any more than the full house does."""
+    reference execution over the tiling each tenant uses in *that*
+    occupancy — partial occupancy (now with per-occupancy re-tiling) must
+    not perturb numerics any more than the full house does."""
     for ids in two_subsets(len(mc.graphs)):
         plan = mc.plan_for(ids)
         params = [init_params(mc.graphs[i], 2 * i) for i in ids]
@@ -90,8 +95,8 @@ def test_subset_numerics_bitmatch_tenant_plan(mc):
         multi_out = execute_multi_plan(plan, inputs, params)
         for pos, i in enumerate(ids):
             g = mc.graphs[i]
-            single_out = execute_plan(mc.tenant_plan(i), inputs[pos],
-                                      params[pos])
+            ref = session.reference_plan(i, plan.tenants[pos])
+            single_out = execute_plan(ref, inputs[pos], params[pos])
             for t in g.outputs:
                 assert np.array_equal(np.asarray(single_out[t]),
                                       np.asarray(multi_out[pos][t])), \
@@ -241,7 +246,7 @@ def test_objective_validation():
 def test_registry_has_named_strategies():
     for name in ("tile-centric", "all-or-nothing", "heft",
                  "sequential-baseline", "contention-retile",
-                 "complementary"):
+                 "complementary", "joint-cp"):
         assert name in STRATEGY_REGISTRY
         assert get_strategy(name).name == name
     with pytest.raises(KeyError):
@@ -251,9 +256,10 @@ def test_registry_has_named_strategies():
 def test_default_strategy_names_by_mode():
     assert default_strategy_names("matcha") == \
         ["tile-centric", "all-or-nothing", "heft", "contention-retile",
-         "complementary"]
+         "complementary", "joint-cp"]
     assert default_strategy_names("matcha_nt") == \
-        ["all-or-nothing", "heft", "contention-retile", "complementary"]
+        ["all-or-nothing", "heft", "contention-retile", "complementary",
+         "joint-cp"]
     assert default_strategy_names("matcha", retile_for_contention=False) == \
         ["tile-centric", "all-or-nothing", "heft"]
     for mode in ("tvm", "match"):
@@ -282,7 +288,9 @@ def test_compile_request_validation():
 
 
 def test_hint_rounds_bounded(session, mc):
-    assert 0 <= session.hint_rounds <= session.request.max_hint_rounds
+    # two bounded phases since PR 4: best-response rounds, then joint
+    # rounds — each capped by max_hint_rounds
+    assert 0 <= session.hint_rounds <= 2 * session.request.max_hint_rounds
 
 
 def test_fixpoint_never_worse_than_single_round():
@@ -390,24 +398,28 @@ def test_engine_subset_co_round(mc):
     assert rep["plan_store"]["co_plans"] >= 1
 
 
-def test_engine_subset_outputs_match_reference(mc):
-    """Engine-served subset-round outputs equal the direct tenant_plan
-    execution for the same inputs and the engine's own parameters."""
+def test_engine_subset_outputs_match_reference(mc, session):
+    """Engine-served subset-round outputs equal the direct reference-plan
+    execution (over the tiling the round's occupancy actually uses) for
+    the same inputs and the engine's own parameters."""
     from repro.serve.engine import MultiModelEngine
     eng = MultiModelEngine(mc, seed=5)
     xs = {i: init_inputs(mc.graphs[i], 40 + i) for i in (1, 2)}
     rids = {i: eng.submit(i, inputs=xs[i]) for i in (1, 2)}
     eng.run()
-    for i in (1, 2):
-        want = execute_plan(mc.tenant_plan(i), xs[i], eng.params[i])
+    sub = mc.plan_for([1, 2])
+    for pos, i in enumerate((1, 2)):
+        ref = session.reference_plan(i, sub.tenants[pos])
+        want = execute_plan(ref, xs[i], eng.params[i])
         got = eng.results[rids[i]]
         for t in mc.graphs[i].outputs:
             assert np.array_equal(np.asarray(want[t]), np.asarray(got[t]))
 
 
-def test_engine_lone_tenant_uses_reference_schedule(mc):
-    """A lone active tenant dispatches its cached reference schedule (a
-    solo dispatch, not a co-round) — occupancy 1 needs no co-schedule."""
+def test_engine_lone_tenant_uses_singleton_plan(mc):
+    """A lone active tenant dispatches the cached singleton occupancy plan
+    (a solo dispatch, not a co-round) — never worse than the full-house
+    reference schedule."""
     from repro.serve.engine import MultiModelEngine
     eng = MultiModelEngine(mc)
     rid = eng.submit(1)
@@ -415,5 +427,7 @@ def test_engine_lone_tenant_uses_reference_schedule(mc):
     assert done == [rid]
     assert eng.co_rounds == 0
     assert eng.solo_dispatches == 1
+    single = mc.plan_for([1])
+    assert single.makespan <= mc.tenant_plan(1).makespan + 1e-6
     assert eng.done[rid].latency_ms == pytest.approx(
-        mc.soc.cycles_to_ms(mc.tenant_plan(1).makespan))
+        mc.soc.cycles_to_ms(single.tenant_makespans[0]))

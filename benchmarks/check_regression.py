@@ -6,8 +6,12 @@ co-scheduled makespan regressed by more than ``--tolerance`` (default 5%),
 or when the partial-occupancy trace got slower overall, or when any
 negative-gain subset round appeared (per-occupancy re-tiling makes the
 compile-alone back-to-back fallback a hard floor, so that count must stay
-zero).  Mixes present in only one of the two reports are listed but do not
-fail the gate (baselines refresh when the mix list changes).
+zero).  The SLO serving trace is gated too: any starvation event fails
+outright, as does an unseen-occupancy first round above 1.1x the
+compile-alone concat floor, or a HIGH-class attainment drop of more than
+the tolerance (absolute) against the baseline per mix.  Mixes present in
+only one of the two reports are listed but do not fail the gate
+(baselines refresh when the mix list changes).
 
 Usage (the CI bench lane):
 
@@ -76,6 +80,8 @@ def compare(report: dict, baseline: dict,
     if neg:
         failures.append(f"partial occupancy: {neg} negative-gain subset "
                         f"rounds (expected 0)")
+
+    failures += compare_slo(report, baseline, tolerance)
     got = new_part.get("subset_total_ms")
     want = base_part.get("subset_total_ms")
     if got is not None and want:
@@ -88,6 +94,66 @@ def compare(report: dict, baseline: dict,
             failures.append(
                 f"partial-occupancy trace: {got:.2f} ms vs baseline "
                 f"{want:.2f} ms (+{(ratio - 1.0) * 100.0:.1f}%)")
+    return failures
+
+
+def compare_slo(report: dict, baseline: dict,
+                tolerance: float = DEFAULT_TOLERANCE) -> list:
+    """Gates on the SLO serving trace: any starvation event in the fresh
+    report fails outright (the composer's hard no-starvation bound is a
+    structural property, not a tuning target), an unseen-occupancy first
+    round costing more than 1.1x the compile-alone floor fails (a compile
+    crept back onto the dispatch path), a per-mix HIGH-class attainment
+    drop of more than ``tolerance`` (absolute fraction) vs the committed
+    baseline fails, and so does winning the HIGH-beats-FIFO comparison on
+    fewer mixes than the baseline did."""
+    failures = []
+    slo = report.get("slo_serving") or {}
+    base_slo = baseline.get("slo_serving") or {}
+    starved = slo.get("starvation_events", 0)
+    if starved:
+        failures.append(f"slo serving: {starved} starvation events "
+                        f"(expected 0)")
+    base_rows = {_mix_key(r): r for r in base_slo.get("mixes", [])}
+    for row in slo.get("mixes", []):
+        key = _mix_key(row)
+        base = base_rows.get(key)
+        got = row.get("high_attainment_slo")
+        if base is None:
+            print(f"  [new slo mix, no baseline] {key}")
+            continue
+        want = base.get("high_attainment_slo")
+        if got is None or want is None:
+            continue
+        drop = want - got
+        mark = "REGRESSION" if drop > tolerance else "ok"
+        print(f"  {'slo HIGH attainment ' + key:40s} baseline {want:9.2%} "
+              f"   now {got:9.2%} ({-drop * 100.0:+.1f}pp)  {mark}")
+        if drop > tolerance:
+            failures.append(
+                f"slo mix {key}: HIGH attainment {got:.0%} vs baseline "
+                f"{want:.0%} (-{drop * 100.0:.1f}pp > "
+                f"{tolerance * 100.0:.0f}pp)")
+    got_w, want_w = slo.get("high_wins"), base_slo.get("high_wins")
+    if got_w is not None and want_w is not None:
+        mark = "REGRESSION" if got_w < want_w else "ok"
+        print(f"  {'slo HIGH-beats-FIFO mixes':40s} baseline {want_w:9d} "
+              f"   now {got_w:9d}  {mark}")
+        if got_w < want_w:
+            failures.append(
+                f"slo serving: HIGH class beats FIFO on only {got_w}/"
+                f"{slo.get('total_mixes')} mixes vs baseline {want_w}")
+    async_first = report.get("async_first_round") or {}
+    ratio = async_first.get("floor_ratio")
+    if ratio is not None:
+        mark = "REGRESSION" if ratio > 1.1 else "ok"
+        print(f"  {'async first round vs concat floor':40s} "
+              f"{ratio:9.3f}x (gate 1.100x)  {mark}")
+        if ratio > 1.1:
+            failures.append(
+                f"async first round at unseen occupancy: {ratio:.3f}x the "
+                f"compile-alone floor (> 1.1x — a compile is back on the "
+                f"dispatch path)")
     return failures
 
 

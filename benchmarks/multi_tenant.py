@@ -24,11 +24,23 @@ utilization, the co-scheduling speedups, the winning candidate's origin,
 and the shared-L2 eviction counts.  A forced-contention section shrinks
 the shared L2 until the compile-alone tilings thrash, showing re-tiling
 reducing ``SharedL2Allocator`` evictions while winning the makespan.  A
-final partial-occupancy section replays a tenants-arriving/leaving trace
+partial-occupancy section replays a tenants-arriving/leaving trace
 against the session's occupancy-indexed plan store — tiling is re-decided
 per occupancy (compile-alone warm starts, L2 re-split among the active
 tenants), so every round's subset co-schedule beats (or ties) the old
 compile-alone back-to-back fallback: no negative-gain rounds.
+
+Two serving-layer sections close the report.  An async-compile probe
+dispatches one round at an *unseen* occupancy with the background
+compiler attached: the round costs the compile-alone concat floor (gated
+at <= 1.1x) instead of stalling on the subset compile's joint CP solve.
+An SLO section replays one deterministic open-loop arrival trace per mix
+through a FIFO engine and a deadline-driven engine
+(``serve.admission.RoundComposer``): the contention-hurt tenant carries
+HIGH priority and a deadline halfway between its compile-alone latency
+and its co-scheduled completion, the rest submit saturating bulk traffic
+— reported per class as SLO attainment and p99 e2e latency, gated on the
+HIGH class beating FIFO and on zero starvation events.
 
     PYTHONPATH=src python -m benchmarks.multi_tenant [--fast] [--json OUT]
 
@@ -46,10 +58,15 @@ import json
 import os
 import sys
 
+import time
+
 from repro.core.api import compile_multi
 from repro.core.runtime import multi_plan_matches_oracle
 from repro.core.schedule import _search_coschedule, default_budgets
 from repro.models import edge
+from repro.serve.admission import Priority, RoundComposer
+from repro.serve.compiler_thread import BackgroundCompiler
+from repro.serve.engine import MultiModelEngine
 from repro.soc.carfield import carfield_patterns, carfield_soc
 from repro.soc.testbed import FORCED_L2_KIB, forced_contention_setup
 
@@ -283,6 +300,173 @@ def run_partial_occupancy(verbose: bool = True, time_budget_s: float = 2.0,
             "plan_store": stats}
 
 
+# ---------------------------------------------------------------------------
+# SLO-aware serving: open-loop arrival trace, FIFO vs deadline-driven rounds
+# ---------------------------------------------------------------------------
+
+
+def _open_loop(engine: MultiModelEngine, arrivals) -> MultiModelEngine:
+    """Replay an open-loop trace: arrivals land at fixed wall times
+    (``arrival_s``) regardless of service progress; the engine's idle
+    clock jumps to the next arrival when its queues drain."""
+    i = 0
+    while i < len(arrivals) or engine.pending:
+        while i < len(arrivals) and arrivals[i][0] <= engine.clock_s + 1e-12:
+            t, tenant, prio, dl = arrivals[i]
+            i += 1
+            engine.submit(tenant, priority=prio, deadline_s=dl, arrival_s=t)
+        if not engine.pending:
+            if i >= len(arrivals):
+                break
+            engine.advance_clock(arrivals[i][0])
+            continue
+        engine.step()
+    return engine
+
+
+def build_slo_trace(mc, n_high: int = 24):
+    """A deterministic open-loop trace for one compiled mix.
+
+    The tenant most hurt by co-residency (largest co-scheduled vs alone
+    completion ratio) becomes the HIGH class, with the deadline "one
+    in-flight round plus my solo latency" (full-house makespan + the
+    tenant's compile-alone latency): a request that arrives mid-round
+    can always make it *if* the next round fast-paths it, so the
+    deadline-driven composer attains it structurally, while FIFO — whose
+    rounds under load co-schedule everyone — pays the tenant's
+    co-scheduled completion on top of the alignment wait and misses in
+    proportion to the co-vs-alone gap.  The remaining tenants submit
+    deadline-less NORMAL/LOW bulk traffic slightly above their service
+    rate, so their queues are (almost) never empty — the contention that
+    forces the composer to actually choose."""
+    soc = mc.soc
+    n = len(mc.graphs)
+    alone_s = [soc.cycles_to_ms(mc.singles[i].plan.makespan) / 1e3
+               for i in range(n)]
+    co_s = [soc.cycles_to_ms(mc.plan.tenant_makespans[i]) / 1e3
+            for i in range(n)]
+    full_s = soc.cycles_to_ms(mc.plan.makespan) / 1e3
+    high = max(range(n), key=lambda i: co_s[i] / alone_s[i])
+    bulk = [i for i in range(n) if i != high]
+    # the longest round a HIGH arrival can land behind: the bulk-only
+    # co-round (both engines run it while no HIGH request is queued)
+    bulk_round_s = soc.cycles_to_ms(mc.plan_for(bulk).makespan) / 1e3
+    deadline_s = bulk_round_s + alone_s[high]
+    high_period = 3.0 * full_s
+    arrivals = []
+    for k in range(n_high):
+        arrivals.append((k * high_period, high, Priority.HIGH, deadline_s))
+    for i in range(n):
+        if i == high:
+            continue
+        period = 0.8 * alone_s[i]          # saturating: queues stay busy
+        prio = Priority.NORMAL if i % 2 == 0 else Priority.LOW
+        t = 0.33 * period
+        while t < n_high * high_period:
+            arrivals.append((t, i, prio, None))
+            t += period
+    arrivals.sort(key=lambda a: (a[0], a[1]))
+    return arrivals, high, deadline_s
+
+
+def run_slo_trace(rows, verbose: bool = True):
+    """FIFO vs SLO-aware serving on the same open-loop trace, per mix:
+    SLO attainment and per-class p99 e2e latency.  The acceptance story:
+    the HIGH class's attainment under the deadline-driven composer
+    strictly exceeds the FIFO baseline on most mixes, with zero
+    starvation events (bulk traffic still drains inside the composer's
+    hard bound)."""
+    out = []
+    if verbose:
+        print("\nSLO-aware serving (open-loop arrival trace): "
+              "FIFO vs deadline-driven rounds")
+        print(f"  {'mix':34s} {'class':7s} {'attain FIFO':>12s} "
+              f"{'attain SLO':>11s} {'p99 FIFO':>10s} {'p99 SLO':>9s}")
+    for mix, mc, *_ in rows:
+        arrivals, high, deadline_s = build_slo_trace(mc)
+        fifo = _open_loop(MultiModelEngine(mc, execute=False), arrivals)
+        slo = _open_loop(MultiModelEngine(mc, composer=RoundComposer(),
+                                          execute=False), arrivals)
+        rep_f, rep_s = fifo.report(), slo.report()
+        high_name = mc.graphs[high].name
+        row = {
+            "mix": list(mix),
+            "high_tenant": high_name,
+            "deadline_ms": deadline_s * 1e3,
+            "requests": rep_f["served"],
+            "fifo": {"slo_attainment": rep_f["slo_attainment"],
+                     "per_class": rep_f["per_class"]},
+            "slo": {"slo_attainment": rep_s["slo_attainment"],
+                    "per_class": rep_s["per_class"]},
+            "high_attainment_fifo":
+                rep_f["per_class"]["HIGH"]["slo_attainment"],
+            "high_attainment_slo":
+                rep_s["per_class"]["HIGH"]["slo_attainment"],
+            "starvation_events": rep_s["starvation_events"],
+            "composer": rep_s["composer"],
+        }
+        row["high_win"] = (row["high_attainment_slo"] or 0.0) > \
+            (row["high_attainment_fifo"] or 0.0) + 1e-12
+        out.append(row)
+        if verbose:
+            for cls in ("HIGH", "NORMAL", "LOW"):
+                cf, cs = rep_f["per_class"][cls], rep_s["per_class"][cls]
+                if cf["served"] == 0:
+                    continue
+                af = cf["slo_attainment"]
+                asl = cs["slo_attainment"]
+                print(f"  {' + '.join(mix):34s} {cls:7s} "
+                      f"{('-' if af is None else f'{af:.0%}'):>12s} "
+                      f"{('-' if asl is None else f'{asl:.0%}'):>11s} "
+                      f"{cf['p99_e2e_ms']:9.2f}m {cs['p99_e2e_ms']:8.2f}m")
+    wins = sum(1 for r in out if r["high_win"])
+    starved = sum(r["starvation_events"] for r in out)
+    if verbose:
+        print(f"  HIGH-class attainment strictly beats FIFO on "
+              f"{wins}/{len(out)} mixes; {starved} starvation events")
+    return {"mixes": out, "high_wins": wins, "total_mixes": len(out),
+            "starvation_events": starved}
+
+
+def run_async_first_round(rows, verbose: bool = True):
+    """First-round latency at an *unseen* occupancy with the background
+    compiler attached: the analytic round cost must stay within 1.1x the
+    compile-alone concat floor (it equals the floor by construction — no
+    joint solve runs on the dispatch path), and the wall-clock dispatch
+    time is reported next to the background compile's wall time for
+    scale."""
+    mix, mc, *_ = rows[0]              # 2-tenant mix: singletons unseen
+    session = mc.session
+    occupancy = [0]
+    floor_ms = mc.soc.cycles_to_ms(
+        sum(mc.singles[i].plan.makespan for i in occupancy))
+    bg = BackgroundCompiler(session, start=False)
+    eng = MultiModelEngine(mc, async_compile=bg, execute=False)
+    unseen = session.try_plan_for(occupancy) is None
+    eng.submit(occupancy[0])
+    t0 = time.perf_counter()
+    eng.step()
+    dispatch_wall_s = time.perf_counter() - t0
+    first_round_ms = eng.clock_s * 1e3
+    t0 = time.perf_counter()
+    bg.run_pending()
+    compile_wall_s = time.perf_counter() - t0
+    ratio = first_round_ms / floor_ms if floor_ms else 1.0
+    if verbose:
+        print(f"\nasync compile at unseen occupancy "
+              f"({mc.graphs[0].name} of {' + '.join(mix)}):")
+        print(f"  first round: {first_round_ms:.2f} ms analytic "
+              f"({ratio:.3f}x the compile-alone floor, unseen={unseen}); "
+              f"dispatch wall {dispatch_wall_s * 1e3:.1f} ms vs "
+              f"background compile wall {compile_wall_s:.2f} s")
+    return {"mix": list(mix), "occupancy": occupancy,
+            "floor_ms": floor_ms, "first_round_ms": first_round_ms,
+            "floor_ratio": ratio, "unseen": unseen,
+            "dispatch_wall_s": dispatch_wall_s,
+            "compile_wall_s": compile_wall_s,
+            "floor_rounds": eng.floor_rounds}
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true",
@@ -295,9 +479,11 @@ def main(argv=None) -> None:
     print("=" * 72)
     rows = run(check_numerics=not args.fast, verbose=True)
     mc, forced = run_forced_contention(verbose=True)
+    async_first = run_async_first_round(rows, verbose=True)
     partial_mc = next((m for mix, m, *_ in rows if tuple(mix) == PARTIAL_MIX),
                       None)
     partial = run_partial_occupancy(verbose=True, mc=partial_mc)
+    slo = run_slo_trace(rows, verbose=True)
     if args.json:
         report = {
             "mixes": rows_to_json(rows),
@@ -313,6 +499,8 @@ def main(argv=None) -> None:
                 "retiled": mc.retiled,
             },
             "partial_occupancy": partial,
+            "slo_serving": slo,
+            "async_first_round": async_first,
         }
         out_dir = os.path.dirname(args.json)
         if out_dir:

@@ -10,6 +10,44 @@ unified candidate search; the session then owns an occupancy-indexed
 a real co-schedule — the serving engine never falls back to compile-alone
 plans when only some tenants have queued work.
 
+Serving & SLOs
+--------------
+
+Requests carry a priority class and an optional deadline, and the engine
+grows three opt-in layers (all default-off; the bare engine stays FIFO):
+
+    from repro.serve.admission import (AdmissionController, ClassPolicy,
+                                       Priority, RoundComposer)
+
+    eng = MultiModelEngine(
+        mc,
+        # bound best-effort queue depth; over-bound submits are rejected
+        admission=AdmissionController({Priority.LOW:
+                                       ClassPolicy(max_queued=8)}),
+        # deadline-driven round composition: the occupancy dispatched
+        # each round maximizes the predicted priority-weighted deadline
+        # attainment (FIFO's all-active round wins all ties, starved
+        # heads are force-included, feasible deadlines of deferred
+        # tenants are protected)
+        composer=RoundComposer(),
+        # plan_for misses compile in the background (smaller
+        # lazy_joint_time_budget_s); the round serves the compile-alone
+        # concat floor instead of stalling on the joint CP solve
+        async_compile=True,
+        # drain up to 4 queued requests per tenant per round; repeated
+        # waves of the same plan skip the parameter-load DMA traffic
+        max_batch=4)
+
+    eng.submit("kws", priority=Priority.HIGH, deadline_s=0.050)
+    eng.submit("vision")                  # NORMAL, no deadline
+    eng.run()
+    eng.report()["per_class"]["HIGH"]     # attainment, p50/p99 e2e
+
+``submit`` returns ``None`` for an admission-rejected request;
+``report()`` adds per-class attainment/percentiles, round decomposition
+(co / solo / fallback / floor rounds), starvation events (structurally 0)
+and the admission/composer/background-compiler counters.
+
 The legacy one-shot wrapper (``compile_multi``) is demoed at the end for
 compat; it builds the same session internally.
 
@@ -25,6 +63,7 @@ from repro.core.api import compile_multi
 from repro.core.deploy import (CompileRequest, DeploymentSession, Objective)
 from repro.core.runtime import multi_plan_matches_oracle
 from repro.models import edge
+from repro.serve.admission import Priority, RoundComposer
 from repro.serve.engine import MultiModelEngine
 from repro.soc.carfield import carfield_patterns, carfield_soc
 
@@ -90,6 +129,30 @@ def main() -> None:
         print(f"  {t['model']:14s} served={t['served']}  "
               f"mean latency {t['mean_latency_ms']:.2f} ms")
     print(f"plan store: {rep['plan_store']}")
+
+    # -- SLO-aware serving: priorities, deadlines, async compiles ----------
+    # the autoencoder is latency-critical (HIGH, deadline between its
+    # compile-alone latency and its co-scheduled completion); ds_cnn
+    # submits a deadline-less backlog.  The deadline-driven composer
+    # fast-paths the HIGH requests where FIFO would co-schedule them
+    # behind the backlog.
+    alone_s = soc.cycles_to_ms(mc.singles[0].plan.makespan) / 1e3
+    co_s = soc.cycles_to_ms(mc.plan.tenant_makespans[0]) / 1e3
+    deadline_s = 0.5 * (alone_s + co_s)
+    slo = MultiModelEngine(mc, composer=RoundComposer(), execute=False)
+    for _ in range(4):
+        slo.submit("ds_cnn")
+    for _ in range(3):
+        slo.submit("autoencoder", priority=Priority.HIGH,
+                   deadline_s=deadline_s)
+    slo.run()
+    srep = slo.report()
+    high = srep["per_class"]["HIGH"]
+    print(f"\nSLO serving: HIGH deadline {deadline_s * 1e3:.2f} ms -> "
+          f"attainment {high['slo_attainment']:.0%} "
+          f"(p99 e2e {high['p99_e2e_ms']:.2f} ms), "
+          f"{srep['starvation_events']} starvation events, "
+          f"composer {srep['composer']}")
 
     # -- legacy wrapper, still working ------------------------------------
     mc2 = compile_multi(graphs, soc, patterns, time_budget_s=3.0)

@@ -80,7 +80,9 @@ def compile_multi(graphs: Sequence[Graph], soc: SoC,
                   retile_for_contention: bool = True,
                   max_hint_rounds: int = 3,
                   joint_tiling: bool = True,
-                  joint_time_budget_s: float = 6.0) -> MultiCompiledModel:
+                  joint_time_budget_s: float = 6.0,
+                  lazy_joint_time_budget_s: float = 1.5
+                  ) -> MultiCompiledModel:
     """Compile N independent models into one multi-tenant co-schedule.
 
     Stage 1 runs per model exactly as :func:`compile_model`; stage 2 merges
@@ -102,7 +104,12 @@ def compile_multi(graphs: Sequence[Graph], soc: SoC,
     any occupancy from the session's :class:`PlanStore` (lazily compiling
     subset co-schedules on first miss — tiling re-decided per occupancy,
     with the L2 re-split among the active tenants) and ``tenant_plan`` /
-    ``reference_plan`` reuse cached reference schedules."""
+    ``reference_plan`` reuse cached reference schedules.  Serving engines
+    that must not stall on a miss probe with the thread-safe
+    ``try_plan_for`` and push compiles to a background
+    :class:`~repro.serve.compiler_thread.BackgroundCompiler`, whose
+    ``submit_compile`` jobs run under the smaller
+    ``lazy_joint_time_budget_s`` joint budget."""
     assert len(graphs) >= 1
     request = CompileRequest(graphs=list(graphs), soc=soc, patterns=patterns,
                              mode=mode, requested_tiles=requested_tiles,
@@ -110,5 +117,6 @@ def compile_multi(graphs: Sequence[Graph], soc: SoC,
                              retile_for_contention=retile_for_contention,
                              max_hint_rounds=max_hint_rounds,
                              joint_tiling=joint_tiling,
-                             joint_time_budget_s=joint_time_budget_s)
+                             joint_time_budget_s=joint_time_budget_s,
+                             lazy_joint_time_budget_s=lazy_joint_time_budget_s)
     return DeploymentSession(request).compile()

@@ -52,6 +52,7 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
+import threading
 from collections import OrderedDict
 from typing import (Callable, Dict, FrozenSet, Hashable, List, Optional,
                     Sequence, Set, Tuple)
@@ -183,7 +184,13 @@ class CompileRequest:
     rides the contention re-tiling loop, so it also needs
     ``retile_for_contention=True`` (the default) — to ablate the joint CP
     *against* best-response, pass an explicit ``strategies`` list
-    containing ``joint-cp``."""
+    containing ``joint-cp``.
+
+    ``lazy_joint_time_budget_s`` is the smaller joint budget used by
+    :meth:`DeploymentSession.submit_compile` — the background (serving-
+    time) subset compiles a :class:`~repro.serve.compiler_thread.
+    BackgroundCompiler` runs on ``plan_for`` misses, where a long solve
+    only delays how soon the engine can leave the compile-alone floor."""
     graphs: Sequence[Graph]
     soc: SoC
     patterns: Sequence[Pattern]
@@ -196,6 +203,7 @@ class CompileRequest:
     strategies: Optional[Sequence[str]] = None
     joint_tiling: bool = True
     joint_time_budget_s: float = 6.0
+    lazy_joint_time_budget_s: float = 1.5
     store_max_entries: int = 64
 
     def __post_init__(self) -> None:
@@ -213,6 +221,9 @@ class CompileRequest:
         if self.store_max_entries < 1:
             raise ValueError(f"store_max_entries must be >= 1: "
                              f"{self.store_max_entries}")
+        if self.lazy_joint_time_budget_s <= 0.0:
+            raise ValueError(f"lazy_joint_time_budget_s must be > 0: "
+                             f"{self.lazy_joint_time_budget_s}")
 
 
 # ---------------------------------------------------------------------------
@@ -649,6 +660,20 @@ class MultiCompiledModel:
             return None
         return self.session.plan_for(ids)
 
+    def try_plan_for(self, active: Sequence[int], touch: bool = False
+                     ) -> Optional[MultiExecutionPlan]:
+        """Non-blocking occupancy lookup: the cached plan or ``None`` —
+        never compiles (delegates to
+        :meth:`DeploymentSession.try_plan_for`, including the ``touch``
+        accounting).  On a session-less artifact only the full house
+        answers."""
+        ids = sorted({int(a) for a in active})
+        if ids == list(range(len(self.graphs))):
+            return self.plan
+        if self.session is None:
+            return None
+        return self.session.try_plan_for(ids, touch=touch)
+
     def store_stats(self) -> Optional[Dict[str, int]]:
         """Hit/miss/compile counters of the session's plan store (``None``
         for session-less artifacts)."""
@@ -691,7 +716,16 @@ class PlanStore:
     recompiles on its next miss).  Protected occupancies — the full house,
     registered via :meth:`protect` — and the tenant reference schedules
     (the numerics contract) are never evicted.  ``evictions`` in
-    :meth:`stats` counts the drops."""
+    :meth:`stats` counts the drops.
+
+    The store is thread-safe: every map access holds an internal RLock,
+    and the builder callbacks of :meth:`co_plan` / :meth:`tenant_plan` run
+    *outside* it, so a serving thread's non-blocking :meth:`peek` never
+    waits behind a background subset compile.  (Exactly-once compilation
+    for concurrent misses of the same occupancy is the session's job —
+    :meth:`DeploymentSession.submit_compile` — not the store's; two
+    concurrent *blocking* ``co_plan`` misses may both build, with the
+    first landed plan winning so cached-identity contracts hold.)"""
 
     def __init__(self, max_entries: int = 64) -> None:
         if max_entries < 1:
@@ -700,6 +734,7 @@ class PlanStore:
             OrderedDict()
         self._tenant: Dict[Hashable, ExecutionPlan] = {}
         self._protected: Set[FrozenSet[int]] = set()
+        self._lock = threading.RLock()
         self.max_entries = max_entries
         self.hits = 0
         self.misses = 0
@@ -707,26 +742,51 @@ class PlanStore:
         self.lru_evictions = 0
 
     def __len__(self) -> int:
-        return len(self._co) + len(self._tenant)
+        with self._lock:
+            return len(self._co) + len(self._tenant)
 
     def __contains__(self, key) -> bool:
         """ints and tuples query the tenant-reference map (tuples are the
         ``(tenant, tiling-signature)`` keys); query occupancies with a
         list / set / frozenset, never a tuple."""
-        if isinstance(key, (int, tuple)):
-            return key in self._tenant
-        return frozenset(key) in self._co
+        with self._lock:
+            if isinstance(key, (int, tuple)):
+                return key in self._tenant
+            return frozenset(key) in self._co
 
     def has_tenant(self, key: Hashable) -> bool:
-        return key in self._tenant
+        with self._lock:
+            return key in self._tenant
 
     def occupancies(self) -> List[FrozenSet[int]]:
         """Cached co-schedule occupancies, smallest first."""
-        return sorted(self._co, key=lambda s: (len(s), sorted(s)))
+        with self._lock:
+            return sorted(self._co, key=lambda s: (len(s), sorted(s)))
 
     def protect(self, active: Sequence[int]) -> None:
         """Exempt an occupancy from LRU eviction (the full house)."""
-        self._protected.add(frozenset(active))
+        with self._lock:
+            self._protected.add(frozenset(active))
+
+    def peek(self, active: Sequence[int], touch: bool = False
+             ) -> Optional[MultiExecutionPlan]:
+        """Non-compiling occupancy lookup: the cached co-schedule or
+        ``None``.  By default a *pure read* — no counters, no LRU
+        recency — so speculative probes (the round composer scores many
+        candidate occupancies per round) neither corrupt the hit/miss
+        stats nor let candidate enumeration evict dispatch-hot plans.
+        The serving engine's actual dispatch probe passes ``touch=True``
+        to count the lookup and refresh recency like ``co_plan`` does."""
+        key = frozenset(active)
+        with self._lock:
+            plan = self._co.get(key)
+            if touch:
+                if plan is not None:
+                    self.hits += 1
+                    self._co.move_to_end(key)
+                else:
+                    self.misses += 1
+            return plan
 
     def _evict_lru(self, keep: Optional[FrozenSet[int]] = None) -> None:
         """Drop LRU occupancies down to the bound; never drops protected
@@ -741,51 +801,68 @@ class PlanStore:
             del self._co[victim]
             self.lru_evictions += 1
 
-    def seed(self, active: Sequence[int], plan: MultiExecutionPlan) -> None:
-        """Register an already-compiled co-schedule (no counter changes)."""
+    def seed(self, active: Sequence[int], plan: MultiExecutionPlan) -> bool:
+        """Register an already-compiled co-schedule (no counter changes).
+        First landed plan wins, like ``co_plan``: if a concurrent
+        blocking compile already cached this occupancy, callers holding
+        that object must keep seeing it (the engine compares plans by
+        identity), so the late arrival is dropped.  Returns whether
+        ``plan`` was actually inserted."""
         key = frozenset(active)
-        self._co[key] = plan
-        self._co.move_to_end(key)
-        self._evict_lru(keep=key)
+        with self._lock:
+            inserted = key not in self._co
+            if inserted:
+                self._co[key] = plan
+            self._co.move_to_end(key)
+            self._evict_lru(keep=key)
+            return inserted
 
     def seed_tenant(self, tenant: Hashable, plan: ExecutionPlan) -> None:
         """Register an already-compiled tenant reference schedule (no
         counter changes — reuse of an existing plan is not a compile)."""
-        self._tenant[tenant] = plan
+        with self._lock:
+            self._tenant[tenant] = plan
 
     def co_plan(self, active: Sequence[int],
                 build: Callable[[], MultiExecutionPlan]
                 ) -> MultiExecutionPlan:
         key = frozenset(active)
-        if key in self._co:
-            self.hits += 1
+        with self._lock:
+            if key in self._co:
+                self.hits += 1
+                self._co.move_to_end(key)
+                return self._co[key]
+            self.misses += 1
+        plan = build()                     # outside the lock: see class doc
+        with self._lock:
+            self.compiles += 1
+            if key not in self._co:        # first landed plan wins
+                self._co[key] = plan
             self._co.move_to_end(key)
+            self._evict_lru(keep=key)
             return self._co[key]
-        self.misses += 1
-        plan = build()
-        self.compiles += 1
-        self._co[key] = plan
-        self._co.move_to_end(key)
-        self._evict_lru(keep=key)
-        return plan
 
     def tenant_plan(self, tenant: Hashable,
                     build: Callable[[], ExecutionPlan]) -> ExecutionPlan:
-        if tenant in self._tenant:
-            self.hits += 1
-            return self._tenant[tenant]
-        self.misses += 1
+        with self._lock:
+            if tenant in self._tenant:
+                self.hits += 1
+                return self._tenant[tenant]
+            self.misses += 1
         plan = build()
-        self.compiles += 1
-        self._tenant[tenant] = plan
-        return plan
+        with self._lock:
+            self.compiles += 1
+            if tenant not in self._tenant:
+                self._tenant[tenant] = plan
+            return self._tenant[tenant]
 
     def stats(self) -> Dict[str, int]:
-        return {"hits": self.hits, "misses": self.misses,
-                "compiles": self.compiles, "co_plans": len(self._co),
-                "tenant_plans": len(self._tenant),
-                "evictions": self.lru_evictions,
-                "max_entries": self.max_entries}
+        with self._lock:
+            return {"hits": self.hits, "misses": self.misses,
+                    "compiles": self.compiles, "co_plans": len(self._co),
+                    "tenant_plans": len(self._tenant),
+                    "evictions": self.lru_evictions,
+                    "max_entries": self.max_entries}
 
 
 # ---------------------------------------------------------------------------
@@ -817,6 +894,9 @@ class DeploymentSession:
         self.joint_solves = 0          # successful joint cross-tenant solves
         self.joint_fallbacks = 0       # joint solves that fell back to
         #                                best-response (budget exhausted)
+        self.lazy_compiles = 0         # background submit_compile landings
+        self._lock = threading.RLock()
+        self._inflight: Set[FrozenSet[int]] = set()   # submit_compile dedupe
         # the exact best-response incumbent (phase A of the fixpoint): what
         # PR 2/3 would have shipped — the bound the joint CP must beat
         self.best_response_plan: Optional[MultiExecutionPlan] = None
@@ -1032,15 +1112,18 @@ class DeploymentSession:
         return plan
 
     def joint_tilings(self, ids: Sequence[int],
-                      warm: Optional[Sequence[TiledGraph]] = None
+                      warm: Optional[Sequence[TiledGraph]] = None,
+                      time_budget_s: Optional[float] = None
                       ) -> Optional[List[TiledGraph]]:
         """One joint cross-tenant stage-1 solve over the tenants in ``ids``
         (the full house or any occupancy subset), warm-started from the
-        given tiled graphs' solutions, bounded by
-        ``request.joint_time_budget_s``.  Returns the coordinated
-        per-tenant tile graphs, or ``None`` when the solver produced
-        nothing within the budget — the caller's best-response fallback
-        then engages (counted in ``joint_fallbacks``)."""
+        given tiled graphs' solutions, bounded by ``time_budget_s``
+        (default ``request.joint_time_budget_s``; background lazy-miss
+        compiles pass the smaller ``lazy_joint_time_budget_s``).  Returns
+        the coordinated per-tenant tile graphs, or ``None`` when the
+        solver produced nothing within the budget — the caller's
+        best-response fallback then engages (counted in
+        ``joint_fallbacks``)."""
         req = self.request
         graphs = [req.graphs[i] for i in ids]
         try:
@@ -1050,7 +1133,10 @@ class DeploymentSession:
             warm_sols = ([tg.solution for tg in warm]
                          if warm is not None else None)
             sols = problem.solve(warm=warm_sols,
-                                 time_budget_s=req.joint_time_budget_s)
+                                 time_budget_s=(time_budget_s
+                                                if time_budget_s is not None
+                                                else
+                                                req.joint_time_budget_s))
         except cpsolver.Infeasible:
             # the designed fallback path: budget exhausted with nothing
             # feasible found.  Real programming errors propagate — they
@@ -1083,17 +1169,77 @@ class DeploymentSession:
         ``joint_time_budget_s`` of per-occupancy joint solving — on the
         caller's thread; latency-sensitive callers (a serving engine's
         first round at a new occupancy) should :meth:`precompile` the
-        occupancies they expect."""
+        occupancies they expect, or probe with :meth:`try_plan_for` and
+        push the miss to a background
+        :class:`~repro.serve.compiler_thread.BackgroundCompiler`."""
         self.compile()
         ids = self._check_active(active)
         return self.store.co_plan(ids, lambda: self._compile_subset(ids))
+
+    def try_plan_for(self, active: Sequence[int], touch: bool = False
+                     ) -> Optional[MultiExecutionPlan]:
+        """Non-blocking, non-compiling occupancy lookup — the serving
+        engine's dispatch-path probe.  Returns the cached co-schedule for
+        exactly the ``active`` tenants (the full house always answers once
+        the session is compiled), or ``None`` on a store miss.  Thread-
+        safe; never triggers a compile, so it never stalls a round.
+        ``touch`` counts the lookup and refreshes LRU recency (pass it
+        from real dispatches, not speculative scoring probes)."""
+        if self._multi is None:
+            return None
+        ids = self._check_active(active)
+        if ids == list(range(len(self.request.graphs))):
+            return self._multi.plan
+        return self.store.peek(ids, touch=touch)
+
+    def submit_compile(self, active: Sequence[int],
+                       joint_budget_s: Optional[float] = None) -> bool:
+        """Compile-and-cache the occupancy for ``active``, exactly once
+        under concurrent submission (the background compiler's worker
+        entry point — also safe to call inline).
+
+        Uses the smaller ``request.lazy_joint_time_budget_s`` joint
+        budget by default: on the serving path a long joint solve only
+        delays how soon the engine can leave the compile-alone floor, and
+        the floor is already a hard lower bound on the plan quality this
+        compile must deliver.  Returns True when this call compiled the
+        plan AND landed it in the store; False when the occupancy was
+        already cached, in flight on another thread, the (always-cached)
+        full house, or lost the store race to a concurrent blocking
+        ``plan_for``."""
+        self.compile()
+        ids = self._check_active(active)
+        key = frozenset(ids)
+        if ids == list(range(len(self.request.graphs))):
+            return False
+        with self._lock:
+            if key in self.store or key in self._inflight:
+                return False
+            self._inflight.add(key)
+        budget = (joint_budget_s if joint_budget_s is not None
+                  else self.request.lazy_joint_time_budget_s)
+        landed = False
+        try:
+            plan = self._compile_subset(ids, joint_budget_s=budget)
+            # a concurrent blocking plan_for may have landed first; only
+            # a plan that actually entered the store counts as compiled
+            landed = self.store.seed(ids, plan)
+            if landed:
+                with self._lock:
+                    self.lazy_compiles += 1
+        finally:
+            with self._lock:
+                self._inflight.discard(key)
+        return landed
 
     def precompile(self, subsets: Sequence[Sequence[int]]) -> None:
         """Eagerly co-schedule the given occupancy subsets into the store."""
         for subset in subsets:
             self.plan_for(subset)
 
-    def _compile_subset(self, ids: List[int]) -> MultiExecutionPlan:
+    def _compile_subset(self, ids: List[int],
+                        joint_budget_s: Optional[float] = None
+                        ) -> MultiExecutionPlan:
         """Per-occupancy compile: tiling is re-decided for the subset
         instead of blindly reusing the full-house winner's tilings.
 
@@ -1138,7 +1284,8 @@ class DeploymentSession:
         if (len(ids) > 1 and req.joint_tiling and req.mode in ASYNC_MODES
                 and any(getattr(s, "joint", False)
                         for s in self.strategies)):
-            jtgs = self.joint_tilings(ids, warm=alone_tgs)
+            jtgs = self.joint_tilings(ids, warm=alone_tgs,
+                                      time_budget_s=joint_budget_s)
             if jtgs is not None:
                 offer(jtgs, "joint-cp")
         plan = schedule_multi(full_tgs, req.soc, budgets=budgets,

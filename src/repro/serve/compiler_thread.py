@@ -1,0 +1,180 @@
+"""Background subset-plan compiler for the serving engine.
+
+A ``plan_for`` miss at an unseen occupancy pays the whole subset compile
+— including up to ``CompileRequest.joint_time_budget_s`` of joint
+cross-tenant CP solving — on the caller's thread.  On the serving
+engine's dispatch path that is a first-round stall of seconds at every
+occupancy the operator forgot to ``precompile``.  This module moves the
+compile off the dispatch path:
+
+  * the engine probes the store with the session's non-blocking
+    :meth:`~repro.core.deploy.DeploymentSession.try_plan_for`;
+  * on a miss it enqueues a :class:`CompileJob` here and serves the
+    round on the compile-alone concat floor (each member's compile-alone
+    schedule back-to-back — exactly the hard floor
+    ``DeploymentSession._compile_subset`` guarantees the eventual subset
+    plan will beat or tie, so serving the floor never costs more than
+    1x the plan the round is waiting for);
+  * the worker thread runs
+    :meth:`~repro.core.deploy.DeploymentSession.submit_compile`, which
+    compiles the occupancy with the smaller
+    ``CompileRequest.lazy_joint_time_budget_s`` joint budget, exactly
+    once per occupancy (concurrent misses dedupe), and lands the plan in
+    the store — the next round at that occupancy dispatches the real
+    subset co-schedule.
+
+For deterministic tests (and fake-clock serving simulations) construct
+with ``start=False`` and pump jobs synchronously with
+:meth:`run_pending`: same dedupe, same budgets, no thread.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+from typing import FrozenSet, List, Optional, Sequence
+
+
+@dataclasses.dataclass(frozen=True)
+class CompileJob:
+    """One queued background compile: an occupancy to materialize."""
+    occupancy: FrozenSet[int]
+
+
+class BackgroundCompiler:
+    """Owns the compile queue and (optionally) the worker thread.
+
+    ``submit(active)`` enqueues an occupancy unless it is already cached
+    or already queued/in-flight (returns whether a job was enqueued).
+    ``run_pending()`` drains the queue on the caller's thread — the
+    deterministic mode tests use; with ``start=True`` (the default) a
+    daemon worker drains it continuously.  ``drain()`` blocks until
+    every submitted job has finished compiling, for shutdown barriers
+    and benchmarks that want the steady state."""
+
+    def __init__(self, session, start: bool = True) -> None:
+        self.session = session
+        self._jobs: "queue.Queue[Optional[CompileJob]]" = queue.Queue()
+        self._lock = threading.Lock()
+        self._queued: set = set()          # occupancies queued or running
+        self._failed: set = set()          # poisoned: compile raised once
+        self._idle = threading.Condition(self._lock)
+        self._inflight = 0
+        self._thread: Optional[threading.Thread] = None
+        self.submitted = 0
+        self.compiled = 0
+        self.duplicates = 0                # submits deduped away
+        self.errors: List[str] = []
+        self.max_errors = 32               # errors list retention cap
+        if start:
+            self.start()
+
+    # -- lifecycle ----------------------------------------------------------
+
+    @property
+    def running(self) -> bool:
+        return self._thread is not None and self._thread.is_alive()
+
+    def start(self) -> None:
+        if self.running:
+            return
+        self._thread = threading.Thread(target=self._worker,
+                                        name="matcha-bg-compile",
+                                        daemon=True)
+        self._thread.start()
+
+    def stop(self, timeout_s: float = 30.0) -> None:
+        """Finish queued jobs, then stop the worker thread.  If the
+        worker is still mid-compile when the timeout expires, it stays
+        registered (``running`` remains True) so a later ``drain`` or
+        ``start`` cannot race a zombie worker on the same queue; it will
+        exit at the sentinel once the compile finishes."""
+        if not self.running:
+            return
+        self._jobs.put(None)               # sentinel: drain then exit
+        self._thread.join(timeout=timeout_s)
+        if not self._thread.is_alive():
+            self._thread = None
+
+    # -- the queue ----------------------------------------------------------
+
+    def submit(self, active: Sequence[int]) -> bool:
+        """Enqueue a compile for ``active`` unless the plan is already
+        cached, the occupancy is already queued/in-flight, or a previous
+        compile of it raised (poisoned — the engine keeps serving that
+        occupancy on the compile-alone floor instead of burning the
+        worker on a doomed compile every round)."""
+        key = frozenset(int(a) for a in active)
+        with self._lock:
+            if key in self._queued or key in self._failed:
+                self.duplicates += 1
+                return False
+            if self.session.try_plan_for(key) is not None:
+                self.duplicates += 1
+                return False
+            self._queued.add(key)
+            self._inflight += 1
+            self.submitted += 1
+        self._jobs.put(CompileJob(key))
+        return True
+
+    @property
+    def pending(self) -> int:
+        with self._lock:
+            return self._inflight
+
+    def _run_job(self, job: CompileJob) -> None:
+        try:
+            if self.session.submit_compile(job.occupancy):
+                self.compiled += 1
+        except Exception as exc:           # keep serving on compile bugs
+            with self._lock:
+                self._failed.add(job.occupancy)
+                if len(self.errors) < self.max_errors:
+                    self.errors.append(f"{sorted(job.occupancy)}: {exc!r}")
+        finally:
+            with self._lock:
+                self._queued.discard(job.occupancy)
+                self._inflight -= 1
+                self._idle.notify_all()
+
+    def run_pending(self) -> int:
+        """Synchronously compile every queued job on the caller's thread
+        (the deterministic no-thread mode).  Returns jobs processed."""
+        n = 0
+        while True:
+            try:
+                job = self._jobs.get_nowait()
+            except queue.Empty:
+                return n
+            if job is None:
+                continue
+            self._run_job(job)
+            n += 1
+
+    def drain(self, timeout_s: Optional[float] = None) -> bool:
+        """Block until all submitted jobs have compiled (True), or the
+        timeout expired (False).  With no worker thread running, pumps
+        the queue synchronously instead of waiting."""
+        if not self.running:
+            self.run_pending()
+            return self.pending == 0
+        with self._idle:
+            return self._idle.wait_for(lambda: self._inflight == 0,
+                                       timeout=timeout_s)
+
+    def _worker(self) -> None:
+        while True:
+            job = self._jobs.get()
+            if job is None:
+                return
+            self._run_job(job)
+
+    def stats(self) -> dict:
+        with self._lock:
+            failed = len(self._failed)
+        return {"submitted": self.submitted, "compiled": self.compiled,
+                "duplicates": self.duplicates, "pending": self.pending,
+                "failed_occupancies": failed,
+                "errors": len(self.errors), "running": self.running}

@@ -11,11 +11,40 @@ onto one SoC (``repro.core.api.compile_multi`` / a
 ``repro.core.deploy.DeploymentSession``) and dispatches them in
 co-scheduled rounds — every round executes the plan covering exactly that
 occupancy (``plan_for(active)``, answered from the session's
-occupancy-indexed plan store, compiled lazily on the first miss with the
-tiling re-decided for the subset), including singleton occupancies, whose
+occupancy-indexed plan store), including singleton occupancies, whose
 one-tenant plan is never worse than the full-house reference schedule.
 The compile-alone back-to-back fallback remains only for session-less
 artifacts.
+
+Since the SLO rework the dispatch layer is pluggable:
+
+  * requests carry a :class:`~repro.serve.admission.Priority` class and an
+    optional relative ``deadline_s``; an
+    :class:`~repro.serve.admission.AdmissionController` can bound queue
+    depth per class (rejections are recorded, never silent);
+  * a :class:`~repro.serve.admission.RoundComposer` picks the round's
+    occupancy by deadline pressure (priority-weighted, starvation-aged
+    urgency per predicted round second) instead of taking the FIFO front
+    — and degrades to the bitwise-identical FIFO composition while no
+    queued request carries an SLO;
+  * an attached :class:`~repro.serve.compiler_thread.BackgroundCompiler`
+    moves ``plan_for`` misses off the dispatch path: the engine probes
+    the store non-blockingly (``try_plan_for``), serves the compile-alone
+    concat floor while the subset plan compiles in the background, and
+    swaps to the real co-schedule when it lands — the first round at an
+    unseen occupancy never stalls on a joint CP solve;
+  * ``max_batch > 1`` lifts the one-request-per-tenant-per-round limit: a
+    dispatched tenant drains up to ``max_batch`` queued requests in
+    back-to-back waves inside the round, and consecutive waves that
+    re-execute the *same* cached plan are charged the weights-resident
+    repeat cost (the plan's parameter-load DMA cycles are saved, floored
+    by the busiest resource's work — params stay in shared L2 between
+    identical back-to-back executions).
+
+The engine's clock is the analytic schedule model's: every round advances
+``clock_s`` by the round's makespan at the SoC clock, so deadlines,
+per-class latency percentiles and SLO attainment are deterministic,
+machine-independent quantities.
 """
 
 from __future__ import annotations
@@ -29,6 +58,10 @@ import numpy as np
 
 from repro.models.api import get_model
 from repro.models.config import ModelConfig
+from repro.serve.admission import (AdmissionController, Priority,
+                                   RoundComposer, RoundPlanProbe,
+                                   TenantView)
+from repro.serve.compiler_thread import BackgroundCompiler
 
 
 def make_serve_steps(cfg: ModelConfig, max_seq: int
@@ -131,25 +164,61 @@ class InferRequest:
     latency_ms: float = 0.0
     wait_rounds: int = 0          # serving rounds spent queued (FIFO depth)
     co_scheduled: bool = False
+    # --- SLO surface -------------------------------------------------------
+    priority: Priority = Priority.NORMAL
+    deadline_s: Optional[float] = None    # relative to submit_s; None = none
+    submit_s: float = 0.0                 # engine clock at submission
+    depth_at_submit: int = 0              # queue depth ahead at submission
+    finish_s: float = 0.0                 # engine clock at completion
+    e2e_latency_ms: float = 0.0           # submit -> completion, wall model
+    deadline_met: Optional[bool] = None   # None when no deadline was set
+    served_on_floor: bool = False         # compile-alone floor round (async)
+
+    @property
+    def deadline_abs_s(self) -> Optional[float]:
+        return (None if self.deadline_s is None
+                else self.submit_s + self.deadline_s)
 
 
 class MultiModelEngine:
     """Admits requests for N co-compiled models and serves them in rounds.
 
-    Each call to :meth:`step` dispatches at most one request per tenant.
-    Whenever two or more tenants have a request queued, the round runs the
-    co-schedule covering exactly that occupancy (``plan_for`` from the
-    session's occupancy-indexed plan store) — the active models advance
-    concurrently and the round costs that co-schedule's makespan; a lone
-    active tenant runs its cached singleton occupancy plan (falling back
-    to the single-model reference schedule on session-less artifacts).
-    Per-request latency is taken from the analytic schedule model
-    (cycles -> ms at the SoC clock)."""
+    Each round runs the co-schedule covering exactly the round's occupancy
+    (``plan_for`` from the session's occupancy-indexed plan store) — the
+    active models advance concurrently and the round costs that
+    co-schedule's makespan; a lone active tenant runs its cached singleton
+    occupancy plan (falling back to the single-model reference schedule on
+    session-less artifacts).  Per-request latency is taken from the
+    analytic schedule model (cycles -> ms at the SoC clock).
 
-    def __init__(self, compiled, params_list=None, seed: int = 0):
+    Optional layers (all off by default — the default engine is bitwise
+    the FIFO engine):
+
+      * ``admission`` — per-class queue bounds; rejected requests are
+        recorded in ``rejected`` and ``submit`` returns ``None``.
+      * ``composer`` — SLO-aware round composition; engages only once a
+        request with a priority class or deadline has been submitted.
+      * ``async_compile`` — ``True`` (spawn a worker thread) or a
+        :class:`BackgroundCompiler` (e.g. ``start=False`` for
+        deterministic pumping): occupancy-plan misses serve the
+        compile-alone concat floor and compile in the background.
+      * ``max_batch`` — per-tenant batch depth within one round.
+      * ``execute=False`` skips the numeric JAX execution (analytic
+        timing only) for long serving-trace simulations.
+    """
+
+    def __init__(self, compiled, params_list=None, seed: int = 0, *,
+                 admission: Optional[AdmissionController] = None,
+                 composer: Optional[RoundComposer] = None,
+                 async_compile=False,
+                 max_batch: int = 1,
+                 execute: bool = True):
         from repro.core.runtime import init_params
+        if max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1: {max_batch}")
         self.compiled = compiled
         self.soc = compiled.soc
+        self.execute = execute
         self.params = (list(params_list) if params_list is not None else
                        [init_params(g, seed + i)
                         for i, g in enumerate(compiled.graphs)])
@@ -157,104 +226,326 @@ class MultiModelEngine:
         self._by_name = {g.name: i for i, g in enumerate(compiled.graphs)}
         self.queues: List[List[InferRequest]] = [[] for _ in
                                                  range(self.n_tenants)]
+        # dispatch step (= compose decision) at which each queue's current
+        # head became the head — the composer's starvation clock.  Tenure
+        # is measured in STEPS, not rounds: with max_batch > 1 one step
+        # runs several wave-rounds, and a rounds-based clock would let a
+        # deferred head overshoot the forced-inclusion bound by up to
+        # max_batch - 1 rounds between compose decisions.
+        self._steps = 0
+        self._head_since: List[int] = [0] * self.n_tenants
         self.results: Dict[int, Dict[str, Any]] = {}
         self.done: Dict[int, InferRequest] = {}
+        self.rejected: List[InferRequest] = []
         self._next_rid = 0
         self._round = 0
         self.co_rounds = 0
         self.subset_co_rounds = 0     # co-rounds at partial occupancy
+        self.solo_rounds = 0          # singleton occupancy-plan rounds
+        self.fallback_rounds = 0      # session-less back-to-back rounds
+        self.floor_rounds = 0         # async-miss compile-alone floor rounds
+        self.batched_repeat_rounds = 0
         self.solo_dispatches = 0
         self.busy_cycles = 0.0
+        self.clock_s = 0.0            # analytic serving clock, seconds
+        # --- SLO / async layers -------------------------------------------
+        self.admission = admission
+        self.composer = composer
+        self.max_batch = max_batch
+        self._slo_seen = False        # any request ever carried an SLO
+        self.class_submitted: Dict[Priority, int] = {p: 0 for p in Priority}
+        session = getattr(compiled, "session", None)
+        self.session = session
+        if async_compile and session is None:
+            raise ValueError("async_compile needs a session-backed "
+                             "compiled artifact")
+        if isinstance(async_compile, BackgroundCompiler):
+            self.compiler: Optional[BackgroundCompiler] = async_compile
+        elif async_compile:
+            self.compiler = BackgroundCompiler(session)
+        else:
+            self.compiler = None
 
     def resolve(self, model) -> int:
         if isinstance(model, str):
             return self._by_name[model]
         return int(model)
 
-    def submit(self, model, inputs=None, seed: int = 0) -> int:
+    # -- clock & admission --------------------------------------------------
+
+    def _cycles_to_s(self, cycles: float) -> float:
+        return self.soc.cycles_to_ms(cycles) / 1e3
+
+    def advance_clock(self, t_s: float) -> None:
+        """Open-loop arrivals: move the serving clock forward to ``t_s``
+        (never backwards) — the idle gap before the next arrival."""
+        self.clock_s = max(self.clock_s, t_s)
+
+    def _class_depths(self) -> Dict[Priority, int]:
+        depths: Dict[Priority, int] = {p: 0 for p in Priority}
+        for q in self.queues:
+            for r in q:
+                depths[r.priority] += 1
+        return depths
+
+    def submit(self, model, inputs=None, seed: int = 0,
+               priority: Priority = Priority.NORMAL,
+               deadline_s: Optional[float] = None,
+               arrival_s: Optional[float] = None) -> Optional[int]:
         """Queue one inference for ``model`` (graph name or tenant index).
-        ``inputs`` defaults to random inputs for smoke runs."""
+
+        ``inputs`` defaults to random inputs for smoke runs (skipped when
+        the engine runs with ``execute=False``).  ``deadline_s`` is
+        relative to the submission clock; ``arrival_s`` stamps an
+        open-loop arrival time (also advancing the idle clock).  Returns
+        the request id, or ``None`` when admission rejected the request
+        (recorded in ``rejected``)."""
         tenant = self.resolve(model)
-        if inputs is None:
-            from repro.core.runtime import init_inputs
-            inputs = init_inputs(self.compiled.graphs[tenant],
-                                 seed + self._next_rid)
+        priority = Priority(priority)
+        if arrival_s is not None:
+            self.advance_clock(arrival_s)
+        submit_s = arrival_s if arrival_s is not None else self.clock_s
+        self.class_submitted[priority] += 1
         rid = self._next_rid
         self._next_rid += 1
-        self.queues[tenant].append(
-            InferRequest(rid, tenant, inputs, self._round))
+        if (self.admission is not None
+                and not self.admission.admit(priority,
+                                             self._class_depths())):
+            # rejected before any input generation; no arrays retained
+            self.rejected.append(
+                InferRequest(rid, tenant, None, self._round,
+                             priority=priority, deadline_s=deadline_s,
+                             submit_s=submit_s,
+                             depth_at_submit=len(self.queues[tenant])))
+            return None
+        if priority != Priority.NORMAL or deadline_s is not None:
+            # only ADMITTED SLO traffic ends the zero-cost FIFO
+            # short-circuit — a rejected request never enters a queue
+            self._slo_seen = True
+        if inputs is None and self.execute:
+            from repro.core.runtime import init_inputs
+            inputs = init_inputs(self.compiled.graphs[tenant], seed + rid)
+        req = InferRequest(rid, tenant, inputs, self._round,
+                           priority=priority, deadline_s=deadline_s,
+                           submit_s=submit_s,
+                           depth_at_submit=len(self.queues[tenant]))
+        if not self.queues[tenant]:
+            self._head_since[tenant] = self._steps
+        self.queues[tenant].append(req)
         return rid
 
     @property
     def pending(self) -> int:
         return sum(len(q) for q in self.queues)
 
-    def step(self) -> List[int]:
-        """Dispatch one serving round; returns the completed request ids.
+    # -- round composition --------------------------------------------------
 
-        The engine passes the round's occupancy (which tenants have queued
-        work) down to the compiled artifact: ``plan_for(active)`` answers
-        with a co-schedule covering exactly that occupancy (full house or
-        any subset — the session's plan store compiles subset co-schedules
-        lazily and caches them, with tiling re-decided per occupancy).  A
-        lone active tenant also dispatches through ``plan_for`` — its
-        singleton occupancy plan is never worse than the full-house
-        reference schedule, which matters when the full-house winner
-        re-tiled the tenant for contention it no longer faces (still
-        counted as a solo dispatch, not a co-round).  The back-to-back
-        compile-alone fallback only remains for session-less artifacts
-        whose ``plan_for`` still answers ``None`` at partial occupancy."""
+    def _floor_s(self, tenant: int) -> float:
+        """Compile-alone makespan of one tenant, seconds (the concat
+        floor's per-member contribution)."""
+        return self._cycles_to_s(
+            self.compiled.singles[tenant].plan.makespan)
+
+    def _probe(self) -> RoundPlanProbe:
+        try_plan = (self.session.try_plan_for
+                    if self.session is not None else None)
+        return RoundPlanProbe(
+            try_plan=try_plan, cycles_to_s=self._cycles_to_s,
+            floors_s={i: self._floor_s(i)
+                      for i in range(self.n_tenants)})
+
+    def _compose_round(self, active: List[int]) -> List[int]:
+        if self.composer is None:
+            return active
+        if not self._slo_seen:
+            # bitwise FIFO until the first SLO-carrying request arrives
+            # (short-circuited before any view construction: the
+            # composer-equipped engine costs nothing until SLOs exist)
+            self.composer.fifo_rounds += 1
+            return active
+        views = [TenantView(tenant=i, priority=self.queues[i][0].priority,
+                            deadline_abs_s=self.queues[i][0].deadline_abs_s,
+                            wait_rounds=self._round
+                            - self.queues[i][0].submit_round,
+                            depth=len(self.queues[i]),
+                            floor_s=self._floor_s(i),
+                            head_tenure_rounds=self._steps
+                            - self._head_since[i],
+                            queue=tuple((r.priority, r.deadline_abs_s,
+                                         self._round - r.submit_round)
+                                        for r in self.queues[i]))
+                 for i in active]
+        cached = (self.session.store.occupancies()
+                  if self.session is not None else ())
+        ids = self.composer.compose(views, self.clock_s, self._probe(),
+                                    cached_occupancies=cached)
+        return ids if ids else active
+
+    # -- dispatch -----------------------------------------------------------
+
+    def _resolve_plan(self, ids: List[int]):
+        """The round's occupancy plan, or ``None`` for a floor/fallback
+        round.  With a background compiler attached the lookup never
+        compiles: a miss enqueues the compile and this round serves the
+        compile-alone concat floor."""
+        if self.compiler is not None:
+            plan = self.session.try_plan_for(ids, touch=True)
+            if plan is None:
+                self.compiler.submit(ids)
+            return plan, plan is None          # floor round on miss
+        return self.compiled.plan_for(ids), False
+
+    def _param_dma_in_cycles(self, plan) -> float:
+        """DMA cycles this plan spends loading parameter tensors — the
+        traffic a back-to-back re-execution of the same plan skips
+        (weights already resident in shared L2)."""
+        tenants = getattr(plan, "tenants", None)
+        if tenants is None:
+            return 0.0
+        total = 0.0
+        for d in plan.dmas:
+            if d.direction != "in":
+                continue
+            name = d.tensor
+            if "/" not in name or not name.startswith("t"):
+                continue
+            idx, _, base = name.partition("/")
+            try:
+                ti = tenants[int(idx[1:])].graph.tensors.get(base)
+            except (ValueError, IndexError):
+                continue
+            if ti is not None and ti.kind == "param":
+                total += d.end - d.start
+        return total
+
+    def _repeat_cycles(self, plan) -> float:
+        """Cost of re-executing ``plan`` immediately after itself: the
+        makespan minus the saved parameter-load DMA cycles, floored by
+        the busiest resource's work (removing DMAs cannot beat the
+        critical compute).  Computed per call — the DMA scan is tens of
+        records, and caching by plan identity would go stale across the
+        store's LRU evictions."""
+        saved = self._param_dma_in_cycles(plan)
+        busy = dict(plan.busy)
+        if "dma" in busy:
+            busy["dma"] = max(0.0, busy["dma"] - saved)
+        lower = max(busy.values(), default=0.0)
+        return max(plan.makespan - saved, lower)
+
+    def _pop_head(self, tenant: int) -> InferRequest:
+        r = self.queues[tenant].pop(0)
+        self._head_since[tenant] = self._steps    # next head's tenure starts
+        return r
+
+    def _finish(self, r: InferRequest, finish_s: float, latency_ms: float,
+                co: bool, out, completed: List[int],
+                floor: bool = False) -> None:
+        r.latency_ms = latency_ms
+        r.wait_rounds = self._round - 1 - r.submit_round
+        r.co_scheduled = co
+        r.finish_s = finish_s
+        r.e2e_latency_ms = (finish_s - r.submit_s) * 1e3
+        r.served_on_floor = floor
+        if r.deadline_s is not None:
+            r.deadline_met = finish_s <= r.submit_s + r.deadline_s
+        self.results[r.rid] = out
+        self.done[r.rid] = r
+        completed.append(r.rid)
+
+    def _dispatch_wave(self, ids: List[int], completed: List[int],
+                       prev_plan):
+        """One serving round over exactly the tenants in ``ids``; returns
+        the plan executed (for the batched repeat discount)."""
         from repro.core.runtime import execute_multi_plan, execute_plan
-        active = [q[0] for q in self.queues if q]   # tenant-sorted by scan
-        if not active:
-            return []
         self._round += 1
-        completed: List[int] = []
-        co_plan = self.compiled.plan_for([r.tenant for r in active])
-        if co_plan is not None:
-            # one occupancy-plan round covering exactly the active tenants
-            # (a lone tenant dispatches its cached singleton plan — a solo
-            # dispatch, not a co-round); positions in the subset plan
-            # follow sorted tenant ids, which is the order ``active`` was
-            # gathered in
-            reqs = [self.queues[r.tenant].pop(0) for r in active]
-            outs = execute_multi_plan(co_plan, [r.inputs for r in reqs],
-                                      [self.params[r.tenant] for r in reqs])
+        round_start = self.clock_s
+        plan, floor = self._resolve_plan(ids)
+        if plan is not None:
+            # positions in the occupancy plan follow sorted tenant ids,
+            # which is the order ``ids`` arrives in
+            reqs = [self._pop_head(i) for i in ids]
+            outs = (execute_multi_plan(plan, [r.inputs for r in reqs],
+                                       [self.params[r.tenant]
+                                        for r in reqs])
+                    if self.execute else [None] * len(reqs))
             if len(reqs) == 1:
                 self.solo_dispatches += 1
+                self.solo_rounds += 1
             else:
                 self.co_rounds += 1
                 if len(reqs) < self.n_tenants:
                     self.subset_co_rounds += 1
-            self.busy_cycles += co_plan.makespan
+            round_cycles = plan.makespan
+            if plan is prev_plan:
+                round_cycles = self._repeat_cycles(plan)
+                self.batched_repeat_rounds += 1
+            self.busy_cycles += round_cycles
             for pos, r in enumerate(reqs):
-                r.latency_ms = self.soc.cycles_to_ms(
-                    co_plan.tenant_makespans[pos])
-                r.wait_rounds = self._round - 1 - r.submit_round
-                r.co_scheduled = len(reqs) > 1
-                self.results[r.rid] = outs[pos]
-                self.done[r.rid] = r
-                completed.append(r.rid)
+                # clamped to the (possibly repeat-discounted) round cost,
+                # so recorded service latency never exceeds the wave's
+                # wall duration that finish_s / clock_s are built on
+                comp = min(plan.tenant_makespans[pos], round_cycles)
+                self._finish(r, round_start + self._cycles_to_s(comp),
+                             self.soc.cycles_to_ms(comp),
+                             len(reqs) > 1, outs[pos], completed)
+            self.clock_s = round_start + self._cycles_to_s(round_cycles)
+            return plan
+        # floor (async miss) or fallback (session-less partial occupancy):
+        # single-model schedules back-to-back; each request's latency
+        # includes the in-round wait behind the tenants dispatched before
+        # it (consistent with the co-scheduled path, which charges
+        # tenant_makespans[pos]).  The async floor runs the compile-alone
+        # schedules — the hard floor the pending subset plan is
+        # guaranteed to beat or tie — while the legacy session-less
+        # fallback keeps the reference (tenant_plan) schedules.
+        if floor:
+            self.floor_rounds += 1
         else:
-            # a lone tenant (or a session-less artifact at partial
-            # occupancy): single-model schedules, back-to-back; each
-            # request's latency includes the in-round wait behind the
-            # tenants dispatched before it (consistent with the
-            # co-scheduled path, which charges tenant_makespans[pos])
-            round_offset = 0.0
-            for r in active:
-                self.queues[r.tenant].pop(0)
-                plan = self.compiled.tenant_plan(r.tenant)
-                outs = execute_plan(plan, r.inputs, self.params[r.tenant])
-                self.solo_dispatches += 1
-                self.busy_cycles += plan.makespan
-                r.latency_ms = self.soc.cycles_to_ms(
-                    round_offset + plan.makespan)
-                round_offset += plan.makespan
-                r.wait_rounds = self._round - 1 - r.submit_round
-                self.results[r.rid] = outs
-                self.done[r.rid] = r
-                completed.append(r.rid)
+            self.fallback_rounds += 1
+        round_offset = 0.0
+        for i in ids:
+            r = self._pop_head(i)
+            splan = (self.compiled.singles[i].plan if floor
+                     else self.compiled.tenant_plan(i))
+            out = (execute_plan(splan, r.inputs, self.params[i])
+                   if self.execute else None)
+            self.solo_dispatches += 1
+            self.busy_cycles += splan.makespan
+            round_offset += splan.makespan
+            self._finish(r, round_start + self._cycles_to_s(round_offset),
+                         self.soc.cycles_to_ms(round_offset),
+                         False, out, completed, floor=floor)
+        self.clock_s = round_start + self._cycles_to_s(round_offset)
+        return None
+
+    def step(self) -> List[int]:
+        """Dispatch one serving round (``max_batch`` waves at most);
+        returns the completed request ids.
+
+        The round's occupancy comes from the composer when one is
+        attached (FIFO — every tenant with queued work — otherwise, and
+        bitwise FIFO until any request carries an SLO).  The occupancy
+        plan comes from ``plan_for(active)`` (the session's plan store),
+        or from the non-blocking ``try_plan_for`` + background compile +
+        compile-alone floor path when a :class:`BackgroundCompiler` is
+        attached.  With ``max_batch > 1`` the chosen tenants drain up to
+        that many queued requests in back-to-back waves; waves re-running
+        the same plan pay the weights-resident repeat cost."""
+        active = [i for i, q in enumerate(self.queues) if q]
+        if not active:
+            return []
+        ids = sorted(self._compose_round(active))
+        completed: List[int] = []
+        budget = {i: min(len(self.queues[i]), self.max_batch) for i in ids}
+        prev_plan = None
+        while True:
+            wave = [i for i in ids if budget[i] > 0 and self.queues[i]]
+            if not wave:
+                break
+            prev_plan = self._dispatch_wave(wave, completed, prev_plan)
+            for i in wave:
+                budget[i] -= 1
+        self._steps += 1
         return completed
 
     def run(self) -> Dict[int, Dict[str, Any]]:
@@ -262,6 +553,55 @@ class MultiModelEngine:
         while self.pending:
             self.step()
         return self.results
+
+    # -- reporting ----------------------------------------------------------
+
+    @property
+    def rounds(self) -> int:
+        return self._round
+
+    def _percentile(self, xs: List[float], q: float) -> float:
+        return float(np.percentile(np.asarray(xs), q)) if xs else 0.0
+
+    def _per_class(self) -> Dict[str, Dict[str, Any]]:
+        out: Dict[str, Dict[str, Any]] = {}
+        rej: Dict[Priority, int] = {p: 0 for p in Priority}
+        for r in self.rejected:
+            rej[r.priority] += 1
+        for p in Priority:
+            reqs = [r for r in self.done.values() if r.priority == p]
+            with_dl = [r for r in reqs if r.deadline_met is not None]
+            met = sum(1 for r in with_dl if r.deadline_met)
+            e2e = [r.e2e_latency_ms for r in reqs]
+            out[p.name] = {
+                "submitted": self.class_submitted[p],
+                "rejected": rej[p],
+                "served": len(reqs),
+                "slo_total": len(with_dl),
+                "slo_met": met,
+                "slo_attainment": (met / len(with_dl)
+                                   if with_dl else None),
+                "p50_e2e_ms": self._percentile(e2e, 50.0),
+                "p99_e2e_ms": self._percentile(e2e, 99.0),
+                "max_wait_rounds": max((r.wait_rounds for r in reqs),
+                                       default=0),
+            }
+        return out
+
+    def starvation_events(self) -> int:
+        """Served requests that overstayed the composer's hard bound:
+        ``wait_rounds > starvation_rounds * (depth_at_submit + 1) *
+        max_batch`` — every request ahead at submission pops within one
+        head tenure (the composer force-includes any head older than
+        ``starvation_rounds`` tenure *steps*), each step spans at most
+        ``max_batch`` wave-rounds, and then the request's own tenure
+        starts.  Always 0 without a composer (FIFO serves every active
+        tenant each round)."""
+        if self.composer is None:
+            return 0
+        bound = (self.composer.config.starvation_rounds * self.max_batch)
+        return sum(1 for r in self.done.values()
+                   if r.wait_rounds > bound * (r.depth_at_submit + 1))
 
     def report(self) -> Dict[str, Any]:
         """Aggregate serving stats from the analytic schedule model."""
@@ -282,10 +622,18 @@ class MultiModelEngine:
                  if hasattr(self.compiled, "store_stats") else None)
         joint = (self.compiled.joint_stats()
                  if hasattr(self.compiled, "joint_stats") else None)
+        with_dl = [r for r in self.done.values()
+                   if r.deadline_met is not None]
         return {
             "served": served,
+            "rejected": len(self.rejected),
+            "rounds": self._round,
             "co_rounds": self.co_rounds,
             "subset_co_rounds": self.subset_co_rounds,
+            "solo_rounds": self.solo_rounds,
+            "fallback_rounds": self.fallback_rounds,
+            "floor_rounds": self.floor_rounds,
+            "batched_repeat_rounds": self.batched_repeat_rounds,
             "solo_dispatches": self.solo_dispatches,
             "plan_store": stats,
             "joint_cp": joint,
@@ -294,4 +642,15 @@ class MultiModelEngine:
             "retiled": self.compiled.retiled,
             "l2_evictions_per_co_round": self.compiled.plan.memory.evictions,
             "per_tenant": per_tenant,
+            "per_class": self._per_class(),
+            "slo_attainment": (sum(1 for r in with_dl if r.deadline_met)
+                               / len(with_dl) if with_dl else None),
+            "starvation_events": self.starvation_events(),
+            "admission": (self.admission.stats()
+                          if self.admission is not None else None),
+            "composer": (self.composer.stats()
+                         if self.composer is not None else None),
+            "async_compiler": (self.compiler.stats()
+                               if self.compiler is not None else None),
+            "clock_s": self.clock_s,
         }

@@ -9,7 +9,12 @@ compile-alone back-to-back fallback a hard floor, so that count must stay
 zero).  The SLO serving trace is gated too: any starvation event fails
 outright, as does an unseen-occupancy first round above 1.1x the
 compile-alone concat floor, or a HIGH-class attainment drop of more than
-the tolerance (absolute) against the baseline per mix.  Mixes present in
+the tolerance (absolute) against the baseline per mix.  The incremental
+re-solve trace gates compile *latency*: the churny-trace warm-vs-scratch
+p99 miss-compile speedup must stay >= 2x, the warm p99 latency may not
+regress more than 20% against the baseline, any negative-gain round
+fails, and a mix whose shipped plan is worse than its equal-L2-split
+alternative fails (the proportional split is arbitrated, never imposed).  Mixes present in
 only one of the two reports are listed but do not fail the gate
 (baselines refresh when the mix list changes).
 
@@ -70,6 +75,15 @@ def compare(report: dict, baseline: dict,
                 f"mix {key}: co-scheduled makespan {got:.2f} ms vs "
                 f"baseline {want:.2f} ms (+{(ratio - 1.0) * 100.0:.1f}% "
                 f"> {tolerance * 100.0:.0f}%)")
+        # the proportional L2 split is arbitrated against the equal one,
+        # so the shipped plan can never be worse than the equal re-split
+        split = new.get("l2_split")
+        if split and split.get("equal_makespan_ms") is not None:
+            if got > split["equal_makespan_ms"] + 1e-6:
+                failures.append(
+                    f"mix {key}: shipped plan {got:.2f} ms worse than the "
+                    f"equal-L2-split plan {split['equal_makespan_ms']:.2f} "
+                    f"ms (split arbitration must never lose)")
     for key in base_mixes:
         if key not in new_mixes:
             print(f"  [mix dropped from report] {key}")
@@ -81,6 +95,7 @@ def compare(report: dict, baseline: dict,
         failures.append(f"partial occupancy: {neg} negative-gain subset "
                         f"rounds (expected 0)")
 
+    failures += compare_incremental(report, baseline)
     failures += compare_slo(report, baseline, tolerance)
     got = new_part.get("subset_total_ms")
     want = base_part.get("subset_total_ms")
@@ -94,6 +109,58 @@ def compare(report: dict, baseline: dict,
             failures.append(
                 f"partial-occupancy trace: {got:.2f} ms vs baseline "
                 f"{want:.2f} ms (+{(ratio - 1.0) * 100.0:.1f}%)")
+    return failures
+
+
+LATENCY_TOLERANCE = 0.20
+P99_SPEEDUP_FLOOR = 2.0
+
+
+def compare_incremental(report: dict, baseline: dict,
+                        latency_tolerance: float = LATENCY_TOLERANCE
+                        ) -> list:
+    """Gates on the incremental-re-solve trace: any negative-gain round
+    fails outright (warm starts must never push a subset plan above the
+    compile-alone concat floor), a churny-trace warm-vs-scratch p99
+    miss-compile speedup below 2x fails (the warm start stopped paying
+    for itself), and the warm p99 compile latency itself may not regress
+    more than ``latency_tolerance`` (20%) against the committed baseline
+    — compile latency is wall time under a fixed solver budget, so a
+    budget-sized regression means a real extra solve crept onto the miss
+    path, while machine-speed noise stays inside the tolerance."""
+    failures = []
+    inc = report.get("incremental_resolve") or {}
+    base_inc = baseline.get("incremental_resolve") or {}
+    if not inc:
+        return failures
+    neg = inc.get("negative_gain_rounds")
+    if neg:
+        failures.append(f"incremental re-solve: {neg} negative-gain "
+                        f"rounds on the churny trace (expected 0)")
+    speedup = inc.get("p99_speedup")
+    if speedup is not None:
+        mark = "REGRESSION" if speedup < P99_SPEEDUP_FLOOR else "ok"
+        print(f"  {'incremental p99 miss-compile speedup':40s} "
+              f"{speedup:9.2f}x (gate {P99_SPEEDUP_FLOOR:.1f}x)  {mark}")
+        if speedup < P99_SPEEDUP_FLOOR:
+            failures.append(
+                f"incremental re-solve: churny-trace p99 miss-compile "
+                f"speedup {speedup:.2f}x < {P99_SPEEDUP_FLOOR:.1f}x "
+                f"(warm starts no longer cut the miss latency)")
+    got = (inc.get("incremental") or {}).get("p99_ms")
+    want = (base_inc.get("incremental") or {}).get("p99_ms")
+    if got is not None and want:
+        ratio = got / want
+        mark = "REGRESSION" if ratio > 1.0 + latency_tolerance else "ok"
+        print(f"  {'incremental p99 miss-compile latency':40s} baseline "
+              f"{want:9.0f} ms   now {got:9.0f} ms "
+              f"({(ratio - 1.0) * 100.0:+.1f}%)  {mark}")
+        if ratio > 1.0 + latency_tolerance:
+            failures.append(
+                f"incremental re-solve: warm p99 miss-compile latency "
+                f"{got:.0f} ms vs baseline {want:.0f} ms "
+                f"(+{(ratio - 1.0) * 100.0:.1f}% > "
+                f"{latency_tolerance * 100.0:.0f}%)")
     return failures
 
 

@@ -30,6 +30,16 @@ per occupancy (compile-alone warm starts, L2 re-split among the active
 tenants), so every round's subset co-schedule beats (or ties) the old
 compile-alone back-to-back fallback: no negative-gain rounds.
 
+An incremental-re-solve section replays a *churny* trace (adjacent
+occupancies differ by one tenant) through two fresh sessions — warm
+starts on vs off — and reports per-miss compile-latency p50/p99 both
+ways: warm misses re-seed the joint CP from the Hamming-nearest cached
+occupancy's tiling solutions and run under the small incremental budget,
+cutting the miss p99 >= 2x (gated by ``check_regression``) with zero
+negative-gain rounds, while the shared-L2 re-split is arbitrated
+proportional-vs-equal per plan so the working-set-weighted split never
+ships a worse co-schedule.
+
 Two serving-layer sections close the report.  An async-compile probe
 dispatches one round at an *unseen* occupancy with the background
 compiler attached: the round costs the compile-alone concat floor (gated
@@ -55,6 +65,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import math
 import os
 import sys
 
@@ -145,7 +156,19 @@ def rows_to_json(rows):
     out = []
     for mix, mc, co_ms, pr1_ms, seq_ms in rows:
         soc = mc.soc
+        split = (mc.session.fullhouse_split
+                 if mc.session is not None else None)
+        if split is not None:
+            split = {
+                "winner": split["winner"],
+                "budgets": split["budgets"],
+                "equal_makespan_ms":
+                    soc.cycles_to_ms(split["equal_makespan"]),
+                "proportional_makespan_ms":
+                    soc.cycles_to_ms(split["proportional_makespan"]),
+            }
         out.append({
+            "l2_split": split,
             "mix": list(mix),
             "sequential_ms": seq_ms,
             "pr1_coscheduled_ms": pr1_ms,
@@ -298,6 +321,103 @@ def run_partial_occupancy(verbose: bool = True, time_budget_s: float = 2.0,
             "subset_total_ms": subset_total,
             "fallback_total_ms": fallback_total,
             "plan_store": stats}
+
+
+# ---------------------------------------------------------------------------
+# Incremental re-solve: churny occupancy trace, warm vs from-scratch misses
+# ---------------------------------------------------------------------------
+
+
+# a churny trace: adjacent occupancies differ by (mostly) one tenant, so
+# every miss has a Hamming-distance-1 neighbor already cached to warm-start
+# from; repeats at the end exercise the cache (no re-compiles)
+CHURN_TRACE = [(0, 1, 2), (1, 2), (2,), (0, 2), (0, 1, 2), (0, 1), (1,),
+               (1, 2), (0, 1, 2), (0, 2)]
+
+
+def _pct(vals, q):
+    if not vals:
+        return None
+    vs = sorted(vals)
+    k = max(min(math.ceil(q * len(vs)) - 1, len(vs) - 1), 0)
+    return vs[k]
+
+
+def run_incremental_resolve(verbose: bool = True,
+                            time_budget_s: float = 1.0,
+                            trace=CHURN_TRACE):
+    """Per-miss compile latency under a churny partial-occupancy trace,
+    incremental warm starts ON vs OFF (same mix, same trace, two fresh
+    sessions).  With ``incremental=True`` each subset miss re-seeds the
+    joint CP from the Hamming-nearest cached occupancy's tiling solutions
+    and solves under the small ``incremental_time_budget_s``; from
+    scratch it pays the full ``joint_time_budget_s``.  Reported: per-miss
+    compile-latency p50/p99 both ways, the p99 speedup (gated >= 2x by
+    ``check_regression``), the proportional-vs-equal L2 split winners,
+    and the zero-negative-gain check (warm starts must never push a
+    subset plan above the compile-alone concat floor)."""
+    soc = carfield_soc()
+    pats = carfield_patterns()
+    sessions = {}
+    for label, inc in (("incremental", True), ("scratch", False)):
+        graphs = [edge.ALL_MODELS[m]() for m in PARTIAL_MIX]
+        sessions[label] = compile_multi(graphs, soc, pats,
+                                        time_budget_s=time_budget_s,
+                                        incremental=inc).session
+    out = {"mix": list(PARTIAL_MIX),
+           "trace": [list(occ) for occ in trace]}
+    negative_rounds = 0
+    for label, session in sessions.items():
+        subset_total = 0.0
+        for occ in trace:
+            ids = sorted(occ)
+            plan = session.plan_for(ids)
+            subset_total += session.request.soc.cycles_to_ms(plan.makespan)
+            floor = sum(session.singles[i].plan.makespan for i in ids)
+            if plan.makespan > floor + 1e-6:
+                negative_rounds += 1
+        lat = session.compile_latency_stats()
+        walls = [e["wall_s"] for e in session.miss_events]
+        out[label] = {
+            "misses": len(walls),
+            "p50_ms": _pct(walls, 0.50) * 1e3 if walls else None,
+            "p99_ms": _pct(walls, 0.99) * 1e3 if walls else None,
+            "subset_total_ms": subset_total,
+            "warm_misses": sum(1 for e in session.miss_events if e["warm"]),
+            "incremental_hits": lat["incremental_hits"],
+            "prop_split_wins": lat["prop_split_wins"],
+            "equal_split_wins": lat["equal_split_wins"],
+            "store": session.store.stats(),
+        }
+    out["negative_gain_rounds"] = negative_rounds
+    warm_p99 = out["incremental"]["p99_ms"]
+    cold_p99 = out["scratch"]["p99_ms"]
+    warm_p50 = out["incremental"]["p50_ms"]
+    cold_p50 = out["scratch"]["p50_ms"]
+    out["p99_speedup"] = (cold_p99 / warm_p99
+                          if warm_p99 and cold_p99 else None)
+    out["p50_speedup"] = (cold_p50 / warm_p50
+                          if warm_p50 and cold_p50 else None)
+    if verbose:
+        print(f"\nincremental re-solve ({' + '.join(PARTIAL_MIX)}, "
+              f"{len(trace)}-round churny trace, "
+              f"{out['incremental']['misses']} misses each way):")
+        print(f"  {'':14s} {'p50 (ms)':>10s} {'p99 (ms)':>10s} "
+              f"{'warm':>5s} {'subset total (ms)':>18s}")
+        for label in ("scratch", "incremental"):
+            r = out[label]
+            print(f"  {label:14s} {r['p50_ms']:10.0f} {r['p99_ms']:10.0f} "
+                  f"{r['warm_misses']:5d} {r['subset_total_ms']:18.2f}")
+        print(f"  p99 miss-compile speedup: {out['p99_speedup']:.2f}x "
+              f"(p50 {out['p50_speedup']:.2f}x); "
+              f"negative-gain rounds: {negative_rounds}")
+        inc = out["incremental"]
+        print(f"  L2 split arbitration: proportional won "
+              f"{inc['prop_split_wins']}, equal won "
+              f"{inc['equal_split_wins']}; "
+              f"sidecar seeds: {inc['store']['solution_seeds']}, "
+              f"re-misses: {inc['store']['re_misses']}")
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -483,6 +603,7 @@ def main(argv=None) -> None:
     partial_mc = next((m for mix, m, *_ in rows if tuple(mix) == PARTIAL_MIX),
                       None)
     partial = run_partial_occupancy(verbose=True, mc=partial_mc)
+    incremental = run_incremental_resolve(verbose=True)
     slo = run_slo_trace(rows, verbose=True)
     if args.json:
         report = {
@@ -499,6 +620,7 @@ def main(argv=None) -> None:
                 "retiled": mc.retiled,
             },
             "partial_occupancy": partial,
+            "incremental_resolve": incremental,
             "slo_serving": slo,
             "async_first_round": async_first,
         }

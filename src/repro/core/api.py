@@ -81,7 +81,10 @@ def compile_multi(graphs: Sequence[Graph], soc: SoC,
                   max_hint_rounds: int = 3,
                   joint_tiling: bool = True,
                   joint_time_budget_s: float = 6.0,
-                  lazy_joint_time_budget_s: float = 1.5
+                  lazy_joint_time_budget_s: float = 1.5,
+                  incremental: bool = True,
+                  incremental_time_budget_s: float = 1.5,
+                  l2_split: str = "proportional"
                   ) -> MultiCompiledModel:
     """Compile N independent models into one multi-tenant co-schedule.
 
@@ -109,7 +112,14 @@ def compile_multi(graphs: Sequence[Graph], soc: SoC,
     ``try_plan_for`` and push compiles to a background
     :class:`~repro.serve.compiler_thread.BackgroundCompiler`, whose
     ``submit_compile`` jobs run under the smaller
-    ``lazy_joint_time_budget_s`` joint budget."""
+    ``lazy_joint_time_budget_s`` joint budget.
+
+    ``incremental`` warm-starts each subset miss from the nearest cached
+    occupancy's tiling solutions (under ``incremental_time_budget_s``)
+    instead of solving from scratch; ``l2_split`` chooses the per-plan
+    shared-L2 re-split — "proportional" (working-set-weighted, arbitrated
+    against the equal split so it never ships a worse plan) or the legacy
+    "equal"."""
     assert len(graphs) >= 1
     request = CompileRequest(graphs=list(graphs), soc=soc, patterns=patterns,
                              mode=mode, requested_tiles=requested_tiles,
@@ -118,5 +128,8 @@ def compile_multi(graphs: Sequence[Graph], soc: SoC,
                              max_hint_rounds=max_hint_rounds,
                              joint_tiling=joint_tiling,
                              joint_time_budget_s=joint_time_budget_s,
-                             lazy_joint_time_budget_s=lazy_joint_time_budget_s)
+                             lazy_joint_time_budget_s=lazy_joint_time_budget_s,
+                             incremental=incremental,
+                             incremental_time_budget_s=incremental_time_budget_s,
+                             l2_split=l2_split)
     return DeploymentSession(request).compile()

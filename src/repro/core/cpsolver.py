@@ -157,10 +157,26 @@ class CpModel:
                 return False
         return True
 
+    def _clamp(self, x: Sequence[int]) -> List[int]:
+        return [min(max(int(v), self._lo[i]), self._hi[i])
+                for i, v in enumerate(x)]
+
     # -- search ---------------------------------------------------------------
     def solve(self, hint: Optional[Sequence[int]] = None,
               node_limit: int = 400_000,
-              time_budget_s: float = 20.0) -> Solution:
+              time_budget_s: float = 20.0,
+              seeds: Optional[Sequence[Sequence[int]]] = None) -> Solution:
+        """Branch & bound under node/time limits.
+
+        ``hint`` is the primary warm start: if feasible it becomes the
+        incumbent, and its values drive the dive branching order.
+        ``seeds`` re-seeds the search with additional candidate value
+        vectors (e.g. solutions of a *neighboring* problem instance mapped
+        onto this variable space): each feasible seed competes for the
+        incumbent, and when the best feasible start is a seed rather than
+        the hint, the dive follows the seed — so an incremental re-solve
+        starts from the best known neighbor solution instead of from
+        scratch."""
         t0 = time.perf_counter()
         lo, hi = list(self._lo), list(self._hi)
         try:
@@ -170,11 +186,19 @@ class CpModel:
 
         best_x: Optional[List[int]] = None
         best_obj = math.inf
-        if hint is not None and len(hint) == self.num_vars:
-            hx = [min(max(int(v), self._lo[i]), self._hi[i])
-                  for i, v in enumerate(hint)]
+        dive: Optional[List[int]] = \
+            list(hint) if hint is not None else None
+        starts = [hint] if hint is not None else []
+        starts.extend(seeds or [])
+        for start in starts:
+            if start is None or len(start) != self.num_vars:
+                continue
+            hx = self._clamp(start)
             if self._feasible(hx):
-                best_x, best_obj = hx, self._obj_value(hx)
+                obj = self._obj_value(hx)
+                if obj < best_obj:
+                    best_x, best_obj = hx, obj
+                    dive = list(start)
 
         nodes = 0
         exhausted = True
@@ -188,7 +212,7 @@ class CpModel:
             for i, c in con.coeffs.items():
                 impact[i] = max(impact[i], 1e-3 * abs(c))
 
-        hint_vals = list(hint) if hint is not None else None
+        hint_vals = dive
 
         stack: List[Tuple[List[int], List[int]]] = [(lo, hi)]
         while stack:
@@ -319,16 +343,21 @@ class JointCpModel:
 
     def solve(self, hint: Optional[Sequence[int]] = None,
               node_limit: int = 200_000,
-              time_budget_s: float = 10.0) -> Solution:
-        """One branch & bound over all tenants' variables.  A non-positive
-        ``time_budget_s`` means the joint solve's budget is already spent:
-        the caller's best-response fallback must engage, so we raise rather
-        than silently return the warm start as a 'joint' optimum."""
+              time_budget_s: float = 10.0,
+              seeds: Optional[Sequence[Sequence[int]]] = None) -> Solution:
+        """One branch & bound over all tenants' variables.  ``seeds``
+        passes extra warm value vectors through to :meth:`CpModel.solve`
+        (the incremental re-solve path seeds the search with a neighboring
+        occupancy's solution alongside the compile-alone hint).  A
+        non-positive ``time_budget_s`` means the joint solve's budget is
+        already spent: the caller's best-response fallback must engage, so
+        we raise rather than silently return the warm start as a 'joint'
+        optimum."""
         if time_budget_s <= 0.0:
             raise Infeasible("joint solve time budget exhausted")
         self._finalize()
         return self.model.solve(hint=hint, node_limit=node_limit,
-                                time_budget_s=time_budget_s)
+                                time_budget_s=time_budget_s, seeds=seeds)
 
 
 def brute_force(model: CpModel) -> Solution:

@@ -52,7 +52,9 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
+import math
 import threading
+import time
 from collections import OrderedDict
 from typing import (Callable, Dict, FrozenSet, Hashable, List, Optional,
                     Sequence, Set, Tuple)
@@ -62,12 +64,12 @@ from repro.core.ir import Graph
 from repro.core.patterns import Pattern
 from repro.core.rewrite import TiledGraph, rewrite
 from repro.core.schedule import (ExecutionPlan, MultiExecutionPlan,
-                                 concat_plans, contention_hints, schedule,
-                                 schedule_multi, validate_multi_schedule,
-                                 validate_schedule)
+                                 concat_plans, contention_hints,
+                                 default_budgets, schedule, schedule_multi,
+                                 validate_multi_schedule, validate_schedule)
 from repro.core.tiling import (Contention, JointTilingProblem,
                                TilingSolution, optimize_tiling,
-                               tile_granularities)
+                               solution_ws_bytes, tile_granularities)
 from repro.soc.device import SoC
 
 MODES = ("tvm", "match", "matcha_nt", "matcha")
@@ -76,6 +78,44 @@ MODES = ("tvm", "match", "matcha_nt", "matcha")
 # the only ones contention-aware re-tiling applies to (the sequential
 # tvm / match ablation baselines must not be re-tiled onto accelerators)
 ASYNC_MODES = ("matcha", "matcha_nt")
+
+# how the shared L2 is re-split among the active tenants of a plan:
+# "equal" is the blind 1/n split, "proportional" weights each tenant by
+# the linearized working set of its chosen tiling (DORY-style)
+L2_SPLITS = ("equal", "proportional")
+
+
+def proportional_budgets(l2_size: int, weights: Sequence[float],
+                         min_frac: float = 0.125) -> List[int]:
+    """Shared-L2 split proportional to per-tenant weights — the joint
+    solve's linearized working sets (:func:`repro.core.tiling.
+    solution_ws_bytes`), the DORY-style memory-splitting heuristic.
+
+    Budgets are *soft* (``SharedL2Allocator`` lets a tenant exceed its
+    slice when space is free), but ``static_params`` residency and the
+    eviction order key off them, so every tenant keeps at least
+    ``min_frac`` of its equal share — a near-zero-weight tenant must not
+    be starved of resident weights.  Degenerate weights (all zero, or a
+    floor that cannot fit) fall back to the equal split.  The returned
+    split sums exactly to ``l2_size``."""
+    n = len(weights)
+    if n == 0:
+        return []
+    if n == 1:
+        return [int(l2_size)]
+    equal = int(l2_size) // n
+    total = float(sum(max(w, 0.0) for w in weights))
+    if total <= 0.0:
+        return [equal] * n
+    floor = max(int(equal * min_frac), 1)
+    avail = int(l2_size) - n * floor
+    if avail < 0:
+        return [equal] * n
+    budgets = [floor + int(avail * max(w, 0.0) / total) for w in weights]
+    # integer-truncation remainder goes to the heaviest tenant
+    k = max(range(n), key=lambda i: (weights[i], -i))
+    budgets[k] += int(l2_size) - sum(budgets)
+    return budgets
 
 
 # ---------------------------------------------------------------------------
@@ -190,7 +230,23 @@ class CompileRequest:
     :meth:`DeploymentSession.submit_compile` — the background (serving-
     time) subset compiles a :class:`~repro.serve.compiler_thread.
     BackgroundCompiler` runs on ``plan_for`` misses, where a long solve
-    only delays how soon the engine can leave the compile-alone floor."""
+    only delays how soon the engine can leave the compile-alone floor.
+    An inverted pair (lazy budget above the foreground one) would
+    silently make background compiles *more* expensive than foreground
+    ones, so it is rejected — except when ``joint_time_budget_s <= 0``,
+    the ablation sentinel for "joint budget already spent", under which
+    every joint solve (foreground or lazy) is clamped to nothing and
+    falls back to best-response.
+
+    ``incremental`` (default on) warm-starts each ``plan_for`` miss at
+    occupancy ``S`` from the Hamming-nearest cached occupancy's
+    per-tenant tiling solutions (a non-evicting sidecar in the
+    :class:`PlanStore`) instead of from scratch, under the smaller
+    ``incremental_time_budget_s`` joint budget; ``l2_split`` picks how
+    the shared L2 is re-split among a plan's active tenants — "equal"
+    (the pre-incremental behaviour) or "proportional" to the chosen
+    tilings' linearized working sets (both splits are arbitrated, so
+    "proportional" never ships a worse plan than "equal" would have)."""
     graphs: Sequence[Graph]
     soc: SoC
     patterns: Sequence[Pattern]
@@ -204,6 +260,9 @@ class CompileRequest:
     joint_tiling: bool = True
     joint_time_budget_s: float = 6.0
     lazy_joint_time_budget_s: float = 1.5
+    incremental: bool = True
+    incremental_time_budget_s: float = 1.5
+    l2_split: str = "proportional"
     store_max_entries: int = 64
 
     def __post_init__(self) -> None:
@@ -224,6 +283,20 @@ class CompileRequest:
         if self.lazy_joint_time_budget_s <= 0.0:
             raise ValueError(f"lazy_joint_time_budget_s must be > 0: "
                              f"{self.lazy_joint_time_budget_s}")
+        if (self.joint_time_budget_s > 0.0
+                and self.lazy_joint_time_budget_s > self.joint_time_budget_s):
+            raise ValueError(
+                f"lazy_joint_time_budget_s "
+                f"({self.lazy_joint_time_budget_s}) exceeds "
+                f"joint_time_budget_s ({self.joint_time_budget_s}): "
+                f"background compiles would be more expensive than "
+                f"foreground ones")
+        if self.incremental_time_budget_s <= 0.0:
+            raise ValueError(f"incremental_time_budget_s must be > 0: "
+                             f"{self.incremental_time_budget_s}")
+        if self.l2_split not in L2_SPLITS:
+            raise ValueError(f"unknown l2_split {self.l2_split!r}; "
+                             f"expected one of {L2_SPLITS}")
 
 
 # ---------------------------------------------------------------------------
@@ -716,7 +789,17 @@ class PlanStore:
     recompiles on its next miss).  Protected occupancies — the full house,
     registered via :meth:`protect` — and the tenant reference schedules
     (the numerics contract) are never evicted.  ``evictions`` in
-    :meth:`stats` counts the drops.
+    :meth:`stats` counts the drops; ``re_misses`` counts the drops that
+    later *forced a re-compile* of the same occupancy (cache thrash —
+    counted once per eviction, at the first subsequent miss of the
+    evicted key).
+
+    Alongside the bounded plan map, a small non-evicting *solutions
+    sidecar* (:meth:`seed_solutions`) records each landed plan's
+    per-tenant :class:`~repro.core.tiling.TilingSolution`\\ s — a few
+    integers per tenant, not a schedule — so LRU eviction of a plan never
+    destroys the warm-start source for the session's incremental
+    re-solves (:meth:`nearest_solutions`).
 
     The store is thread-safe: every map access holds an internal RLock,
     and the builder callbacks of :meth:`co_plan` / :meth:`tenant_plan` run
@@ -734,12 +817,16 @@ class PlanStore:
             OrderedDict()
         self._tenant: Dict[Hashable, ExecutionPlan] = {}
         self._protected: Set[FrozenSet[int]] = set()
+        # non-evicting warm-start sidecar: occupancy -> {tenant -> solution}
+        self._solutions: Dict[FrozenSet[int], Dict[int, TilingSolution]] = {}
+        self._evicted: Set[FrozenSet[int]] = set()   # awaiting re-miss count
         self._lock = threading.RLock()
         self.max_entries = max_entries
         self.hits = 0
         self.misses = 0
         self.compiles = 0
         self.lru_evictions = 0
+        self.re_misses = 0
 
     def __len__(self) -> int:
         with self._lock:
@@ -786,7 +873,16 @@ class PlanStore:
                     self._co.move_to_end(key)
                 else:
                     self.misses += 1
+                    self._note_re_miss(key)
             return plan
+
+    def _note_re_miss(self, key: FrozenSet[int]) -> None:
+        """Count (once) a miss of an occupancy a prior eviction dropped —
+        the eviction demonstrably forced a re-compile.  Caller holds the
+        lock."""
+        if key in self._evicted:
+            self._evicted.discard(key)
+            self.re_misses += 1
 
     def _evict_lru(self, keep: Optional[FrozenSet[int]] = None) -> None:
         """Drop LRU occupancies down to the bound; never drops protected
@@ -800,6 +896,7 @@ class PlanStore:
                 return                       # everything left is exempt
             del self._co[victim]
             self.lru_evictions += 1
+            self._evicted.add(victim)        # re-miss = thrash (see stats)
 
     def seed(self, active: Sequence[int], plan: MultiExecutionPlan) -> bool:
         """Register an already-compiled co-schedule (no counter changes).
@@ -814,6 +911,7 @@ class PlanStore:
             if inserted:
                 self._co[key] = plan
             self._co.move_to_end(key)
+            self._evicted.discard(key)     # at most one re-miss per eviction
             self._evict_lru(keep=key)
             return inserted
 
@@ -833,12 +931,14 @@ class PlanStore:
                 self._co.move_to_end(key)
                 return self._co[key]
             self.misses += 1
+            self._note_re_miss(key)
         plan = build()                     # outside the lock: see class doc
         with self._lock:
             self.compiles += 1
             if key not in self._co:        # first landed plan wins
                 self._co[key] = plan
             self._co.move_to_end(key)
+            self._evicted.discard(key)
             self._evict_lru(keep=key)
             return self._co[key]
 
@@ -856,12 +956,59 @@ class PlanStore:
                 self._tenant[tenant] = plan
             return self._tenant[tenant]
 
+    # -- warm-start solutions sidecar ---------------------------------------
+
+    def seed_solutions(self, active: Sequence[int],
+                       solutions: Dict[int, TilingSolution]) -> None:
+        """Record the per-tenant tiling solutions a landed plan chose, in
+        the non-evicting sidecar (latest landed plan wins — the sidecar
+        mirrors whatever currently answers ``peek`` for this key, or last
+        did before an eviction)."""
+        with self._lock:
+            self._solutions[frozenset(active)] = dict(solutions)
+
+    def solutions(self, active: Sequence[int]
+                  ) -> Optional[Dict[int, TilingSolution]]:
+        """The recorded per-tenant solutions for exactly this occupancy,
+        or ``None`` — survives LRU eviction of the plan itself."""
+        with self._lock:
+            got = self._solutions.get(frozenset(active))
+            return dict(got) if got is not None else None
+
+    def nearest_solutions(self, active: Sequence[int]
+                          ) -> Optional[Tuple[FrozenSet[int],
+                                              Dict[int, TilingSolution]]]:
+        """``(occupancy, {tenant -> solution})`` of the Hamming-nearest
+        recorded occupancy comparable to ``active`` — a superset or subset
+        (an unrelated occupancy's solutions reflect contention from
+        tenants that are not here and tell us nothing about the missing
+        ones).  The occupancy itself counts at distance 0: an evicted
+        plan's own solutions are the best possible warm start for its
+        re-compile.  Supersets win distance ties (they tiled every member
+        under at least this much contention); ``None`` when nothing
+        comparable is recorded."""
+        key = frozenset(active)
+        best: Optional[tuple] = None
+        with self._lock:
+            for occ, sols in self._solutions.items():
+                if not (occ >= key or occ <= key):
+                    continue
+                rank = (len(occ ^ key), 0 if occ >= key else 1,
+                        tuple(sorted(occ)))
+                if best is None or rank < best[0]:
+                    best = (rank, occ, sols)
+            if best is None:
+                return None
+            return best[1], dict(best[2])
+
     def stats(self) -> Dict[str, int]:
         with self._lock:
             return {"hits": self.hits, "misses": self.misses,
                     "compiles": self.compiles, "co_plans": len(self._co),
                     "tenant_plans": len(self._tenant),
                     "evictions": self.lru_evictions,
+                    "re_misses": self.re_misses,
+                    "solution_seeds": len(self._solutions),
                     "max_entries": self.max_entries}
 
 
@@ -895,6 +1042,11 @@ class DeploymentSession:
         self.joint_fallbacks = 0       # joint solves that fell back to
         #                                best-response (budget exhausted)
         self.lazy_compiles = 0         # background submit_compile landings
+        self.incremental_hits = 0      # misses warm-started from a neighbor
+        self.prop_split_wins = 0       # proportional L2 split won arbitration
+        self.equal_split_wins = 0      # ... or the equal split held
+        self.fullhouse_split: Optional[Dict[str, object]] = None
+        self.miss_events: List[Dict[str, object]] = []   # per-miss telemetry
         self._lock = threading.RLock()
         self._inflight: Set[FrozenSet[int]] = set()   # submit_compile dedupe
         # the exact best-response incumbent (phase A of the fixpoint): what
@@ -1008,6 +1160,7 @@ class DeploymentSession:
         if (req.retile_for_contention and len(req.graphs) > 1
                 and req.mode in ASYNC_MODES and retilers):
             plan = self._contention_fixpoint(baseline, base_tgs, retilers)
+        plan = self._l2_split_refine(plan)
         errs = validate_multi_schedule(plan)
         if errs:
             raise RuntimeError(f"infeasible co-schedule: {errs[:5]}")
@@ -1016,6 +1169,7 @@ class DeploymentSession:
                                 baseline_plan=baseline, session=self)
         self.store.seed(range(len(req.graphs)), plan)
         self.store.protect(range(len(req.graphs)))
+        self._record_solutions(list(range(len(req.graphs))), plan)
         return mc
 
     def _contention_fixpoint(self, baseline: MultiExecutionPlan,
@@ -1111,32 +1265,77 @@ class DeploymentSession:
             plan = new_plan
         return plan
 
+    def _l2_split_refine(self, plan: MultiExecutionPlan
+                         ) -> MultiExecutionPlan:
+        """Post-fixpoint proportional re-split of the full house: the
+        winning tiling set is re-arbitrated under budgets proportional to
+        each tenant's linearized working set, and the better of the two
+        plans ships — so enabling the proportional split can never
+        regress the equal-split result.  Records the comparison in
+        ``fullhouse_split`` and the win counters."""
+        req = self.request
+        if (req.l2_split != "proportional" or req.budgets is not None
+                or len(req.graphs) < 2 or req.mode not in ASYNC_MODES):
+            return plan
+        sols = [getattr(tg, "solution", None) for tg in plan.tenants]
+        if any(s is None for s in sols):
+            return plan
+        ws = [solution_ws_bytes(g, s) for g, s in zip(req.graphs, sols)]
+        prop = proportional_budgets(req.soc.l2.size, ws)
+        if prop == default_budgets(req.soc, len(req.graphs)):
+            return plan
+        cand = schedule_multi(list(plan.tenants), req.soc, budgets=prop,
+                              objective=self.objective)
+        cand.origin = plan.origin
+        cand.retile_rounds = getattr(plan, "retile_rounds", 0)
+        better = self.objective.better(cand, plan)
+        with self._lock:
+            if better:
+                self.prop_split_wins += 1
+            else:
+                self.equal_split_wins += 1
+            self.fullhouse_split = {
+                "equal_makespan": plan.makespan,
+                "proportional_makespan": cand.makespan,
+                "budgets": list(prop),
+                "winner": "proportional" if better else "equal"}
+        return cand if better else plan
+
     def joint_tilings(self, ids: Sequence[int],
                       warm: Optional[Sequence[TiledGraph]] = None,
-                      time_budget_s: Optional[float] = None
+                      time_budget_s: Optional[float] = None,
+                      seeds: Optional[
+                          Sequence[Sequence[TilingSolution]]] = None
                       ) -> Optional[List[TiledGraph]]:
         """One joint cross-tenant stage-1 solve over the tenants in ``ids``
         (the full house or any occupancy subset), warm-started from the
         given tiled graphs' solutions, bounded by ``time_budget_s``
         (default ``request.joint_time_budget_s``; background lazy-miss
-        compiles pass the smaller ``lazy_joint_time_budget_s``).  Returns
-        the coordinated per-tenant tile graphs, or ``None`` when the
-        solver produced nothing within the budget — the caller's
-        best-response fallback then engages (counted in
+        compiles pass the smaller ``lazy_joint_time_budget_s``, and
+        incremental warm-started re-solves ``incremental_time_budget_s``).
+        Every effective budget is clamped to ``joint_time_budget_s`` — it
+        is the *ceiling* on joint solving, so the ``<= 0`` ablation
+        sentinel disables lazy and incremental solves too instead of
+        letting them outspend the foreground path.  ``seeds`` re-seeds
+        the solver with additional per-tenant solution lists (the
+        compile-alone tilings, when ``warm`` came from a cached
+        neighbor).  Returns the coordinated per-tenant tile graphs, or
+        ``None`` when the solver produced nothing within the budget — the
+        caller's best-response fallback then engages (counted in
         ``joint_fallbacks``)."""
         req = self.request
         graphs = [req.graphs[i] for i in ids]
+        budget = (time_budget_s if time_budget_s is not None
+                  else req.joint_time_budget_s)
+        budget = min(budget, req.joint_time_budget_s)
         try:
             problem = JointTilingProblem(
                 graphs, req.soc, req.patterns,
                 requested_tiles=req.requested_tiles, mode=req.mode)
             warm_sols = ([tg.solution for tg in warm]
                          if warm is not None else None)
-            sols = problem.solve(warm=warm_sols,
-                                 time_budget_s=(time_budget_s
-                                                if time_budget_s is not None
-                                                else
-                                                req.joint_time_budget_s))
+            sols = problem.solve(warm=warm_sols, time_budget_s=budget,
+                                 seeds=seeds)
         except cpsolver.Infeasible:
             # the designed fallback path: budget exhausted with nothing
             # feasible found.  Real programming errors propagate — they
@@ -1174,7 +1373,9 @@ class DeploymentSession:
         :class:`~repro.serve.compiler_thread.BackgroundCompiler`."""
         self.compile()
         ids = self._check_active(active)
-        return self.store.co_plan(ids, lambda: self._compile_subset(ids))
+        plan = self.store.co_plan(ids, lambda: self._compile_subset(ids))
+        self._record_solutions(ids, plan)
+        return plan
 
     def try_plan_for(self, active: Sequence[int], touch: bool = False
                      ) -> Optional[MultiExecutionPlan]:
@@ -1225,6 +1426,7 @@ class DeploymentSession:
             # a plan that actually entered the store counts as compiled
             landed = self.store.seed(ids, plan)
             if landed:
+                self._record_solutions(ids, plan)
                 with self._lock:
                     self.lazy_compiles += 1
         finally:
@@ -1251,8 +1453,23 @@ class DeploymentSession:
             when the subset's contention resembles the full house),
           * the members' compile-alone tilings (right at low occupancy,
             where a tenant runs nearly alone),
-          * a fresh joint cross-tenant solve over just the subset,
-            warm-started from the compile-alone tilings.
+          * with ``incremental`` on, the Hamming-nearest cached
+            occupancy's tilings (:meth:`PlanStore.nearest_solutions` —
+            a superset/subset that already co-tiled these members under
+            similar contention),
+          * a fresh joint cross-tenant solve over just the subset —
+            warm-started from the neighbor's solutions when one exists
+            (re-seeded with the compile-alone tilings so the solver never
+            starts worse than before), from the compile-alone tilings
+            otherwise.  A warm-started solve runs under the smaller
+            ``incremental_time_budget_s``: it starts at a near-optimal
+            incumbent, so the long from-scratch budget buys nothing.
+
+        With ``l2_split="proportional"`` (and no explicit request
+        budgets) the multi-tenant candidates are arbitrated twice — once
+        under budgets proportional to the tenants' linearized working
+        sets, once under the equal split — and the better plan ships, so
+        the proportional split can never lose to the old equal re-split.
 
         The sequential concatenation of the members' reference schedules
         is a candidate inside ``schedule_multi``, and the compile-alone
@@ -1261,8 +1478,11 @@ class DeploymentSession:
         ties) both, and the partial-occupancy benchmark can no longer
         report negative-gain rounds.  Numerics stay bitwise: whichever
         tiling set wins, each tenant's reference schedule for *that*
-        tiling is served by :meth:`reference_plan`."""
+        tiling is served by :meth:`reference_plan`.  Each miss's wall
+        time, warm-start source and split winner are appended to
+        ``miss_events`` (see :meth:`compile_latency_stats`)."""
         req = self.request
+        t0 = time.perf_counter()
         mc = self._multi
         full_tgs = [mc.plan.tenants[i] for i in ids]
         alone_tgs = [self.singles[i].tiled for i in ids]
@@ -1277,20 +1497,74 @@ class DeploymentSession:
             sig = _sets_sig(tgs)
             if sig not in sigs:
                 sigs.add(sig)
-                alt_sets.append(tgs)
+                alt_sets.append(list(tgs))
                 labels.append(label)
 
         offer(alone_tgs, "compile-alone")
+
+        # incremental warm start: the nearest cached occupancy's tilings
+        neighbor: Optional[FrozenSet[int]] = None
+        warm_tgs: Optional[List[TiledGraph]] = None
+        if req.incremental:
+            near = self.store.nearest_solutions(ids)
+            if near is not None:
+                neighbor, nsols = near
+                # members the neighbor lacks (it was a strict subset)
+                # fall back to their full-house co-tiled solutions
+                warm_sols = [nsols.get(i, mc.plan.tenants[i].solution)
+                             for i in ids]
+                warm_tgs = [self._rewrite_cached(i, s)
+                            for i, s in zip(ids, warm_sols)]
+                offer(warm_tgs, "warm-neighbor")
+                with self._lock:
+                    self.incremental_hits += 1
+
         if (len(ids) > 1 and req.joint_tiling and req.mode in ASYNC_MODES
                 and any(getattr(s, "joint", False)
                         for s in self.strategies)):
-            jtgs = self.joint_tilings(ids, warm=alone_tgs,
-                                      time_budget_s=joint_budget_s)
+            if joint_budget_s is not None:
+                budget = joint_budget_s
+            elif warm_tgs is not None:
+                budget = req.incremental_time_budget_s
+            else:
+                budget = req.joint_time_budget_s
+            seeds = ([[self.singles[i].solution for i in ids]]
+                     if warm_tgs is not None else None)
+            jtgs = self.joint_tilings(ids,
+                                      warm=(warm_tgs if warm_tgs is not None
+                                            else alone_tgs),
+                                      time_budget_s=budget, seeds=seeds)
             if jtgs is not None:
                 offer(jtgs, "joint-cp")
-        plan = schedule_multi(full_tgs, req.soc, budgets=budgets,
+
+        prop = self._subset_prop_budgets(ids, alt_sets, labels, budgets)
+        plan = schedule_multi(full_tgs, req.soc,
+                              budgets=(prop if prop is not None
+                                       else budgets),
                               singles=refs, alt_tgs=alt_sets,
                               alt_labels=labels, objective=self.objective)
+        split = None
+        prop_ms = equal_ms = None
+        if prop is not None:
+            # arbitrate the proportional split against the equal one: the
+            # same candidate search under the old equal split, with the
+            # better plan shipping — "proportional" can then never ship a
+            # plan worse than the equal re-split would have
+            prop_ms = plan.makespan
+            plan_eq = schedule_multi(full_tgs, req.soc, budgets=None,
+                                     singles=refs, alt_tgs=alt_sets,
+                                     alt_labels=labels,
+                                     objective=self.objective)
+            equal_ms = plan_eq.makespan
+            if self.objective.better(plan_eq, plan):
+                plan, split = plan_eq, "equal"
+            else:
+                split = "proportional"
+            with self._lock:
+                if split == "proportional":
+                    self.prop_split_wins += 1
+                else:
+                    self.equal_split_wins += 1
         seq_alone = concat_plans([self.singles[i].plan for i in ids],
                                  req.soc, budgets)
         seq_alone.origin = "sequential-alone"
@@ -1300,7 +1574,96 @@ class DeploymentSession:
         if errs:
             raise RuntimeError(f"infeasible subset co-schedule for tenants "
                                f"{ids}: {errs[:5]}")
+        event = {"occupancy": tuple(ids),
+                 "wall_s": time.perf_counter() - t0,
+                 "warm": neighbor is not None,
+                 "neighbor": (tuple(sorted(neighbor))
+                              if neighbor is not None else None),
+                 "origin": plan.origin, "makespan": plan.makespan,
+                 "split": split, "proportional_makespan": prop_ms,
+                 "equal_makespan": equal_ms}
+        with self._lock:
+            self.miss_events.append(event)
         return plan
+
+    def _subset_prop_budgets(self, ids: List[int],
+                             alt_sets: List[List[TiledGraph]],
+                             labels: List[str],
+                             budgets: Optional[List[int]]
+                             ) -> Optional[List[int]]:
+        """The proportional L2 split for this subset compile, or ``None``
+        when the equal split (or the request's explicit slice) applies.
+        Weights come from the best available per-tenant solutions: the
+        joint solve's if it ran, else the warm neighbor's, else the
+        compile-alone ones."""
+        req = self.request
+        if (budgets is not None or req.l2_split != "proportional"
+                or len(ids) < 2):
+            return None
+        for label in ("joint-cp", "warm-neighbor", "compile-alone"):
+            if label in labels:
+                tgs = alt_sets[labels.index(label)]
+                break
+        else:
+            return None
+        ws = [solution_ws_bytes(req.graphs[i], tg.solution)
+              for i, tg in zip(ids, tgs)]
+        prop = proportional_budgets(req.soc.l2.size, ws)
+        return prop if prop != default_budgets(req.soc, len(ids)) else None
+
+    def _rewrite_cached(self, i: int, sol: TilingSolution) -> TiledGraph:
+        """Tiled graph for tenant ``i`` over ``sol``, reusing the already-
+        rewritten graph when the solution IS the compile-alone or
+        full-house one — cached reference plans and the engine's identity
+        contracts key off those exact objects."""
+        if sol is self.singles[i].solution:
+            return self.singles[i].tiled
+        mc = self._multi
+        if mc is not None and mc.plan.tenants[i].solution is sol:
+            return mc.plan.tenants[i]
+        return rewrite(self.request.graphs[i], self.request.soc, sol)
+
+    def _record_solutions(self, ids: Sequence[int],
+                          plan: MultiExecutionPlan) -> None:
+        """Sidecar the landed plan's per-tenant tiling solutions so later
+        misses can warm-start from them even after the plan itself is
+        LRU-evicted (skipped if any tenant lacks a solution)."""
+        sols: Dict[int, TilingSolution] = {}
+        for pos, i in enumerate(ids):
+            sol = getattr(plan.tenants[pos], "solution", None)
+            if sol is None:
+                return
+            sols[i] = sol
+        self.store.seed_solutions(ids, sols)
+
+    def compile_latency_stats(self) -> Dict[str, object]:
+        """p50/p99 wall time of the subset-miss compiles this session ran
+        (``miss_events``), overall and split by warm (neighbor-seeded)
+        vs cold (from-scratch) — the serving engine surfaces this in its
+        ``report()``."""
+        with self._lock:
+            events = list(self.miss_events)
+
+        def pct(vals: List[float], q: float) -> Optional[float]:
+            if not vals:
+                return None
+            vs = sorted(vals)
+            k = max(min(int(math.ceil(q * len(vs))) - 1, len(vs) - 1), 0)
+            return vs[k]
+
+        def block(evts: List[Dict[str, object]]) -> Dict[str, object]:
+            walls = [float(e["wall_s"]) * 1e3 for e in evts]
+            return {"count": len(evts), "p50_ms": pct(walls, 0.50),
+                    "p99_ms": pct(walls, 0.99)}
+
+        out = block(events)
+        out["warm"] = block([e for e in events if e["warm"]])
+        out["cold"] = block([e for e in events if not e["warm"]])
+        with self._lock:
+            out["incremental_hits"] = self.incremental_hits
+            out["prop_split_wins"] = self.prop_split_wins
+            out["equal_split_wins"] = self.equal_split_wins
+        return out
 
     def tenant_plan(self, i: int) -> ExecutionPlan:
         """Single-model reference schedule for tenant ``i`` over the tiled

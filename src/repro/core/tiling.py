@@ -219,6 +219,23 @@ def _match_ws_linear(g: Graph, m: Match, T: int) -> Tuple[float, float]:
     return per_tile, fixed
 
 
+def solution_ws_bytes(g: Graph, sol: "TilingSolution") -> float:
+    """Linearized shared-L2 working set of a whole tiling solution: the
+    joint CP's capacity terms (:func:`_match_ws_linear`) evaluated at the
+    solution's assignments.  This is the per-tenant weight the deployment
+    session's *proportional* L2 re-split uses — a tenant whose chosen
+    tiling touches more L2-resident bytes gets a proportionally larger
+    slice of the shared scratchpad (DORY-style memory splitting), instead
+    of the blind equal split."""
+    total = 0.0
+    for a in sol.assignments:
+        T = max((sol.tiles_per_op.get(op, 1) for op in a.match.ops),
+                default=1)
+        per_tile, fixed = _match_ws_linear(g, a.match, T)
+        total += per_tile * a.tiles + fixed
+    return total
+
+
 def _spill_delta(g: Graph, m: Match, soc: SoC, c: Contention) -> float:
     """Fixed charge for instantiating a match whose working set overflows
     this tenant's shared-L2 slice.  Stage 2 keeps whole tensors L2-resident
@@ -734,14 +751,24 @@ class JointTilingProblem:
 
     def solve(self, warm: Optional[Sequence[TilingSolution]] = None,
               time_budget_s: float = 10.0,
-              node_limit: int = 200_000) -> List[TilingSolution]:
+              node_limit: int = 200_000,
+              seeds: Optional[Sequence[Sequence[TilingSolution]]] = None
+              ) -> List[TilingSolution]:
         """One joint solve; returns coordinated per-tenant solutions (the
         shared objective value is the joint co-resident makespan bound).
-        Raises :class:`repro.core.cpsolver.Infeasible` when no solution is
-        found within the budget (callers fall back to best-response)."""
+        ``seeds`` supplies *additional* per-tenant solution lists (e.g.
+        the compile-alone tilings when ``warm`` came from a neighboring
+        occupancy's cached solve): each is mapped onto the joint variable
+        space like ``warm`` and re-seeds the solver's incumbent, so an
+        incremental re-solve never starts worse than the best start it
+        was handed.  Raises :class:`repro.core.cpsolver.Infeasible` when
+        no solution is found within the budget (callers fall back to
+        best-response)."""
         hint = self.warm_start(warm)
+        seed_hints = [self.warm_start(s) for s in seeds or []]
         sol = self.joint.solve(hint=hint, node_limit=node_limit,
-                               time_budget_s=time_budget_s)
+                               time_budget_s=time_budget_s,
+                               seeds=seed_hints)
         out: List[TilingSolution] = []
         for i in range(len(self.graphs)):
             assignments = [Assignment(mv.match, sol.values[mv.t_var])

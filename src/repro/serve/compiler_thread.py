@@ -51,20 +51,38 @@ class BackgroundCompiler:
     deterministic mode tests use; with ``start=True`` (the default) a
     daemon worker drains it continuously.  ``drain()`` blocks until
     every submitted job has finished compiling, for shutdown barriers
-    and benchmarks that want the steady state."""
+    and benchmarks that want the steady state.
 
-    def __init__(self, session, start: bool = True) -> None:
+    A raised compile no longer poisons its occupancy permanently (a
+    transient joint-CP timeout would pin that subset to the concat floor
+    for the session's lifetime): the occupancy may be re-submitted up to
+    ``max_retries`` more times, each retry gated behind exponentially
+    more submit *rounds* of backoff (``backoff_rounds * 2**(attempt-1)``
+    — rounds, not wall time, so the deterministic fake-clock mode backs
+    off too).  Only after ``max_retries + 1`` raised compiles is the
+    occupancy poisoned; :meth:`clear_failed` lifts the poison (e.g.
+    after an operator fixes the underlying condition)."""
+
+    def __init__(self, session, start: bool = True,
+                 max_retries: int = 2, backoff_rounds: int = 1) -> None:
         self.session = session
         self._jobs: "queue.Queue[Optional[CompileJob]]" = queue.Queue()
         self._lock = threading.Lock()
         self._queued: set = set()          # occupancies queued or running
-        self._failed: set = set()          # poisoned: compile raised once
+        self._failed: set = set()          # poisoned: retries exhausted
+        self._attempts: dict = {}          # occupancy -> raised compiles
+        self._retry_after: dict = {}       # occupancy -> earliest retry tick
+        self._tick = 0                     # submit rounds seen (backoff clock)
         self._idle = threading.Condition(self._lock)
         self._inflight = 0
         self._thread: Optional[threading.Thread] = None
+        self.max_retries = max_retries
+        self.backoff_rounds = backoff_rounds
         self.submitted = 0
         self.compiled = 0
         self.duplicates = 0                # submits deduped away
+        self.retries = 0                   # re-submits after a raised compile
+        self.backoffs = 0                  # submits deferred by backoff
         self.errors: List[str] = []
         self.max_errors = 32               # errors list retention cap
         if start:
@@ -101,23 +119,40 @@ class BackgroundCompiler:
 
     def submit(self, active: Sequence[int]) -> bool:
         """Enqueue a compile for ``active`` unless the plan is already
-        cached, the occupancy is already queued/in-flight, or a previous
-        compile of it raised (poisoned — the engine keeps serving that
-        occupancy on the compile-alone floor instead of burning the
-        worker on a doomed compile every round)."""
+        cached, the occupancy is already queued/in-flight, its backoff
+        window after a raised compile has not elapsed, or its retries are
+        exhausted (poisoned — the engine keeps serving that occupancy on
+        the compile-alone floor instead of burning the worker on a doomed
+        compile every round)."""
         key = frozenset(int(a) for a in active)
         with self._lock:
+            self._tick += 1
             if key in self._queued or key in self._failed:
                 self.duplicates += 1
+                return False
+            if self._tick < self._retry_after.get(key, 0):
+                self.backoffs += 1         # still backing off: try later
                 return False
             if self.session.try_plan_for(key) is not None:
                 self.duplicates += 1
                 return False
+            if self._attempts.get(key, 0) > 0:
+                self.retries += 1
             self._queued.add(key)
             self._inflight += 1
             self.submitted += 1
         self._jobs.put(CompileJob(key))
         return True
+
+    def clear_failed(self) -> int:
+        """Un-poison every failed occupancy (and reset its retry state) so
+        future submits compile again; returns how many were cleared."""
+        with self._lock:
+            n = len(self._failed)
+            self._failed.clear()
+            self._attempts.clear()
+            self._retry_after.clear()
+            return n
 
     @property
     def pending(self) -> int:
@@ -128,11 +163,22 @@ class BackgroundCompiler:
         try:
             if self.session.submit_compile(job.occupancy):
                 self.compiled += 1
+            with self._lock:               # success clears retry state
+                self._attempts.pop(job.occupancy, None)
+                self._retry_after.pop(job.occupancy, None)
         except Exception as exc:           # keep serving on compile bugs
             with self._lock:
-                self._failed.add(job.occupancy)
+                attempts = self._attempts.get(job.occupancy, 0) + 1
+                self._attempts[job.occupancy] = attempts
                 if len(self.errors) < self.max_errors:
                     self.errors.append(f"{sorted(job.occupancy)}: {exc!r}")
+                if attempts > self.max_retries:
+                    self._failed.add(job.occupancy)   # retries exhausted
+                    self._retry_after.pop(job.occupancy, None)
+                else:
+                    self._retry_after[job.occupancy] = (
+                        self._tick
+                        + self.backoff_rounds * (2 ** (attempts - 1)))
         finally:
             with self._lock:
                 self._queued.discard(job.occupancy)
@@ -176,5 +222,7 @@ class BackgroundCompiler:
             failed = len(self._failed)
         return {"submitted": self.submitted, "compiled": self.compiled,
                 "duplicates": self.duplicates, "pending": self.pending,
+                "retries": self.retries, "backoffs": self.backoffs,
+                "max_retries": self.max_retries,
                 "failed_occupancies": failed,
                 "errors": len(self.errors), "running": self.running}

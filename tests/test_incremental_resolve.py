@@ -1,0 +1,332 @@
+"""Incremental per-occupancy re-solve: warm starts, proportional L2
+splits, and the plan-miss failure paths.
+
+Covers the PR-6 contract:
+
+  * a ``plan_for`` miss warm-starts from the Hamming-nearest cached
+    occupancy's tiling solutions (``PlanStore.nearest_solutions`` — a
+    non-evicting sidecar, so LRU eviction of a plan never destroys the
+    warm-start source) and never produces a plan worse than the
+    compile-alone concat floor (property-tested over every occupancy);
+  * churny traces (one tenant arriving/leaving) reuse neighbor
+    solutions: every miss is warm, and a replay of the trace compiles
+    nothing;
+  * ``BackgroundCompiler`` no longer poisons an occupancy on the first
+    raised compile: ``max_retries`` with exponential backoff rounds,
+    then poisoning, then ``clear_failed()`` lifts it;
+  * ``CompileRequest`` rejects an inverted lazy/foreground joint budget
+    pair; ``PlanStore.stats()['re_misses']`` counts evictions that
+    forced a re-compile; ``proportional_budgets`` splits the L2 by
+    working set without starving a tenant.
+"""
+
+import pytest
+
+from repro.core.deploy import (CompileRequest, DeploymentSession, PlanStore,
+                               proportional_budgets)
+from repro.core.tiling import solution_ws_bytes
+from repro.serve.compiler_thread import BackgroundCompiler
+from repro.serve.engine import MultiModelEngine
+from repro.soc.testbed import dense_chain, two_acc_soc
+
+
+def make_session(**kw) -> DeploymentSession:
+    soc, pats = two_acc_soc(64, 8.0)
+    graphs = [dense_chain("a", [64, 64, 64]),
+              dense_chain("b", [48, 48, 48]),
+              dense_chain("c", [32, 32, 32])]
+    kw.setdefault("requested_tiles", 4)
+    kw.setdefault("time_budget_s", 0.5)
+    kw.setdefault("joint_time_budget_s", 0.5)
+    kw.setdefault("lazy_joint_time_budget_s", 0.5)
+    kw.setdefault("incremental_time_budget_s", 0.5)
+    return DeploymentSession(CompileRequest(
+        graphs=graphs, soc=soc, patterns=pats, **kw))
+
+
+@pytest.fixture(scope="module")
+def session():
+    s = make_session()
+    s.compile()
+    return s
+
+
+# ---------------------------------------------------------------------------
+# Property: warm-started neighbor solves never lose to the floor
+# ---------------------------------------------------------------------------
+
+
+def all_occupancies(n):
+    out = []
+    for mask in range(1, 2 ** n):
+        out.append([i for i in range(n) if mask & (1 << i)])
+    return out
+
+
+def test_warm_subset_never_worse_than_floor(session):
+    """Every occupancy's plan — warm-started or not — beats or ties the
+    compile-alone concat floor (zero negative-gain rounds), and every
+    subset miss found a warm neighbor (the full house is always
+    recorded, so a comparable superset always exists)."""
+    n = len(session.request.graphs)
+    for ids in all_occupancies(n):
+        plan = session.plan_for(ids)
+        floor = sum(session.singles[i].plan.makespan for i in ids)
+        assert plan.makespan <= floor + 1e-6, \
+            f"occupancy {ids}: {plan.makespan} above floor {floor}"
+    assert all(e["warm"] for e in session.miss_events)
+    assert session.incremental_hits == len(session.miss_events)
+    stats = session.compile_latency_stats()
+    assert stats["count"] == len(session.miss_events) > 0
+    assert stats["cold"]["count"] == 0
+    assert stats["p99_ms"] is not None
+
+
+def test_proportional_split_never_ships_worse_than_equal(session):
+    """Multi-tenant misses that arbitrated both splits recorded both
+    makespans, and the shipped plan is the better of the two."""
+    both = [e for e in session.miss_events
+            if e["split"] is not None]
+    for e in both:
+        best = min(e["proportional_makespan"], e["equal_makespan"])
+        assert e["makespan"] <= best + 1e-6
+
+
+# ---------------------------------------------------------------------------
+# Churny traces reuse neighbor solutions
+# ---------------------------------------------------------------------------
+
+
+def test_churny_trace_reuses_neighbor_solutions():
+    """One tenant arrives/leaves per round: every miss warm-starts from a
+    cached neighbor (solve-count assertion: incremental_hits == misses),
+    and a replay of the trace compiles nothing new."""
+    s = make_session()
+    s.compile()
+    trace = [(0, 1, 2), (1, 2), (0, 1, 2), (0, 2), (0,), (0, 1)]
+    for ids in trace:
+        s.plan_for(ids)
+    misses = len(s.miss_events)
+    assert misses == 4                    # the four non-full occupancies
+    assert s.incremental_hits == misses   # all warm-started
+    assert all(e["warm"] and e["neighbor"] is not None
+               for e in s.miss_events)
+    compiles = s.store.stats()["compiles"]
+    for ids in trace:                     # replay: pure cache hits
+        s.plan_for(ids)
+    assert len(s.miss_events) == misses
+    assert s.store.stats()["compiles"] == compiles
+
+
+def test_nearest_solutions_prefers_nearest_superset(session):
+    """Distance ranking: the occupancy itself (distance 0, post-eviction
+    re-compiles) beats a superset at distance 1 beats the full house at
+    distance 2; non-comparable occupancies are never returned."""
+    store = PlanStore()
+    store.seed_solutions([0, 1, 2], {0: "s0", 1: "s1", 2: "s2"})
+    store.seed_solutions([0, 1], {0: "a0", 1: "a1"})
+    occ, sols = store.nearest_solutions([0])
+    assert occ == frozenset({0, 1})       # distance 1 superset
+    assert sols == {0: "a0", 1: "a1"}
+    occ, _ = store.nearest_solutions([0, 1])
+    assert occ == frozenset({0, 1})       # exact key at distance 0
+    occ, _ = store.nearest_solutions([1, 2])
+    assert occ == frozenset({0, 1, 2})    # ({0,1} is not comparable)
+    assert store.nearest_solutions([0]) is not None
+    empty = PlanStore()
+    assert empty.nearest_solutions([0]) is None
+
+
+def test_sidecar_survives_plan_eviction():
+    """LRU eviction of a plan never destroys the warm-start source: the
+    solutions sidecar still answers for the evicted occupancy, and its
+    re-compile warm-starts from its own previous solutions."""
+    s = make_session(store_max_entries=1)
+    s.compile()                           # full house is protected
+    s.plan_for([0, 1])
+    s.plan_for([1, 2])                    # evicts {0,1}
+    assert frozenset({0, 1}) not in s.store
+    assert s.store.solutions([0, 1]) is not None
+    s.plan_for([0, 1])                    # re-compile after eviction
+    last = s.miss_events[-1]
+    assert last["occupancy"] == (0, 1)
+    assert last["warm"] and last["neighbor"] == (0, 1)
+    assert s.store.stats()["re_misses"] == 1
+
+
+# ---------------------------------------------------------------------------
+# re_misses: evictions that forced a re-compile
+# ---------------------------------------------------------------------------
+
+
+def test_re_misses_counts_thrash_once_per_eviction():
+    store = PlanStore(max_entries=1)
+    store.co_plan([0], lambda: "p0")
+    store.co_plan([1], lambda: "p1")      # evicts {0}
+    assert store.stats()["evictions"] == 1
+    assert store.stats()["re_misses"] == 0
+    store.co_plan([0], lambda: "p0b")     # the eviction forced this
+    assert store.stats()["re_misses"] == 1
+    store.peek([1], touch=True)           # second miss of same eviction
+    assert store.stats()["re_misses"] == 2
+    store.peek([1], touch=True)           # ... is counted only once
+    assert store.stats()["re_misses"] == 2
+
+
+def test_engine_report_surfaces_re_misses_and_latency(session):
+    eng = MultiModelEngine(session.compile(), execute=False)
+    eng.submit(0)
+    eng.submit(1)
+    eng.step()
+    rep = eng.report()
+    assert "re_misses" in rep["plan_store"]
+    lat = rep["compile_latency"]
+    assert lat["count"] == len(session.miss_events)
+    assert set(lat) >= {"p50_ms", "p99_ms", "warm", "cold",
+                        "incremental_hits"}
+
+
+# ---------------------------------------------------------------------------
+# Retry / poison lifecycle (satellite bugfix)
+# ---------------------------------------------------------------------------
+
+
+class FlakySession:
+    """submit_compile raises ``fail_times`` times, then lands."""
+
+    def __init__(self, fail_times):
+        self.fail_times = fail_times
+        self.calls = 0
+        self.cached = set()
+
+    def try_plan_for(self, key, touch=False):
+        return "plan" if frozenset(key) in self.cached else None
+
+    def submit_compile(self, key):
+        self.calls += 1
+        if self.calls <= self.fail_times:
+            raise RuntimeError("transient joint-CP timeout")
+        self.cached.add(frozenset(key))
+        return True
+
+
+def test_transient_failure_retries_then_compiles():
+    """One raised compile no longer poisons the occupancy: the next
+    submit retries and lands the plan."""
+    fake = FlakySession(fail_times=1)
+    bg = BackgroundCompiler(fake, start=False, max_retries=2)
+    assert bg.submit([0, 1])
+    bg.run_pending()                      # raises once
+    assert bg.stats()["failed_occupancies"] == 0
+    assert bg.submit([0, 1])              # retry allowed next round
+    bg.run_pending()
+    assert bg.compiled == 1
+    assert fake.try_plan_for([0, 1]) is not None
+    assert bg.stats()["retries"] == 1
+    assert bg.stats()["errors"] == 1
+
+
+def test_retries_exhaust_then_poison_then_clear():
+    """max_retries raised compiles with exponential backoff rounds, then
+    the occupancy is poisoned; clear_failed() lifts the poison."""
+    fake = FlakySession(fail_times=10)    # always fails (until cleared)
+    bg = BackgroundCompiler(fake, start=False, max_retries=2,
+                            backoff_rounds=1)
+    assert bg.submit([0])                 # attempt 1
+    bg.run_pending()
+    assert bg.submit([0])                 # backoff 1 round: allowed
+    bg.run_pending()                      # attempt 2
+    assert not bg.submit([0])             # backoff 2 rounds: deferred
+    assert bg.stats()["backoffs"] == 1
+    assert bg.submit([0])                 # attempt 3 (= max_retries + 1)
+    bg.run_pending()
+    assert bg.stats()["failed_occupancies"] == 1
+    assert not bg.submit([0])             # poisoned: dedupes forever
+    assert bg.stats()["retries"] == 2
+    assert bg.compiled == 0
+
+    fake.fail_times = 0                   # operator fixed the condition
+    assert bg.clear_failed() == 1
+    assert bg.stats()["failed_occupancies"] == 0
+    assert bg.submit([0])
+    bg.run_pending()
+    assert bg.compiled == 1
+
+
+def test_success_resets_retry_state():
+    fake = FlakySession(fail_times=1)
+    bg = BackgroundCompiler(fake, start=False, max_retries=1)
+    bg.submit([2])
+    bg.run_pending()                      # fail once
+    bg.submit([2])
+    bg.run_pending()                      # lands
+    assert bg.compiled == 1
+    # a later failure of the SAME occupancy starts a fresh retry budget
+    fake.cached.clear()
+    fake.calls = 0
+    fake.fail_times = 1
+    bg.submit([2])
+    bg.run_pending()                      # fails again — not poisoned
+    assert bg.stats()["failed_occupancies"] == 0
+
+
+# ---------------------------------------------------------------------------
+# CompileRequest budget-pair validation (satellite bugfix)
+# ---------------------------------------------------------------------------
+
+
+def test_inverted_lazy_budget_pair_raises():
+    soc, pats = two_acc_soc(64, 8.0)
+    g = dense_chain("a", [32, 32])
+    with pytest.raises(ValueError, match="lazy_joint_time_budget_s"):
+        CompileRequest(graphs=[g], soc=soc, patterns=pats,
+                       joint_time_budget_s=1.0,
+                       lazy_joint_time_budget_s=2.0)
+    # the <= 0 ablation sentinel ("joint budget already spent") still
+    # constructs — joint_tilings clamps lazy/incremental budgets to it
+    req = CompileRequest(graphs=[g], soc=soc, patterns=pats,
+                         joint_time_budget_s=0.0)
+    assert req.lazy_joint_time_budget_s > 0.0
+    with pytest.raises(ValueError):
+        CompileRequest(graphs=[g], soc=soc, patterns=pats,
+                       incremental_time_budget_s=0.0)
+    with pytest.raises(ValueError):
+        CompileRequest(graphs=[g], soc=soc, patterns=pats,
+                       l2_split="nope")
+
+
+def test_zero_joint_budget_disables_incremental_solves_too():
+    """The clamp: with the joint budget spent, a warm-started subset miss
+    must not run a 1.5s incremental solve behind the foreground path's
+    back — it falls back like everything else."""
+    s = make_session(joint_time_budget_s=0.0, strategies=[
+        "tile-centric", "all-or-nothing", "heft", "joint-cp"])
+    s.compile()
+    before = s.joint_solves
+    s.plan_for([0, 1])
+    assert s.joint_solves == before       # no joint solve ran
+    assert s.joint_fallbacks > 0
+
+
+# ---------------------------------------------------------------------------
+# Proportional budgets
+# ---------------------------------------------------------------------------
+
+
+def test_proportional_budgets_units():
+    assert proportional_budgets(1000, [3.0, 1.0]) == [719, 281]
+    assert sum(proportional_budgets(999, [1.0, 2.0, 3.0])) == 999
+    # degenerate weights fall back to the equal split
+    assert proportional_budgets(1000, [0.0, 0.0]) == [500, 500]
+    assert proportional_budgets(1000, [5.0]) == [1000]
+    assert proportional_budgets(1000, []) == []
+    # the min_frac floor protects a near-zero-weight tenant
+    b = proportional_budgets(1024, [1e9, 1.0])
+    assert b[1] >= int(512 * 0.125)
+    assert all(x > 0 for x in b) and sum(b) == 1024
+
+
+def test_solution_ws_bytes_positive(session):
+    for i, cm in enumerate(session.singles):
+        ws = solution_ws_bytes(session.request.graphs[i], cm.solution)
+        assert ws > 0.0

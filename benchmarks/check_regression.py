@@ -14,7 +14,10 @@ re-solve trace gates compile *latency*: the churny-trace warm-vs-scratch
 p99 miss-compile speedup must stay >= 2x, the warm p99 latency may not
 regress more than 20% against the baseline, any negative-gain round
 fails, and a mix whose shipped plan is worse than its equal-L2-split
-alternative fails (the proportional split is arbitrated, never imposed).  Mixes present in
+alternative fails (the proportional split is arbitrated, never imposed).  The static
+plan analyzer's tallies are gated at a hard zero: any ERROR-severity
+diagnostic (PA001-PA008) on any plan a benchmark session emitted fails
+the lane.  Mixes present in
 only one of the two reports are listed but do not fail the gate
 (baselines refresh when the mix list changes).
 
@@ -97,6 +100,7 @@ def compare(report: dict, baseline: dict,
 
     failures += compare_incremental(report, baseline)
     failures += compare_slo(report, baseline, tolerance)
+    failures += compare_analysis(report)
     got = new_part.get("subset_total_ms")
     want = base_part.get("subset_total_ms")
     if got is not None and want:
@@ -161,6 +165,30 @@ def compare_incremental(report: dict, baseline: dict,
                 f"{got:.0f} ms vs baseline {want:.0f} ms "
                 f"(+{(ratio - 1.0) * 100.0:.1f}% > "
                 f"{latency_tolerance * 100.0:.0f}%)")
+    return failures
+
+
+def compare_analysis(report: dict) -> list:
+    """Gate on the static plan analyzer: every plan the benchmark's
+    deployment sessions emitted must analyze with zero ERROR-severity
+    diagnostics (races, data hazards, aliasing, isolation breaches —
+    PA001-PA008).  This is a hard zero against the fresh report, not a
+    baseline diff: one hazardous plan is one too many.  Absent section
+    (older report) passes — the gate engages once the report carries
+    analyzer tallies."""
+    failures = []
+    ana = report.get("analysis")
+    if not ana:
+        return failures
+    errs = int(ana.get("errors", 0))
+    plans = ana.get("plans_analyzed", 0)
+    mark = "REGRESSION" if errs else "ok"
+    print(f"  {'plan-analyzer ERROR diagnostics':40s} {errs:9d} over "
+          f"{plans} plans (gate 0)  {mark}")
+    if errs:
+        failures.append(
+            f"plan analysis: {errs} ERROR diagnostic(s) across {plans} "
+            f"analyzed plans (expected 0; by rule: {ana.get('by_rule')})")
     return failures
 
 

@@ -190,6 +190,29 @@ def rows_to_json(rows):
     return out
 
 
+def analysis_summary(rows, forced_mc=None):
+    """Static plan-analyzer tallies aggregated across every deployment
+    session the benchmark ran (the co-scheduling mixes plus the
+    forced-contention compile): plans analyzed, ERROR/WARNING diagnostic
+    counts, and per-rule counts.  The sessions run in ``"strict"``
+    analysis mode, so a hazardous plan aborts the benchmark outright;
+    ``check_regression`` additionally gates the report on zero ERROR
+    diagnostics so the analyzer demonstrably ran over every plan."""
+    sessions = [mc.session for _, mc, *_ in rows if mc.session is not None]
+    if forced_mc is not None and forced_mc.session is not None:
+        sessions.append(forced_mc.session)
+    total = {"plans_analyzed": 0, "errors": 0, "warnings": 0,
+             "by_rule": {}}
+    for s in sessions:
+        st = s.analysis_stats()
+        total["plans_analyzed"] += st["plans_analyzed"]
+        total["errors"] += st["errors"]
+        total["warnings"] += st["warnings"]
+        for rule, n in st["by_rule"].items():
+            total["by_rule"][rule] = total["by_rule"].get(rule, 0) + n
+    return total
+
+
 # ---------------------------------------------------------------------------
 # Forced contention: shrunk shared L2, sole-occupancy tiles thrash
 # ---------------------------------------------------------------------------
@@ -623,6 +646,7 @@ def main(argv=None) -> None:
             "incremental_resolve": incremental,
             "slo_serving": slo,
             "async_first_round": async_first,
+            "analysis": analysis_summary(rows, mc),
         }
         out_dir = os.path.dirname(args.json)
         if out_dir:

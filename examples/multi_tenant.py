@@ -73,6 +73,42 @@ and the admission/composer/background-compiler counters.
 The legacy one-shot wrapper (``compile_multi``) is demoed at the end for
 compat; it builds the same session internally.
 
+Static plan analysis
+--------------------
+
+Every plan the session emits — the full house, each ``plan_for``
+occupancy, the compile-alone references — passes through the static
+plan analyzer (:mod:`repro.analysis`) before it lands in the
+``PlanStore``.  The analyzer replays the schedule symbolically and
+reports severity-graded diagnostics with stable rule ids:
+
+    ===== ==================================================
+    PA001 precedence: a node starts before a predecessor ends
+    PA002 resource overlap: two kernels (or DMAs) share a
+          device/DMA-engine window
+    PA003 data hazard: a DMA moves a tensor while a kernel
+          reads/writes it (RAW/WAR/WAW)
+    PA004 use-after-evict: an access window not covered by an
+          L2 residency rectangle
+    PA005 aliasing: concurrently-live L2 allocations overlap
+          in address space (or fall outside L2)
+    PA006 tenant isolation: foreign owner in a namespace, or a
+          tenant's static footprint over its budget slice
+          (soft-budget peaks are WARNINGs)
+    PA007 malformed DAG: cycles, unknown preds, unscheduled
+          nodes
+    PA008 double-buffer discipline: a DMA transfer with no
+          backing L2 rectangle
+    ===== ==================================================
+
+``CompileRequest(analysis=...)`` picks the policy: ``"strict"`` (the
+default) raises on any ERROR diagnostic so a hazardous plan can never
+be cached or served, ``"warn"`` records diagnostics in
+``session.analysis_stats()`` (surfaced under ``report()["analysis"]``
+by the serving engine) but ships the plan, ``"off"`` skips analysis.
+The legacy ``validate_schedule`` / ``validate_multi_schedule`` /
+``validate_plan`` helpers are now thin shims over the same analyzer.
+
     PYTHONPATH=src python examples/multi_tenant.py
 """
 
@@ -168,6 +204,10 @@ def main() -> None:
         print(f"  {t['model']:14s} served={t['served']}  "
               f"mean latency {t['mean_latency_ms']:.2f} ms")
     print(f"plan store: {rep['plan_store']}")
+    ana = rep["analysis"]
+    print(f"plan analysis ({ana['mode']}): {ana['plans_analyzed']} plans "
+          f"analyzed, {ana['errors']} errors, "
+          f"{ana['warnings']} warnings ({ana['by_rule'] or 'clean'})")
 
     # -- SLO-aware serving: priorities, deadlines, async compiles ----------
     # the autoencoder is latency-critical (HIGH, deadline between its

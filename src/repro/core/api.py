@@ -84,7 +84,8 @@ def compile_multi(graphs: Sequence[Graph], soc: SoC,
                   lazy_joint_time_budget_s: float = 1.5,
                   incremental: bool = True,
                   incremental_time_budget_s: float = 1.5,
-                  l2_split: str = "proportional"
+                  l2_split: str = "proportional",
+                  analysis: str = "strict"
                   ) -> MultiCompiledModel:
     """Compile N independent models into one multi-tenant co-schedule.
 
@@ -119,7 +120,9 @@ def compile_multi(graphs: Sequence[Graph], soc: SoC,
     instead of solving from scratch; ``l2_split`` chooses the per-plan
     shared-L2 re-split — "proportional" (working-set-weighted, arbitrated
     against the equal split so it never ships a worse plan) or the legacy
-    "equal"."""
+    "equal"; ``analysis`` sets the static plan-analyzer mode the session
+    runs over every plan before PlanStore insertion (``"strict"`` raises
+    on ERROR diagnostics, ``"warn"`` records them, ``"off"`` skips)."""
     assert len(graphs) >= 1
     request = CompileRequest(graphs=list(graphs), soc=soc, patterns=patterns,
                              mode=mode, requested_tiles=requested_tiles,
@@ -131,5 +134,5 @@ def compile_multi(graphs: Sequence[Graph], soc: SoC,
                              lazy_joint_time_budget_s=lazy_joint_time_budget_s,
                              incremental=incremental,
                              incremental_time_budget_s=incremental_time_budget_s,
-                             l2_split=l2_split)
+                             l2_split=l2_split, analysis=analysis)
     return DeploymentSession(request).compile()

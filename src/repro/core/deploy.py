@@ -66,7 +66,7 @@ from repro.core.rewrite import TiledGraph, rewrite
 from repro.core.schedule import (ExecutionPlan, MultiExecutionPlan,
                                  concat_plans, contention_hints,
                                  default_budgets, schedule, schedule_multi,
-                                 validate_multi_schedule, validate_schedule)
+                                 validate_schedule)
 from repro.core.tiling import (Contention, JointTilingProblem,
                                TilingSolution, optimize_tiling,
                                solution_ws_bytes, tile_granularities)
@@ -83,6 +83,12 @@ ASYNC_MODES = ("matcha", "matcha_nt")
 # "equal" is the blind 1/n split, "proportional" weights each tenant by
 # the linearized working set of its chosen tiling (DORY-style)
 L2_SPLITS = ("equal", "proportional")
+
+# what the session does with static-analyzer diagnostics on each plan it
+# is about to insert into the PlanStore: "strict" raises on any ERROR,
+# "warn" records them (analysis_stats()) but ships the plan, "off" skips
+# the analyzer entirely
+ANALYSIS_MODES = ("strict", "warn", "off")
 
 
 def proportional_budgets(l2_size: int, weights: Sequence[float],
@@ -246,7 +252,14 @@ class CompileRequest:
     the shared L2 is re-split among a plan's active tenants — "equal"
     (the pre-incremental behaviour) or "proportional" to the chosen
     tilings' linearized working sets (both splits are arbitrated, so
-    "proportional" never ships a worse plan than "equal" would have)."""
+    "proportional" never ships a worse plan than "equal" would have).
+
+    ``analysis`` controls the static plan analyzer
+    (:mod:`repro.analysis`) the session runs over every plan before it
+    lands in the :class:`PlanStore`: ``"strict"`` (default) raises on
+    any ERROR-severity diagnostic, ``"warn"`` records diagnostics in
+    :meth:`DeploymentSession.analysis_stats` but still ships the plan,
+    ``"off"`` skips the analyzer."""
     graphs: Sequence[Graph]
     soc: SoC
     patterns: Sequence[Pattern]
@@ -264,6 +277,7 @@ class CompileRequest:
     incremental_time_budget_s: float = 1.5
     l2_split: str = "proportional"
     store_max_entries: int = 64
+    analysis: str = "strict"
 
     def __post_init__(self) -> None:
         if self.mode not in MODES:
@@ -297,6 +311,9 @@ class CompileRequest:
         if self.l2_split not in L2_SPLITS:
             raise ValueError(f"unknown l2_split {self.l2_split!r}; "
                              f"expected one of {L2_SPLITS}")
+        if self.analysis not in ANALYSIS_MODES:
+            raise ValueError(f"unknown analysis mode {self.analysis!r}; "
+                             f"expected one of {ANALYSIS_MODES}")
 
 
 # ---------------------------------------------------------------------------
@@ -888,7 +905,7 @@ class PlanStore:
         """Drop LRU occupancies down to the bound; never drops protected
         occupancies or ``keep`` (the entry being inserted — evicting it
         would break 'miss compiles once, then hits'), so the bound can be
-        exceeded by the protected set."""
+        exceeded by the protected set.  Caller holds the lock."""
         while len(self._co) > self.max_entries:
             victim = next((k for k in self._co
                            if k not in self._protected and k != keep), None)
@@ -1047,6 +1064,14 @@ class DeploymentSession:
         self.equal_split_wins = 0      # ... or the equal split held
         self.fullhouse_split: Optional[Dict[str, object]] = None
         self.miss_events: List[Dict[str, object]] = []   # per-miss telemetry
+        # static plan-analyzer bookkeeping (see _analyze): every plan is
+        # analyzed before PlanStore insertion, diagnostics tallied here
+        self.plans_analyzed = 0
+        self.analysis_error_count = 0
+        self.analysis_warning_count = 0
+        self.analysis_by_rule: Dict[str, int] = {}
+        self.analysis_findings: List[str] = []           # retained messages
+        self.max_analysis_findings = 32
         self._lock = threading.RLock()
         self._inflight: Set[FrozenSet[int]] = set()   # submit_compile dedupe
         # the exact best-response incumbent (phase A of the fixpoint): what
@@ -1147,6 +1172,48 @@ class DeploymentSession:
             self.precompile(precompile)
         return self._multi
 
+    # -- static plan analysis ----------------------------------------------
+
+    def _analyze(self, plan, context: str):
+        """Run the static plan analyzer (:mod:`repro.analysis`) over
+        ``plan`` and tally the diagnostics.  In ``"strict"`` analysis
+        mode any ERROR-severity diagnostic raises ``RuntimeError`` with
+        the given ``context`` prefix (so nothing hazardous reaches the
+        PlanStore); in ``"warn"`` mode diagnostics are only recorded; in
+        ``"off"`` mode the analyzer is skipped.  Returns ``plan`` so
+        call sites can wrap plan-producing expressions."""
+        mode = self.request.analysis
+        if mode == "off":
+            return plan
+        from repro.analysis import Severity, analyze
+        diags = analyze(plan)
+        errors = [d for d in diags if d.severity >= Severity.ERROR]
+        with self._lock:
+            self.plans_analyzed += 1
+            self.analysis_error_count += len(errors)
+            self.analysis_warning_count += len(diags) - len(errors)
+            for d in diags:
+                self.analysis_by_rule[d.rule] = \
+                    self.analysis_by_rule.get(d.rule, 0) + 1
+                if len(self.analysis_findings) < self.max_analysis_findings:
+                    self.analysis_findings.append(f"{context}: {d}")
+        if errors and mode == "strict":
+            raise RuntimeError(
+                f"{context}: {[str(d) for d in errors[:5]]}")
+        return plan
+
+    def analysis_stats(self) -> Dict[str, object]:
+        """Snapshot of the static plan-analyzer tallies this session:
+        analysis mode, plans analyzed, error/warning diagnostic counts,
+        per-rule counts, and the retained finding messages."""
+        with self._lock:
+            return {"mode": self.request.analysis,
+                    "plans_analyzed": self.plans_analyzed,
+                    "errors": self.analysis_error_count,
+                    "warnings": self.analysis_warning_count,
+                    "by_rule": dict(self.analysis_by_rule),
+                    "findings": list(self.analysis_findings)}
+
     def _compile_multi(self) -> MultiCompiledModel:
         req = self.request
         singles = self.singles
@@ -1161,9 +1228,7 @@ class DeploymentSession:
                 and req.mode in ASYNC_MODES and retilers):
             plan = self._contention_fixpoint(baseline, base_tgs, retilers)
         plan = self._l2_split_refine(plan)
-        errs = validate_multi_schedule(plan)
-        if errs:
-            raise RuntimeError(f"infeasible co-schedule: {errs[:5]}")
+        self._analyze(plan, "infeasible co-schedule")
         mc = MultiCompiledModel(graphs=list(req.graphs), soc=req.soc,
                                 mode=req.mode, singles=singles, plan=plan,
                                 baseline_plan=baseline, session=self)
@@ -1570,10 +1635,8 @@ class DeploymentSession:
         seq_alone.origin = "sequential-alone"
         if self.objective.better(seq_alone, plan):
             plan = seq_alone
-        errs = validate_multi_schedule(plan)
-        if errs:
-            raise RuntimeError(f"infeasible subset co-schedule for tenants "
-                               f"{ids}: {errs[:5]}")
+        self._analyze(plan, f"infeasible subset co-schedule for "
+                            f"tenants {ids}")
         event = {"occupancy": tuple(ids),
                  "wall_s": time.perf_counter() - t0,
                  "warm": neighbor is not None,
@@ -1691,5 +1754,7 @@ class DeploymentSession:
                     self.store.seed_tenant(key, p)
                     break
         return self.store.tenant_plan(
-            key, lambda: schedule(tg, self.request.soc, self.request.mode,
-                                  restarts=1, anneal_iters=0))
+            key, lambda: self._analyze(
+                schedule(tg, self.request.soc, self.request.mode,
+                         restarts=1, anneal_iters=0),
+                f"infeasible reference plan for tenant {i}"))

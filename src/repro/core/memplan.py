@@ -248,17 +248,14 @@ class MemoryPlan:
 
 
 def validate_plan(plan: MemoryPlan) -> List[str]:
-    """Returns a list of violations (empty == valid packing)."""
-    errs: List[str] = []
-    allocs = plan.allocations
-    for i in range(len(allocs)):
-        a = allocs[i]
-        if a.addr < 0 or a.addr + a.size > plan.capacity:
-            errs.append(f"{a.tensor}: out of L2 range")
-        for j in range(i + 1, len(allocs)):
-            b = allocs[j]
-            time_overlap = a.t_alloc < b.t_free and b.t_alloc < a.t_free
-            addr_overlap = a.addr < b.addr + b.size and b.addr < a.addr + a.size
-            if time_overlap and addr_overlap:
-                errs.append(f"overlap: {a.tensor} vs {b.tensor}")
-    return errs
+    """Returns a list of violations (empty == valid packing).
+
+    A thin shim over the static plan analyzer's PA005 aliasing rule
+    (:func:`repro.analysis.analyze_memory`): a sweep-line over the
+    allocation rectangles flags address overlap between concurrently-live
+    allocations and out-of-L2-range placements.  Historically this
+    checker used strict inequalities for the time overlap while the
+    schedule validators allowed ``1e-6`` slack; all three now share the
+    analyzer's single ``TIME_EPS``."""
+    from repro.analysis import analyze_errors
+    return [str(d) for d in analyze_errors(plan)]

@@ -292,6 +292,15 @@ class _SimState:
             self.alloc.alloc(t, tg.graph.tensors[t].bytes, 0.0, "static")
             self.state[t] = "l2"
         self.remaining_consumers: Dict[str, int] = {}
+        # tensor -> latest end of any dispatched node reading/writing it;
+        # eviction may not touch the buffer before that (see
+        # ``_reserve_slots``) — on metal a swap-out racing an in-flight
+        # access corrupts memory even though the analytic makespan is
+        # oblivious to it
+        self.pin_until: Dict[str, float] = {}
+        # tensor -> end of its latest issued transfer: a node touching the
+        # tensor may not start under an in-flight DMA on its buffer
+        self.tensor_dma_until: Dict[str, float] = {}
 
     def dma_transfer(self, tensor: str, direction: str, ready: float,
                      nbytes: int) -> float:
@@ -300,6 +309,8 @@ class _SimState:
         end = start + dur
         self.res_free[DMA] = end
         self.busy[DMA] += dur
+        self.tensor_dma_until[tensor] = max(
+            self.tensor_dma_until.get(tensor, 0.0), end)
         self.dmas.append(ScheduledDma(tensor, direction, start, end, nbytes))
         self.swaps.append(SwapOp(tensor, direction, nbytes, start))
         return end
@@ -338,9 +349,24 @@ def _reserve_slots(st, needs: List[Tuple[str, int, str]], now: float,
     if not L2Allocator.fits_all(hypo, sizes):
         return False, now                          # no mutation
     t_avail = now
+    pin_until = getattr(st, "pin_until", {})
     while not L2Allocator.fits_all(
             st.alloc.segments_assuming_freed([]), sizes):
-        v = choose(candidates())
+        vs = candidates()
+        # Eviction must not race an in-flight access: a victim still
+        # being read/written by an already-dispatched node (its window
+        # extends past t_avail) may only be swapped out *after* that
+        # window closes.  Prefer victims that are free right now; when
+        # every candidate is pinned, take the soonest-released one and
+        # push the eviction (and this reservation) past its release —
+        # feasibility is unchanged (the fits_all pre-check above ignores
+        # pinning), only the eviction clock moves, so no new deadlocks.
+        free_now = [v for v in vs if pin_until.get(v, 0.0) <= t_avail]
+        if free_now:
+            v = choose(free_now)
+        else:
+            v = min(vs, key=lambda u: pin_until.get(u, 0.0))
+            t_avail = max(t_avail, pin_until.get(v, 0.0))
         vb = st.alloc.live[v].size
         t_avail = st.dma_transfer(v, "out", t_avail, vb)
         st.alloc.free(v, t_avail)
@@ -422,6 +448,8 @@ def simulate(tg: TiledGraph, soc: SoC, sequential: bool,
             # 1. gather every L2 slot this node requires: reloads of
             # swapped-out inputs + freshly-written output buffers
             protect = set(n.reads) | set(n.writes)
+            for t in protect:        # wait out in-flight DMA on operands
+                t0 = max(t0, st.tensor_dma_until.get(t, 0.0))
             needs: List[Tuple[str, int, str]] = []
             reloads: List[str] = []
             for t in n.reads:
@@ -441,6 +469,16 @@ def simulate(tg: TiledGraph, soc: SoC, sequential: bool,
             if not ok:
                 deferred.append(name)
                 continue
+            # a buffer cannot be touched before it exists: an operand
+            # allocated by an earlier-dispatched sibling (e.g. another
+            # spatial partition of the same output) may carry a t_alloc
+            # later than this node's natural start on an idle device —
+            # before t_alloc the address range can legally belong to a
+            # different tensor
+            for t in protect:
+                a = st.alloc.live.get(t)
+                if a is not None:
+                    t0 = max(t0, a.t_alloc)
             for t, _, _ in needs:
                 st.state[t] = "l2"
             for t in reloads:
@@ -451,6 +489,8 @@ def simulate(tg: TiledGraph, soc: SoC, sequential: bool,
                 t0 = st.dma_transfer(t, dirn, t0, int(b))
             n.start = t0
             n.end = t0 + n.duration
+            for t in protect:        # in-flight accesses block eviction
+                st.pin_until[t] = max(st.pin_until.get(t, 0.0), n.end)
             st.res_free[n.resource] = n.end
             st.busy[n.resource] += n.duration
             if sequential and n.resource != DMA:
@@ -565,30 +605,13 @@ def schedule(tg: TiledGraph, soc: SoC, mode: str,
 
 
 def validate_schedule(plan: ExecutionPlan) -> List[str]:
-    """Constraint checker: precedence + per-resource mutual exclusion."""
-    errs: List[str] = []
-    for n in plan.nodes.values():
-        if n.start < -0.5:
-            errs.append(f"{n.name}: never scheduled")
-            continue
-        for p in n.preds:
-            if plan.nodes[p].end > n.start + 1e-6:
-                errs.append(f"precedence: {p} ends after {n.name} starts")
-    by_res: Dict[str, List[PlanNode]] = {}
-    for n in plan.nodes.values():
-        by_res.setdefault(n.resource, []).append(n)
-    for r, ns in by_res.items():
-        ns.sort(key=lambda n: n.start)
-        for a, b in zip(ns, ns[1:]):
-            if a.end > b.start + 1e-6:
-                errs.append(f"resource {r}: {a.name} overlaps {b.name}")
-    if plan.mode in ("tvm", "match"):
-        comp = [n for n in plan.nodes.values() if n.resource != DMA]
-        comp.sort(key=lambda n: n.start)
-        for a, b in zip(comp, comp[1:]):
-            if a.end > b.start + 1e-6:
-                errs.append(f"sequential mode overlap: {a.name} / {b.name}")
-    return errs
+    """Constraint checker, now a thin shim over the static plan analyzer
+    (:mod:`repro.analysis`): precedence and per-resource mutual exclusion
+    as before, plus DMA/compute data hazards, use-after-evict, L2 address
+    aliasing, and double-buffer discipline — every rule at one shared
+    ``TIME_EPS``.  Returns ERROR findings as strings (empty == valid)."""
+    from repro.analysis import analyze_errors
+    return [str(d) for d in analyze_errors(plan)]
 
 
 # ---------------------------------------------------------------------------
@@ -709,6 +732,11 @@ class _MultiSimState:
                 self.state[p + t] = "l2"
             self.outputs.update(p + t for t in g.outputs)
         self.remaining_consumers: Dict[str, int] = {}
+        # tensor -> latest end of any dispatched access (same eviction
+        # pinning as the single-model sim; see ``_reserve_slots``)
+        self.pin_until: Dict[str, float] = {}
+        # tensor -> end of its latest issued transfer (see _SimState)
+        self.tensor_dma_until: Dict[str, float] = {}
         # Monotonic clock over allocator mutations.  With double-buffered
         # DMA, reservation times are pred-driven and can run *backwards*
         # relative to the sequential allocator order; without the clamp a
@@ -799,6 +827,8 @@ def simulate_multi(tgs: Sequence[TiledGraph], soc: SoC,
             n = nodes[name]
             t0 = pred_end[name]
             protect = set(n.reads) | set(n.writes)
+            for t in protect:        # wait out in-flight DMA on operands
+                t0 = max(t0, st.tensor_dma_until.get(t, 0.0))
             needs: List[Tuple[str, int, str]] = []
             reloads: List[str] = []
             for t in n.reads:
@@ -817,6 +847,14 @@ def simulate_multi(tgs: Sequence[TiledGraph], soc: SoC,
             if not ok:
                 deferred.append(name)
                 continue
+            # a buffer cannot be touched before it exists (same clamp as
+            # the single-model sim: a sibling spatial partition may have
+            # allocated this operand at a later t_alloc than this node's
+            # natural start on an idle device)
+            for t in protect:
+                a = st.alloc.live.get(t)
+                if a is not None:
+                    t0 = max(t0, a.t_alloc)
             for t, _, _ in needs:
                 st.state[t] = "l2"
             for t in reloads:
@@ -827,6 +865,8 @@ def simulate_multi(tgs: Sequence[TiledGraph], soc: SoC,
             # device only gates the compute start, not the DMA issue
             n.start = max(t0, st.res_free[n.resource])
             n.end = n.start + n.duration
+            for t in protect:        # in-flight accesses block eviction
+                st.pin_until[t] = max(st.pin_until.get(t, 0.0), n.end)
             st.res_free[n.resource] = n.end
             st.busy[n.resource] += n.duration
             heapq.heappush(events, (n.end, name))
@@ -1052,33 +1092,18 @@ def schedule_multi(tgs: Sequence[TiledGraph], soc: SoC,
 
 
 def validate_multi_schedule(plan: MultiExecutionPlan) -> List[str]:
-    """Co-schedule constraint checker: precedence, per-device mutual
-    exclusion, and single-DMA-engine exclusivity across *all* tenants
-    (explicit load/store nodes and inline swap/planned-load transfers)."""
-    errs: List[str] = []
-    for n in plan.nodes.values():
-        if n.start < -0.5:
-            errs.append(f"{n.name}: never scheduled")
-            continue
-        for p in n.preds:
-            if plan.nodes[p].end > n.start + 1e-6:
-                errs.append(f"precedence: {p} ends after {n.name} starts")
-    by_res: Dict[str, List[Tuple[float, float, str]]] = {}
-    for n in plan.nodes.values():
-        by_res.setdefault(n.resource, []).append((n.start, n.end, n.name))
-    # inline DMA transfers share the engine with load/store nodes
-    for d in plan.dmas:
-        by_res.setdefault(DMA, []).append(
-            (d.start, d.end, f"dma:{d.tensor}:{d.direction}@{d.start:.0f}"))
-    for r, ivs in by_res.items():
-        ivs.sort()
-        for a, b in zip(ivs, ivs[1:]):
-            if a[1] > b[0] + 1e-6:
-                errs.append(f"resource {r}: {a[2]} overlaps {b[2]}")
-    for i, tg in enumerate(plan.tenants):
-        if plan.tenant_makespans[i] > plan.makespan + 1e-6:
-            errs.append(f"tenant {i} finishes after the global makespan")
-    return errs
+    """Co-schedule constraint checker, now a thin shim over the static
+    plan analyzer (:mod:`repro.analysis`).  Beyond the historical checks
+    (precedence, per-device mutual exclusion, single-DMA-engine
+    exclusivity across all tenants' explicit load/store nodes and inline
+    transfers, tenant completion within the makespan) this validates L2
+    *address* aliasing across concurrently-live allocations — memory
+    overlap across tenants used to be unchecked in multi plans — plus
+    DMA/compute data hazards, use-after-evict, double-buffer discipline,
+    and tenant budget isolation.  Returns ERROR findings as strings
+    (empty == valid)."""
+    from repro.analysis import analyze_errors
+    return [str(d) for d in analyze_errors(plan)]
 
 
 def _tenant_of(namespaced: str) -> int:

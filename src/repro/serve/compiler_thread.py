@@ -161,9 +161,10 @@ class BackgroundCompiler:
 
     def _run_job(self, job: CompileJob) -> None:
         try:
-            if self.session.submit_compile(job.occupancy):
-                self.compiled += 1
+            landed = self.session.submit_compile(job.occupancy)
             with self._lock:               # success clears retry state
+                if landed:
+                    self.compiled += 1
                 self._attempts.pop(job.occupancy, None)
                 self._retry_after.pop(job.occupancy, None)
         except Exception as exc:           # keep serving on compile bugs
@@ -218,11 +219,15 @@ class BackgroundCompiler:
             self._run_job(job)
 
     def stats(self) -> dict:
+        # one consistent snapshot: every counter the worker thread writes
+        # is read under the same lock that guards the writes (reading
+        # `pending` via its property here would re-take the non-reentrant
+        # lock and deadlock, so `_inflight` is read directly)
         with self._lock:
-            failed = len(self._failed)
-        return {"submitted": self.submitted, "compiled": self.compiled,
-                "duplicates": self.duplicates, "pending": self.pending,
-                "retries": self.retries, "backoffs": self.backoffs,
-                "max_retries": self.max_retries,
-                "failed_occupancies": failed,
-                "errors": len(self.errors), "running": self.running}
+            return {"submitted": self.submitted, "compiled": self.compiled,
+                    "duplicates": self.duplicates,
+                    "pending": self._inflight,
+                    "retries": self.retries, "backoffs": self.backoffs,
+                    "max_retries": self.max_retries,
+                    "failed_occupancies": len(self._failed),
+                    "errors": len(self.errors), "running": self.running}

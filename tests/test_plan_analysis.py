@@ -1,0 +1,239 @@
+"""Static plan analyzer (PR 7): clean plans analyze clean at strict,
+every rule's seeded mutation is caught (the analyzer has teeth), the
+legacy validators are analyzer shims, the deployment session enforces
+the strict/warn knob, and the concurrency lint holds on the serving
+layer."""
+
+import itertools
+import pathlib
+
+import pytest
+
+from repro.analysis import Severity, analyze, analyze_errors
+from repro.analysis.lockcheck import check_paths, check_source
+from repro.analysis.mutate import MUTATORS, check_rules, clone_plan, mutate
+from repro.analysis.scan_mixes import mixes_from_baseline, plans_for_mix
+from repro.core.api import compile_multi
+from repro.core.deploy import CompileRequest, DeploymentSession
+from repro.core.memplan import validate_plan
+from repro.core.schedule import validate_multi_schedule, validate_schedule
+from repro.soc.testbed import dense_chain, two_acc_soc
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+REQUESTED_TILES = 4
+TIME_BUDGET_S = 0.5
+
+
+@pytest.fixture(scope="module")
+def mc():
+    """Cheap three-tenant testbed compile: full-house co-schedule plus
+    lazily compiled occupancy subsets — the mutation substrate."""
+    soc, pats = two_acc_soc(64, 8.0)
+    graphs = [dense_chain("a", [64, 64, 64]),
+              dense_chain("b", [48, 48, 48]),
+              dense_chain("c", [32, 32, 32])]
+    return compile_multi(graphs, soc, pats,
+                         requested_tiles=REQUESTED_TILES,
+                         time_budget_s=TIME_BUDGET_S)
+
+
+# ---------------------------------------------------------------------------
+# Clean plans analyze clean
+# ---------------------------------------------------------------------------
+
+
+def test_testbed_plans_have_no_error_diagnostics(mc):
+    """Full house, every occupancy subset, and every compile-alone plan
+    carry zero ERROR-severity diagnostics."""
+    plans = {"full": mc.plan}
+    for r in (1, 2):
+        for ids in itertools.combinations(range(3), r):
+            plans[str(ids)] = mc.plan_for(list(ids))
+    for i, cm in enumerate(mc.singles):
+        plans[f"single{i}"] = cm.plan
+    for label, plan in plans.items():
+        assert analyze_errors(plan) == [], label
+
+
+def test_session_strict_analysis_counts(mc):
+    """The session analyzed every plan it stored (strict is the default)
+    and found no errors."""
+    mc.plan_for([0, 1])               # force at least one subset compile
+    stats = mc.session.analysis_stats()
+    assert stats["mode"] == "strict"
+    assert stats["plans_analyzed"] >= 2   # full house + the subset
+    assert stats["errors"] == 0
+
+
+BASELINE = REPO / "benchmarks" / "baseline.json"
+
+
+@pytest.mark.parametrize(
+    "mix", [pytest.param(m, id="+".join(m))
+            for m in mixes_from_baseline(str(BASELINE))])
+def test_benchmark_mix_plans_analyze_clean(mix):
+    """Every schedule the session emits for the benchmark mixes — full
+    house, all PlanStore occupancies, compile-alone plans — analyzes
+    with zero ERROR diagnostics (the same sweep the CI ``scan_mixes``
+    lane runs)."""
+    for label, plan in plans_for_mix(mix, TIME_BUDGET_S):
+        assert analyze_errors(plan) == [], (mix, label)
+
+
+# ---------------------------------------------------------------------------
+# Mutation harness: every rule has teeth
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("rule", sorted(MUTATORS))
+def test_rule_catches_its_mutation(mc, rule):
+    """Each analyzer rule must flag the hazard its mutator injects into
+    an otherwise-clean co-schedule (ERROR severity, correct rule id)."""
+    mutated = mutate(mc.plan, rule)
+    diags = analyze(mutated)
+    assert any(d.rule == rule and d.severity >= Severity.ERROR
+               for d in diags), (rule, [str(d) for d in diags])
+    # and the mutation did not leak into the shared fixture plan
+    assert analyze_errors(mc.plan) == []
+
+
+def test_check_rules_all_fire_on_multi(mc):
+    fired = check_rules(mc.plan)
+    assert set(fired) == set(MUTATORS)
+    assert all(fired.values()), fired
+
+
+def test_check_rules_all_fire_on_single(mc):
+    """Single-model plans exercise every rule except tenant isolation
+    (PA006 needs budgets, which only multi plans carry)."""
+    fired = check_rules(mc.singles[0].plan)
+    assert set(fired) == set(MUTATORS) - {"PA006"}
+    assert all(fired.values()), fired
+
+
+def test_clone_plan_is_deep_enough(mc):
+    """Mutating a clone must never write through to the original."""
+    clone = clone_plan(mc.plan)
+    first = mc.plan.order[0]
+    clone.nodes[first].start += 1.0
+    clone.memory.allocations[0].addr += 64
+    assert mc.plan.nodes[first].start != clone.nodes[first].start
+    assert mc.plan.memory.allocations[0].addr != \
+        clone.memory.allocations[0].addr
+
+
+# ---------------------------------------------------------------------------
+# Legacy validators are analyzer shims
+# ---------------------------------------------------------------------------
+
+
+def test_validators_flag_mutations_with_rule_ids(mc):
+    assert validate_multi_schedule(mc.plan) == []
+    errs = validate_multi_schedule(mutate(mc.plan, "PA001"))
+    assert errs and any("PA001" in e for e in errs)
+    single = mc.singles[0].plan
+    assert validate_schedule(single) == []
+    errs = validate_schedule(mutate(single, "PA002"))
+    assert errs and any("PA002" in e for e in errs)
+
+
+def test_multi_validator_now_checks_l2_aliasing(mc):
+    """PR-7 coverage gain: ``validate_multi_schedule`` flags L2 address
+    aliasing between concurrently-live allocations (it only checked
+    precedence/overlap/residency before)."""
+    errs = validate_multi_schedule(mutate(mc.plan, "PA005"))
+    assert errs and any("PA005" in e for e in errs)
+
+
+def test_memplan_validator_shares_analyzer_epsilon(mc):
+    mem = mc.plan.memory
+    assert validate_plan(mem) == []
+    errs = validate_plan(mutate(mc.plan, "PA005").memory)
+    assert errs and any("PA005" in e for e in errs)
+
+
+# ---------------------------------------------------------------------------
+# Session wiring: the strict/warn knob
+# ---------------------------------------------------------------------------
+
+
+def _bare_session(analysis):
+    soc, pats = two_acc_soc(64, 8.0)
+    req = CompileRequest(graphs=[dense_chain("a", [32, 32])], soc=soc,
+                         patterns=pats, time_budget_s=TIME_BUDGET_S,
+                         analysis=analysis)
+    return DeploymentSession(req)
+
+
+def test_strict_mode_raises_on_error_diagnostics(mc):
+    session = _bare_session("strict")
+    with pytest.raises(RuntimeError, match="PA001"):
+        session._analyze(mutate(mc.plan, "PA001"), "infeasible co-schedule")
+    assert session.analysis_stats()["errors"] >= 1
+
+
+def test_warn_mode_records_instead_of_raising(mc):
+    session = _bare_session("warn")
+    bad = mutate(mc.plan, "PA003")
+    assert session._analyze(bad, "ctx") is bad      # plan still ships
+    stats = session.analysis_stats()
+    assert stats["mode"] == "warn"
+    assert stats["errors"] >= 1
+    assert stats["by_rule"].get("PA003", 0) >= 1
+    assert any("PA003" in f for f in stats["findings"])
+
+
+def test_off_mode_skips_the_analyzer(mc):
+    session = _bare_session("off")
+    assert session._analyze(mutate(mc.plan, "PA001"), "ctx") is not None
+    assert session.analysis_stats()["plans_analyzed"] == 0
+
+
+def test_invalid_analysis_mode_rejected():
+    soc, pats = two_acc_soc(64, 8.0)
+    with pytest.raises(ValueError, match="analysis"):
+        CompileRequest(graphs=[dense_chain("a", [32, 32])], soc=soc,
+                       patterns=pats, analysis="lenient")
+
+
+# ---------------------------------------------------------------------------
+# Concurrency lint
+# ---------------------------------------------------------------------------
+
+
+def test_lockcheck_clean_on_serving_layer():
+    assert check_paths([str(REPO / "src" / "repro" / "serve")]) == []
+
+
+def test_lockcheck_flags_unlocked_write():
+    src = (
+        "import threading\n"
+        "class Store:\n"
+        "    def __init__(self):\n"
+        "        self._lock = threading.Lock()\n"
+        "        self.items = {}\n"
+        "    def put(self, k, v):\n"
+        "        with self._lock:\n"
+        "            self.items[k] = v\n"
+        "    def drop(self, k):\n"
+        "        del self.items[k]\n"
+    )
+    vs = check_source(src, "snippet.py")
+    assert any(v.method == "drop" and v.field == "items" for v in vs)
+
+
+def test_lockcheck_honors_caller_holds_the_lock_marker():
+    src = (
+        "import threading\n"
+        "class Store:\n"
+        "    def __init__(self):\n"
+        "        self._lock = threading.Lock()\n"
+        "        self.items = {}\n"
+        "    def put(self, k, v):\n"
+        "        with self._lock:\n"
+        "            self._put(k, v)\n"
+        "    def _put(self, k, v):\n"
+        "        \"\"\"Caller holds the lock.\"\"\"\n"
+        "        self.items[k] = v\n"
+    )
+    assert check_source(src, "snippet.py") == []

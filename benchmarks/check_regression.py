@@ -252,6 +252,80 @@ def compare_slo(report: dict, baseline: dict,
     return failures
 
 
+def compare_fleet(report: dict) -> list:
+    """Gates on the fleet serving benchmark (``benchmarks.fleet
+    --json``) — absolute properties of the fresh report, no baseline:
+    contention-aware placement must strictly beat BOTH round-robin and
+    the random median on trace makespan (the placement subsystem's
+    reason to exist), no placement may drop a request, the mid-trace
+    SoC failure must complete with zero drops and zero analyzer ERROR
+    diagnostics on migrated-tenant plans, and no engine anywhere in the
+    fleet may report a starvation event."""
+    failures = []
+    placements = report.get("placements") or {}
+    if not placements:
+        return failures
+    ca = placements.get("contention") or {}
+    for rival in ("round_robin", "random"):
+        other = placements.get(rival) or {}
+        got, want = ca.get("makespan_s"), other.get("makespan_s")
+        if got is None or want is None:
+            continue
+        mark = "REGRESSION" if got >= want else "ok"
+        print(f"  {'fleet makespan vs ' + rival:40s} {rival} "
+              f"{want:9.4f} s   contention {got:9.4f} s "
+              f"({(1.0 - got / want) * 100.0:+.1f}%)  {mark}")
+        if got >= want:
+            failures.append(
+                f"fleet: contention-aware makespan {got:.4f} s does not "
+                f"beat {rival} ({want:.4f} s)")
+    for name, row in sorted(placements.items()):
+        dropped = row.get("dropped", 0)
+        starved = row.get("starvation_events", 0)
+        if dropped:
+            failures.append(f"fleet {name}: {dropped} dropped requests "
+                            f"(expected 0)")
+        if starved:
+            failures.append(f"fleet {name}: {starved} starvation events "
+                            f"(expected 0)")
+    fail = report.get("failure") or {}
+    if fail:
+        drops = fail.get("dropped", 0)
+        errs = fail.get("analyzer_errors", 0)
+        migs = fail.get("migrations", 0)
+        mark = "REGRESSION" if (drops or errs) else "ok"
+        print(f"  {'fleet mid-trace SoC failure':40s} {drops:9d} dropped, "
+              f"{errs} analyzer errors over {migs} migration(s)  {mark}")
+        if drops:
+            failures.append(f"fleet failure scenario: {drops} dropped "
+                            f"requests (zero-drop invariant broken)")
+        if errs:
+            failures.append(f"fleet failure scenario: {errs} analyzer "
+                            f"ERROR diagnostic(s) on migrated plans "
+                            f"(expected 0)")
+    pod = report.get("failover_pod") or {}
+    if pod:
+        drops = pod.get("dropped", 0)
+        errs = pod.get("analyzer_errors", 0)
+        migs = pod.get("migrations", 0)
+        bad = drops or errs or not migs
+        mark = "REGRESSION" if bad else "ok"
+        print(f"  {'fleet failover pod (forced migration)':40s} "
+              f"{migs:9d} migration(s), {drops} dropped, {errs} analyzer "
+              f"errors  {mark}")
+        if not migs:
+            failures.append("fleet failover pod: SoC death forced no "
+                            "migration (expected >= 1)")
+        if drops:
+            failures.append(f"fleet failover pod: {drops} dropped "
+                            f"requests (zero-drop invariant broken)")
+        if errs:
+            failures.append(f"fleet failover pod: {errs} analyzer ERROR "
+                            f"diagnostic(s) on migrated plans "
+                            f"(expected 0)")
+    return failures
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("report", help="fresh multi_tenant --json output")
@@ -260,6 +334,10 @@ def main(argv=None) -> int:
                          "baseline.json)")
     ap.add_argument("--tolerance", type=float, default=DEFAULT_TOLERANCE,
                     help="allowed relative makespan growth (default 0.05)")
+    ap.add_argument("--fleet", default=None,
+                    help="optional benchmarks.fleet --json report; "
+                         "gates placement ordering, zero drops and "
+                         "migration analyzer cleanliness")
     args = ap.parse_args(argv)
     with open(args.report) as f:
         report = json.load(f)
@@ -268,6 +346,10 @@ def main(argv=None) -> int:
     print(f"benchmark regression gate (tolerance "
           f"{args.tolerance * 100.0:.0f}%):")
     failures = compare(report, baseline, args.tolerance)
+    if args.fleet:
+        with open(args.fleet) as f:
+            fleet_report = json.load(f)
+        failures += compare_fleet(fleet_report)
     if failures:
         print("\nFAIL:")
         for msg in failures:

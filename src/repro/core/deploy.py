@@ -992,6 +992,16 @@ class PlanStore:
             got = self._solutions.get(frozenset(active))
             return dict(got) if got is not None else None
 
+    def solution_occupancies(self) -> List[FrozenSet[int]]:
+        """Occupancy keys with recorded sidecar solutions — the
+        warm-start export surface: the fleet rebalancer reads these to
+        migrate a drained SoC's tiling solutions into the destination
+        SoC's session (remapped to the destination's tenant indices),
+        so post-migration subset compiles warm-start instead of solving
+        from scratch."""
+        with self._lock:
+            return list(self._solutions.keys())
+
     def nearest_solutions(self, active: Sequence[int]
                           ) -> Optional[Tuple[FrozenSet[int],
                                               Dict[int, TilingSolution]]]:

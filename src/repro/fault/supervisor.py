@@ -43,6 +43,12 @@ class RunReport:
     stragglers: List[int]
     mitigations: int
     final_state: Any
+    # wall seconds from each failure to the restored state (checkpoint
+    # wait + manifest lookup + restore) — one entry per restart, so
+    # recovery cost is a measured quantity, not an assumed one.  The
+    # fleet rebalancer reports its SoC drain/migration latencies in the
+    # same shape (``FleetRebalancer.stats()["recovery_s"]``).
+    recovery_s: List[float] = dataclasses.field(default_factory=list)
 
 
 class Supervisor:
@@ -71,6 +77,7 @@ class Supervisor:
             step = latest + 1
 
         durations: List[float] = []
+        recovery_s: List[float] = []
         slow_streak = 0
         while step < self.cfg.total_steps:
             try:
@@ -102,6 +109,7 @@ class Supervisor:
                 restarts += 1
                 if restarts > self.cfg.max_restarts:
                     raise
+                t_fail = time.perf_counter()
                 self.ckpt.wait()
                 latest = self.ckpt.latest_step()
                 if latest is None:
@@ -110,7 +118,9 @@ class Supervisor:
                     state = self.ckpt.restore(latest,
                                               state_like or init_state)
                     step = latest + 1
+                recovery_s.append(time.perf_counter() - t_fail)
         self.ckpt.wait()
         return RunReport(steps_run=step, restarts=restarts,
                          stragglers=self.report_stragglers,
-                         mitigations=self.mitigations, final_state=state)
+                         mitigations=self.mitigations, final_state=state,
+                         recovery_s=recovery_s)

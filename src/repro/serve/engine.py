@@ -26,7 +26,10 @@ Since the SLO rework the dispatch layer is pluggable:
     occupancy by deadline pressure (priority-weighted, starvation-aged
     urgency per predicted round second) instead of taking the FIFO front
     — and degrades to the bitwise-identical FIFO composition while no
-    queued request carries an SLO;
+    queued request carries an SLO; once SLOs exist, each tenant's queue
+    also dispatches EDF *within the head's priority class* (earliest
+    still-winnable ``deadline_abs_s`` first, deadline-protected and
+    bypass-bounded — see ``MultiModelEngine._edf_index``);
   * an attached :class:`~repro.serve.compiler_thread.BackgroundCompiler`
     moves ``plan_for`` misses off the dispatch path: the engine probes
     the store non-blockingly (``try_plan_for``), serves the compile-alone
@@ -173,6 +176,7 @@ class InferRequest:
     e2e_latency_ms: float = 0.0           # submit -> completion, wall model
     deadline_met: Optional[bool] = None   # None when no deadline was set
     served_on_floor: bool = False         # compile-alone floor round (async)
+    edf_bypasses: int = 0                 # times an EDF pick jumped this one
 
     @property
     def deadline_abs_s(self) -> Optional[float]:
@@ -338,6 +342,25 @@ class MultiModelEngine:
     def pending(self) -> int:
         return sum(len(q) for q in self.queues)
 
+    def backlog_s(self) -> float:
+        """Analytic upper estimate of the queued work, in seconds: every
+        queued request charged its tenant's compile-alone makespan.  It
+        ignores co-scheduling overlap — a deliberate upper bound, used by
+        the fleet router's least-predicted-completion scoring."""
+        return sum(len(q) * self._floor_s(i)
+                   for i, q in enumerate(self.queues))
+
+    def drain_pending(self) -> List[InferRequest]:
+        """Remove and return every queued (not yet dispatched) request,
+        in tenant-then-FIFO order.  The fleet rebalancer calls this on a
+        failed or draining SoC to requeue the unserved work elsewhere —
+        dispatched (``done``) requests are untouched."""
+        out: List[InferRequest] = []
+        for q in self.queues:
+            out.extend(q)
+            q.clear()
+        return out
+
     # -- round composition --------------------------------------------------
 
     def _floor_s(self, tenant: int) -> float:
@@ -432,9 +455,75 @@ class MultiModelEngine:
         lower = max(busy.values(), default=0.0)
         return max(plan.makespan - saved, lower)
 
+    def _edf_index(self, tenant: int) -> int:
+        """Queue index the next dispatch for ``tenant`` pops.
+
+        Plain FIFO (the head, index 0) unless a composer is attached and
+        SLO traffic has been seen — the bitwise-FIFO-without-SLOs
+        property is decided here exactly as in ``_compose_round``.
+
+        With SLOs the queue serves EDF *within the head's priority
+        class*: among queued requests of the head's class, the earliest
+        still-winnable absolute deadline dispatches first (deadline-less
+        requests keep FIFO order among themselves).  Three guards keep
+        the reorder from trading attainment or boundedness away:
+
+          * a deadline that cannot be met even if served immediately
+            (absolute deadline before ``clock_s`` plus the tenant's
+            compile-alone floor) earns no jump — EDF never delays a
+            winnable request for a lost cause;
+          * a jump may not predictably kill a bypassed request's
+            deadline: every deadline-carrying request it would jump
+            must survive one extra wave of delay (``clock_s + 2 *
+            floor``) — the composer's deadline-protection rule applied
+            inside the queue — unless that deadline is already sealed;
+          * a request bypassed ``starvation_rounds`` times blocks any
+            further jump over it, so the structural wait bound
+            stretches by at most the recorded ``edf_bypasses`` (see
+            :meth:`starvation_events`).
+        """
+        q = self.queues[tenant]
+        if self.composer is None or not self._slo_seen or len(q) <= 1:
+            return 0
+        floor = self._floor_s(tenant)
+        winnable_after = self.clock_s + floor
+        safe_after = self.clock_s + 2.0 * floor
+        cls = q[0].priority
+        limit = self.composer.config.starvation_rounds
+
+        def key(r: InferRequest, i: int):
+            dl = r.deadline_abs_s
+            winnable = dl is not None and dl >= winnable_after
+            return (dl if winnable else float("inf"), i)
+
+        best_i, best_key = 0, key(q[0], 0)
+        for i in range(1, len(q)):
+            prev = q[i - 1]
+            if prev.edf_bypasses >= limit:
+                break                      # bypass budget exhausted ahead
+            pdl = prev.deadline_abs_s
+            if pdl is not None and winnable_after <= pdl < safe_after:
+                break                      # jump would endanger a winnable
+            r = q[i]
+            if r.priority != cls:
+                continue
+            k = key(r, i)
+            if k < best_key:
+                best_i, best_key = i, k
+        return best_i
+
     def _pop_head(self, tenant: int) -> InferRequest:
-        r = self.queues[tenant].pop(0)
-        self._head_since[tenant] = self._steps    # next head's tenure starts
+        """Pop the next request for ``tenant``: the FIFO head, or the
+        EDF pick within the head's class once SLOs exist (see
+        :meth:`_edf_index`).  Popping a non-head leaves the head — and
+        its starvation-tenure clock — in place."""
+        k = self._edf_index(tenant)
+        q = self.queues[tenant]
+        for j in range(k):
+            q[j].edf_bypasses += 1
+        r = q.pop(k)
+        if k == 0:
+            self._head_since[tenant] = self._steps   # next head's tenure
         return r
 
     def _finish(self, r: InferRequest, finish_s: float, latency_ms: float,
@@ -590,18 +679,23 @@ class MultiModelEngine:
 
     def starvation_events(self) -> int:
         """Served requests that overstayed the composer's hard bound:
-        ``wait_rounds > starvation_rounds * (depth_at_submit + 1) *
-        max_batch`` — every request ahead at submission pops within one
-        head tenure (the composer force-includes any head older than
-        ``starvation_rounds`` tenure *steps*), each step spans at most
-        ``max_batch`` wave-rounds, and then the request's own tenure
-        starts.  Always 0 without a composer (FIFO serves every active
-        tenant each round)."""
+        ``wait_rounds > starvation_rounds * (depth_at_submit + 1 +
+        edf_bypasses) * max_batch`` — every request ahead at submission
+        pops within one head tenure (the composer force-includes any
+        head older than ``starvation_rounds`` tenure *steps*), each step
+        spans at most ``max_batch`` wave-rounds, and then the request's
+        own tenure starts.  EDF reordering adds at most ``edf_bypasses``
+        extra pops before a request, and ``_edf_index`` caps that count
+        at ``starvation_rounds`` structurally (an exhausted request
+        blocks further jumps).  Always 0 without a composer (FIFO serves
+        every active tenant each round) and identical to the pre-EDF
+        bound when no request was ever bypassed."""
         if self.composer is None:
             return 0
         bound = (self.composer.config.starvation_rounds * self.max_batch)
         return sum(1 for r in self.done.values()
-                   if r.wait_rounds > bound * (r.depth_at_submit + 1))
+                   if r.wait_rounds > bound * (r.depth_at_submit + 1
+                                               + r.edf_bypasses))
 
     def report(self) -> Dict[str, Any]:
         """Aggregate serving stats from the analytic schedule model."""

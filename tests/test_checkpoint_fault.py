@@ -59,6 +59,8 @@ def test_supervisor_restarts_from_checkpoint(tmp_path):
     report = sup.run(_tree(0.0), step_fn)
     assert report.restarts == 1
     assert report.steps_run == 20
+    # one measured recovery latency per restart (failure -> restored)
+    assert len(report.recovery_s) == 1 and report.recovery_s[0] >= 0.0
     # steps 11..12 re-executed after restoring step-10 checkpoint
     assert trace.count(12) == 2 or trace.count(11) == 2
     final = report.final_state

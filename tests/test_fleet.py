@@ -1,0 +1,362 @@
+"""Fleet-scale serving: contention-aware placement, routing, failure
+handling, and cross-SoC migration correctness.
+
+Uses the two-accelerator contention testbed (small dense chains) so the
+whole module compiles in seconds; the fleet artifact cache is shared per
+module-scoped fixture."""
+
+import numpy as np
+import pytest
+
+from repro.core.runtime import execute_plan, init_inputs
+from repro.fleet import (FailureEvent, Fleet, FleetConfig, FleetRebalancer,
+                         FleetRouter, Placement, place_contention_aware,
+                         place_random, place_round_robin, replay_open_loop,
+                         transplant_solutions)
+from repro.serve.admission import Priority
+from repro.soc.testbed import (FORCED_DMA_BW, FORCED_L2_KIB, dense_chain,
+                               two_acc_soc)
+
+
+def _factory():
+    return two_acc_soc(FORCED_L2_KIB, FORCED_DMA_BW)
+
+
+def _graphs():
+    # "a" is the heavy contention-prone class; "b"/"c" lighter
+    return [dense_chain("a", [64] * 5), dense_chain("b", [48] * 4),
+            dense_chain("c", [32] * 4)]
+
+
+def _config(**kw):
+    base = dict(soc_factory=_factory, n_socs=3, capacity=2,
+                requested_tiles=4, time_budget_s=0.25,
+                joint_time_budget_s=0.4, lazy_joint_time_budget_s=0.25,
+                incremental_time_budget_s=0.25)
+    base.update(kw)
+    return FleetConfig(**base)
+
+
+@pytest.fixture(scope="module")
+def fleet3():
+    """3 SoCs x capacity 2, three classes, analytic engines."""
+    return Fleet(_config(), _graphs())
+
+
+TENANTS = ["a", "a", "b", "b", "c"]
+
+
+# ---------------------------------------------------------------------------
+# (a) placement
+# ---------------------------------------------------------------------------
+
+
+def _assert_feasible(p, tenants, n_socs, capacity):
+    assert len(p.assignment) == n_socs
+    assert sorted(p.tenants()) == sorted(tenants)
+    for names in p.assignment:
+        assert len(names) <= capacity
+        assert len(set(names)) == len(names)       # replicas never co-reside
+
+
+def test_placements_feasible(fleet3):
+    for p in (place_round_robin(TENANTS, 3, 2, fleet3.contention),
+              place_random(TENANTS, 3, 2, fleet3.contention, seed=7),
+              place_contention_aware(TENANTS, 3, 2, fleet3.contention)):
+        _assert_feasible(p, TENANTS, 3, 2)
+        assert p.objective_s == max(p.predicted_round_s)
+        # a replica never serves faster than alone -> dilution >= 1
+        assert p.capacity_ratio >= 1.0 - 1e-12
+        # tenants placed + nonzero demand -> nonzero bottleneck util
+        assert p.max_rho > 0.0
+
+
+def test_contention_aware_never_worse_than_baselines(fleet3):
+    """The hybrid ships the best candidate on its own objective
+    (bottleneck utilization under balanced demand), and the round-robin
+    deal is one of its descent starts — so it can never score worse
+    than that baseline, and on this small instance it dominates random
+    seeds too."""
+    ca = place_contention_aware(TENANTS, 3, 2, fleet3.contention)
+    rr = place_round_robin(TENANTS, 3, 2, fleet3.contention)
+    assert ca.max_rho <= rr.max_rho + 1e-9
+    for seed in range(5):
+        rd = place_random(TENANTS, 3, 2, fleet3.contention, seed=seed)
+        assert ca.max_rho <= rd.max_rho + 1e-9
+    # the CP polish + local search report what they did
+    assert ca.stats["cp"] in ("solved", "skipped", "infeasible")
+    assert ca.stats["search_iters"] >= 1
+
+
+def test_capacity_ratio_penalizes_light_under_heavy(fleet3):
+    """Parking the light class 'c' under the heavy class 'a' dilutes
+    'c' capacity by about alone_a / alone_c even though the pair's
+    round excess is small — the failure mode the round-makespan
+    objective cannot see."""
+    from repro.fleet import capacity_ratio
+    c = fleet3.contention
+    packed = [["a", "c"], ["b"], []]       # c queues behind a
+    apart = [["a"], ["b", "c"], []]        # c next to the lighter b
+    assert capacity_ratio(packed, c) > capacity_ratio(apart, c)
+    # singles only -> no dilution at all
+    assert capacity_ratio([["a"], ["b"], ["c"]], c) == \
+        pytest.approx(1.0)
+
+
+def test_utilization_models_round_sharing(fleet3):
+    """soc_utilization mirrors engine round composition: solo rounds
+    for the rate excess, joint rounds for the overlap, so a co-resident
+    with spare rate rides joint rounds at the pair's marginal cost."""
+    from repro.fleet import balanced_utilization, soc_utilization
+    c = fleet3.contention
+    # single class: rho = rate x alone
+    assert soc_utilization(["a"], {"a": 2.0}, c) == \
+        pytest.approx(2.0 * c.alone_s("a"))
+    # equal rates: every round is a joint round
+    assert soc_utilization(["a", "b"], {"a": 1.0, "b": 1.0}, c) == \
+        pytest.approx(c.pair_s("a", "b"))
+    # a light rider costs only the pair's excess over the busy class
+    r0 = soc_utilization(["a", "b"], {"a": 2.0, "b": 0.0}, c)
+    r1 = soc_utilization(["a", "b"], {"a": 2.0, "b": 1.0}, c)
+    assert r1 - r0 == pytest.approx(c.pair_s("a", "b")
+                                    - c.alone_s("a"))
+    # balancing splits a replicated class across its hosts
+    lam = 1.0 / c.alone_s("a")
+    max_rho, _, split = balanced_utilization([["a"], ["a"], []], c,
+                                             {"a": lam})
+    assert max_rho == pytest.approx(0.5, rel=0.05)
+    # the returned split is the routing table realizing that rho
+    assert sum(s.get("a", 0.0) for s in split) == pytest.approx(lam)
+    assert split[2] == {}
+
+
+def test_contention_model_pair_costs(fleet3):
+    c = fleet3.contention
+    # co-residency can't be cheaper than the heavier member alone
+    assert c.pair_s("a", "b") >= max(c.alone_s("a"), c.alone_s("b")) - 1e-12
+    assert c.excess_s("a", "b") >= 0.0
+    # predictor is exact at <=2 tenants and monotone in membership
+    assert c.predict_round_s(["a"]) == pytest.approx(c.alone_s("a"))
+    assert c.predict_round_s(["a", "b"]) == pytest.approx(c.pair_s("a", "b"))
+    assert c.predict_round_s(["a", "b"]) >= c.predict_round_s(["a"]) - 1e-12
+
+
+def test_placement_replica_needs_distinct_socs(fleet3):
+    with pytest.raises(ValueError):
+        place_round_robin(["a", "a", "a", "a"], 3, 2, None)
+    with pytest.raises(ValueError):
+        place_contention_aware(["a"] * 4, 3, 2, fleet3.contention)
+
+
+# ---------------------------------------------------------------------------
+# (b) routing
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def routed_fleet():
+    """A fresh fleet with a replicated class for routing tests; subset
+    occupancies are NOT precompiled (singles only), so on the
+    capacity-3 SoC a *pair* occupancy is a true subset and probes
+    cold (on a capacity-2 SoC every pair is the always-warm full
+    house)."""
+    fleet = Fleet(_config(precompile="singles", capacity=3), _graphs())
+    fleet.apply_placement(Placement(
+        assignment=[("a", "b", "c"), ("a", "c"), ()], method="manual"))
+    return fleet
+
+
+def test_router_spreads_replicated_class_by_backlog(routed_fleet):
+    router = FleetRouter(routed_fleet)
+    for _ in range(6):
+        router.submit("a", arrival_s=0.0)
+    stats = router.audit()
+    # without stepping, backlog accrues on the picked SoC and pushes the
+    # next request to the other replica — both hosts end up with work
+    assert stats["routed_per_soc"].get(0, 0) > 0
+    assert stats["routed_per_soc"].get(1, 0) > 0
+    assert stats["submitted"] == 6 and stats["dropped"] == 0
+    for inst in routed_fleet.live():
+        if inst.engine is not None:
+            inst.engine.run()
+
+
+def test_router_warm_and_cold_probes(routed_fleet):
+    router = FleetRouter(routed_fleet)
+    # singleton occupancies are precompiled -> warm route (ties break
+    # to SoC0, which hosts every class)
+    router.submit("c", arrival_s=100.0)
+    assert router.warm_routes == 1 and router.cold_routes == 0
+    # "b" is hosted only on SoC0, where "c" is already queued: the
+    # {b, c} occupancy is an unprecompiled subset -> cold route
+    router.submit("b", arrival_s=100.0)
+    assert router.cold_routes == 1
+    for inst in routed_fleet.live():
+        if inst.engine is not None:
+            inst.engine.run()
+
+
+def test_router_rejects_unhosted_class(routed_fleet):
+    router = FleetRouter(routed_fleet)
+    with pytest.raises(RuntimeError):
+        router.submit("nope", arrival_s=0.0)
+
+
+def test_router_paces_toward_demand_split(routed_fleet):
+    # a lopsided split for the replicated class: the router's deficit
+    # penalty should hold dispatch near the 1:3 quota even though the
+    # myopic score alone would alternate hosts
+    split = [{"a": 0.25}, {"a": 0.75}, {}]
+    router = FleetRouter(routed_fleet, split=split)
+    for _ in range(20):
+        router.submit("a", arrival_s=0.0)
+    per_soc = router.audit()["routed_per_soc"]
+    assert per_soc.get(1, 0) > per_soc.get(0, 0)
+    assert per_soc.get(1, 0) >= 12          # ~15 expected at quota
+    for inst in routed_fleet.live():
+        if inst.engine is not None:
+            inst.engine.run()
+
+
+# ---------------------------------------------------------------------------
+# (c) failure handling: zero drops, requeue, analyzer-clean migration
+# ---------------------------------------------------------------------------
+
+
+def test_mid_trace_failure_drops_nothing(fleet3):
+    fleet = Fleet(_config(), _graphs())
+    # 4 tenants in 6 slots: survivors keep spare capacity for the
+    # migration (a full fleet has nowhere to re-host and raises)
+    tenants = ["a", "a", "b", "c"]
+    fleet.apply_placement(place_contention_aware(tenants, 3, 2,
+                                                 fleet.contention))
+    router = FleetRouter(fleet)
+    reb = FleetRebalancer(fleet, router)
+    # dense arrivals so the failing SoC has queued work at the event;
+    # fail the SoC hosting "c" — the single-replica class, so the
+    # failure forces a real migration (a/b replicas keep serving)
+    victim = fleet.hosts_of("c")[0].soc_id
+    classes = ["a", "b", "c"]
+    trace = [(i * 1e-4, classes[i % 3],
+              Priority.HIGH if i % 4 == 0 else Priority.NORMAL,
+              1.0 if i % 4 == 0 else None) for i in range(40)]
+    failures = [FailureEvent(at_s=5e-4, soc_id=victim, kind="fail")]
+    summary = replay_open_loop(fleet, router, trace, failures=failures,
+                               rebalancer=reb)
+    audit = summary["router"]
+    assert audit["dropped"] == 0
+    assert audit["queued"] == 0
+    assert audit["served"] == audit["submitted"] - audit["rejected"]
+    assert summary["served"] >= 40            # requeues re-serve elsewhere
+    reb_stats = summary["rebalance"]
+    assert reb_stats["failures"] == 1
+    assert reb_stats["migrations"] >= 1
+    assert reb_stats["analyzer_errors"] == 0
+    assert len(reb_stats["recovery_s"]) == 1
+    assert reb_stats["recovery_s"][0] >= 0.0
+    assert fleet.instances[victim].failed
+    assert not fleet.instances[victim].accepting
+    # every class is still served somewhere
+    for name in classes:
+        assert fleet.hosts_of(name), f"class {name} orphaned"
+
+
+def test_drain_is_graceful(fleet3):
+    fleet = Fleet(_config(), _graphs())
+    fleet.apply_placement(Placement(
+        assignment=[("a",), ("b", "c"), ()], method="manual"))
+    router = FleetRouter(fleet)
+    reb = FleetRebalancer(fleet, router)
+    for i in range(4):
+        router.submit("a", arrival_s=i * 1e-4)
+    recs = reb.drain(0, at_s=1e-3)
+    # the drained SoC finished its own queue (nothing requeued) ...
+    assert fleet.instances[0].engine.pending == 0
+    assert router.requeued == 0
+    # ... and its class was re-hosted on a survivor
+    assert [r.class_name for r in recs] == ["a"]
+    assert fleet.hosts_of("a")
+    assert router.audit()["dropped"] == 0
+
+
+# ---------------------------------------------------------------------------
+# (d) cross-SoC migration correctness: bitwise numerics + analyzer-clean
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def exec_fleet():
+    """2 SoCs, numeric execution on, class 'a' alone on SoC0 and 'b'
+    alone on SoC1 — failing SoC0 forces a real (a, b) migration
+    compile."""
+    fleet = Fleet(_config(n_socs=2, capacity=2, execute=True,
+                          precompile="singles"),
+                  _graphs()[:2])
+    fleet.apply_placement(Placement(
+        assignment=[("a",), ("b",)], method="manual"))
+    return fleet
+
+
+def test_migration_preserves_numerics_bitwise(exec_fleet):
+    fleet = exec_fleet
+    router = FleetRouter(fleet)
+    reb = FleetRebalancer(fleet, router)
+    g_a = fleet.cache.classes["a"]
+    inputs = init_inputs(g_a, seed=123)
+    params = fleet.cache.params_for("a")
+
+    # serve one request on the original host, capture its outputs
+    src = fleet.instances[0]
+    rid_before = src.engine.submit("a", inputs=dict(inputs))
+    src.engine.run()
+    out_before = src.engine.results[rid_before]
+
+    # kill SoC0 -> 'a' migrates onto SoC1 next to 'b'
+    recs = reb.fail(0, at_s=1.0)
+    assert [r.class_name for r in recs] == ["a"]
+    dst = fleet.instances[recs[0].dst_soc]
+    assert dst.hosts("a") and dst.hosts("b")
+    # the destination plans carry zero analyzer ERROR diagnostics
+    assert recs[0].analyzer_errors == 0
+    assert dst.mc.session.analysis_stats()["errors"] == 0
+
+    # serve the SAME inputs on the destination
+    rid_after = dst.engine.submit("a", inputs=dict(inputs))
+    dst.engine.run()
+    out_after = dst.engine.results[rid_after]
+
+    # bitwise: migration must not change a single ULP
+    assert out_before.keys() == out_after.keys()
+    for t in out_before:
+        assert np.array_equal(np.asarray(out_before[t]),
+                              np.asarray(out_after[t])), t
+
+    # and both match the session's single-model reference schedule for
+    # the tiling actually used by the serving occupancy
+    idx = dst.engine.resolve("a")
+    plan = dst.mc.plan_for([idx])
+    ref = dst.mc.session.reference_plan(idx, plan.tenants[0])
+    want = execute_plan(ref, inputs, params)
+    for t in want:
+        assert np.array_equal(np.asarray(out_after[t]),
+                              np.asarray(want[t])), t
+
+
+def test_migration_warm_starts_from_sidecar(exec_fleet):
+    """The (a, b) migration build was seeded from the donated solutions
+    sidecars (the failed SoC's and the destination's own)."""
+    fleet = exec_fleet
+    info = fleet.cache.build_info(("a", "b"))
+    assert info is not None
+    assert info["seeded_occupancies"] >= 1
+
+
+def test_transplant_solutions_remaps_by_name(exec_fleet):
+    """Direct transplant: singleton solutions move across sessions with
+    indices remapped through class names."""
+    fleet = exec_fleet
+    src = fleet.cache.mc_for(("a",)).session
+    dst = fleet.cache.mc_for(("a", "b")).session
+    assert transplant_solutions(src, dst) >= 1
+    a_dst = [g.name for g in dst.request.graphs].index("a")
+    assert dst.store.solutions([a_dst]) is not None

@@ -138,7 +138,12 @@ def test_no_starvation_under_adversarial_traces(events):
     assert eng.pending == 0
     assert len(eng.done) == len(events)
     for r in eng.done.values():
-        assert r.wait_rounds <= bound * (r.depth_at_submit + 1), \
+        # EDF within-class reordering stretches the FIFO bound by the
+        # recorded bypass count, which is itself structurally capped at
+        # starvation_rounds (an exhausted request blocks further jumps)
+        assert r.edf_bypasses <= bound, (r.rid, r.edf_bypasses)
+        assert r.wait_rounds <= bound * (r.depth_at_submit + 1
+                                         + r.edf_bypasses), \
             (r.rid, r.tenant, r.priority, r.wait_rounds, r.depth_at_submit)
     assert eng.starvation_events() == 0
 
@@ -244,6 +249,66 @@ def test_fifo_equivalence_without_slos(events):
     for key in ("rounds", "co_rounds", "subset_co_rounds", "solo_rounds",
                 "solo_dispatches"):
         assert plain.report()[key] == slo.report()[key], key
+
+
+# ---------------------------------------------------------------------------
+# (d) EDF within-queue reordering
+# ---------------------------------------------------------------------------
+
+
+def test_edf_serves_earliest_winnable_deadline_first(mc):
+    """Within one tenant's queue and one priority class, the earlier
+    absolute deadline dispatches first even when submitted later."""
+    eng = slo_engine(mc)
+    base = eng._floor_s(0)
+    r_loose = eng.submit(0, deadline_s=40.0 * base)
+    r_tight = eng.submit(0, deadline_s=3.0 * base)
+    first = eng.step()
+    assert first == [r_tight]
+    eng.run()
+    assert eng.done[r_loose].edf_bypasses == 1
+    assert eng.starvation_events() == 0
+
+
+def test_edf_never_endangers_a_winnable_deadline(mc):
+    """A jump is refused when the bypassed request's deadline is winnable
+    but would not survive one extra wave of delay — FIFO order holds."""
+    eng = slo_engine(mc)
+    base = eng._floor_s(0)
+    r_fragile = eng.submit(0, deadline_s=1.5 * base)   # in [floor, 2*floor)
+    r_tight = eng.submit(0, deadline_s=1.2 * base)
+    assert eng.step() == [r_fragile]
+
+
+def test_edf_lost_cause_earns_no_jump(mc):
+    """A deadline that cannot be met even if served immediately gets no
+    EDF boost: the queue stays FIFO instead of sacrificing throughput
+    order to a lost cause."""
+    eng = slo_engine(mc)
+    base = eng._floor_s(0)
+    r_first = eng.submit(0)                            # deadline-less bulk
+    r_lost = eng.submit(0, deadline_s=0.2 * base)      # already infeasible
+    assert eng.step() == [r_first]
+    eng.run()
+    assert eng.done[r_lost].deadline_met is False
+
+
+def test_edf_bypass_cap_restores_fifo(mc):
+    """A request bypassed ``starvation_rounds`` times blocks further
+    jumps over it, bounding how long EDF can delay deadline-less work."""
+    eng = MultiModelEngine(mc, execute=False,
+                           composer=RoundComposer(
+                               ComposerConfig(starvation_rounds=2)))
+    base = eng._floor_s(0)
+    r0 = eng.submit(0)                                 # deadline-less
+    order = []
+    for _ in range(3):
+        eng.submit(0, deadline_s=100.0 * base)
+        order.extend(eng.step())
+    assert order[:2] != [r0, r0] and r0 == order[2]    # 2 jumps, then r0
+    eng.run()
+    assert eng.done[r0].edf_bypasses == 2
+    assert eng.starvation_events() == 0
 
 
 # ---------------------------------------------------------------------------

@@ -17,7 +17,11 @@ fails, and a mix whose shipped plan is worse than its equal-L2-split
 alternative fails (the proportional split is arbitrated, never imposed).  The static
 plan analyzer's tallies are gated at a hard zero: any ERROR-severity
 diagnostic (PA001-PA008) on any plan a benchmark session emitted fails
-the lane.  Mixes present in
+the lane.  ``--solve`` adds the decomposed-solve and compile-pipeline
+gates (decomposed never worse than monolithic at equal budget with at
+least one strict win, prefetch pool cutting visible cold-miss stall p99
+by >= 2x); ``--fleet`` gates a ``benchmarks.fleet`` report including the
+async serving arm.  Mixes present in
 only one of the two reports are listed but do not fail the gate
 (baselines refresh when the mix list changes).
 
@@ -252,6 +256,97 @@ def compare_slo(report: dict, baseline: dict,
     return failures
 
 
+# cross-arm tolerance for the decomposed-vs-monolithic gate: the two
+# arms are separate wall-budgeted CP sessions, so identical configs can
+# land epsilon apart in either direction — never-worse is judged within
+# this band, while the strict-win count requires a real gap
+SOLVE_TOLERANCE = 0.02
+
+
+def compare_solve(report: dict) -> list:
+    """``--solve`` gates (absolute properties of the fresh report — the
+    decomposed solve and the compile pipeline are compared against their
+    own same-budget baselines inside the report, not a committed file):
+
+    * decomposed-never-worse: on every scaling mix the decomposed
+      session's shipped plan must be within ``SOLVE_TOLERANCE`` of the
+      monolithic-at-equal-budget plan (candidate arbitration makes a
+      real loss impossible; the band absorbs cross-session solver
+      noise), strictly better on at least one mix, with the decomposed
+      solve actually engaged (no silent fallback) and zero analyzer
+      ERROR diagnostics in either arm;
+    * compile pipeline: the churny trace must produce at least one
+      request-visible cold miss on the reactive arm, and the prefetching
+      worker pool must cut the visible stall p99 by at least
+      ``P99_SPEEDUP_FLOOR`` (2x)."""
+    failures = []
+    dec = report.get("decomposed_scaling") or {}
+    for row in dec.get("mixes", []):
+        n = row.get("tenants")
+        mono = (row.get("monolithic") or {}).get("makespan_ms")
+        deco = (row.get("decomposed") or {}).get("makespan_ms")
+        if mono is None or deco is None:
+            continue
+        ratio = deco / mono if mono else 1.0
+        mark = "REGRESSION" if ratio > 1.0 + SOLVE_TOLERANCE else "ok"
+        print(f"  {f'decomposed vs monolithic ({n} tenants)':40s} mono "
+              f"{mono:9.2f} ms   deco {deco:9.2f} ms "
+              f"({(ratio - 1.0) * 100.0:+.1f}%)  {mark}")
+        if ratio > 1.0 + SOLVE_TOLERANCE:
+            failures.append(
+                f"decomposed scaling ({n} tenants): decomposed plan "
+                f"{deco:.2f} ms vs monolithic {mono:.2f} ms at equal "
+                f"budget (+{(ratio - 1.0) * 100.0:.1f}% > "
+                f"{SOLVE_TOLERANCE * 100.0:.0f}%)")
+        darm = row.get("decomposed") or {}
+        if not darm.get("decomposed_solves"):
+            failures.append(
+                f"decomposed scaling ({n} tenants): the decomposed solve "
+                f"never engaged (fallbacks "
+                f"{darm.get('decomposed_fallbacks')})")
+        for arm in ("monolithic", "decomposed"):
+            errs = (row.get(arm) or {}).get("analyzer_errors", 0)
+            if errs:
+                failures.append(
+                    f"decomposed scaling ({n} tenants): {errs} analyzer "
+                    f"ERROR diagnostic(s) in the {arm} arm (expected 0)")
+    if dec.get("mixes"):
+        wins = dec.get("wins", 0)
+        mark = "REGRESSION" if wins < 1 else "ok"
+        print(f"  {'decomposed strict wins':40s} {wins:9d} of "
+              f"{len(dec['mixes'])} mixes (gate >= 1)  {mark}")
+        if wins < 1:
+            failures.append(
+                "decomposed scaling: strictly better on 0 mixes "
+                "(expected >= 1 at equal budget)")
+    pipe = report.get("compile_pipeline") or {}
+    if pipe:
+        react = (pipe.get("reactive") or {})
+        pre = (pipe.get("prefetch") or {})
+        misses = react.get("visible_misses", 0)
+        if not misses:
+            failures.append(
+                "compile pipeline: the churny trace produced no "
+                "request-visible cold miss on the reactive arm — the "
+                "trace no longer exercises the miss path")
+        r99 = react.get("stall_p99_ms")
+        p99 = pre.get("stall_p99_ms")
+        if r99 is not None and p99 is not None:
+            speedup = (r99 / p99) if p99 else float("inf")
+            ok = r99 > 0.0 and speedup >= P99_SPEEDUP_FLOOR
+            mark = "ok" if ok else "REGRESSION"
+            sp = "inf" if p99 == 0.0 else f"{speedup:.1f}"
+            print(f"  {'pipeline visible stall p99':40s} reactive "
+                  f"{r99:9.1f} ms   prefetch {p99:9.1f} ms ({sp}x, "
+                  f"gate {P99_SPEEDUP_FLOOR:.1f}x)  {mark}")
+            if not ok:
+                failures.append(
+                    f"compile pipeline: prefetch stall p99 {p99:.1f} ms "
+                    f"vs reactive {r99:.1f} ms — speedup below "
+                    f"{P99_SPEEDUP_FLOOR:.1f}x")
+    return failures
+
+
 def compare_fleet(report: dict) -> list:
     """Gates on the fleet serving benchmark (``benchmarks.fleet
     --json``) — absolute properties of the fresh report, no baseline:
@@ -323,6 +418,39 @@ def compare_fleet(report: dict) -> list:
             failures.append(f"fleet failover pod: {errs} analyzer ERROR "
                             f"diagnostic(s) on migrated plans "
                             f"(expected 0)")
+    arow = report.get("async_serving") or {}
+    if arow:
+        drops = arow.get("dropped", 0)
+        starved = arow.get("starvation_events", 0)
+        compilers = arow.get("compilers") or {}
+        comp_errs = sum(c.get("errors", 0) for c in compilers.values())
+        failed = sum(c.get("failed_occupancies", 0)
+                     for c in compilers.values())
+        served = arow.get("served")
+        sync_served = (placements.get("contention") or {}).get("served")
+        short = (served is not None and sync_served is not None
+                 and served < sync_served)
+        bad = drops or starved or comp_errs or failed or short
+        mark = "REGRESSION" if bad else "ok"
+        print(f"  {'fleet async serving arm':40s} {arow.get('served', 0):9d}"
+              f" served, {drops} dropped, {comp_errs} compiler errors, "
+              f"{failed} failed keys  {mark}")
+        if drops:
+            failures.append(f"fleet async serving: {drops} dropped "
+                            f"requests (expected 0)")
+        if starved:
+            failures.append(f"fleet async serving: {starved} starvation "
+                            f"events (expected 0)")
+        if comp_errs or failed:
+            failures.append(
+                f"fleet async serving: {comp_errs} background-compile "
+                f"error(s), {failed} permanently failed compile key(s) "
+                f"(expected 0)")
+        if short:
+            failures.append(
+                f"fleet async serving: served {served} < synchronous "
+                f"contention arm {sync_served} — the compile pipeline "
+                f"cost requests")
     return failures
 
 
@@ -336,8 +464,15 @@ def main(argv=None) -> int:
                     help="allowed relative makespan growth (default 0.05)")
     ap.add_argument("--fleet", default=None,
                     help="optional benchmarks.fleet --json report; "
-                         "gates placement ordering, zero drops and "
-                         "migration analyzer cleanliness")
+                         "gates placement ordering, zero drops, "
+                         "migration analyzer cleanliness and the async "
+                         "serving arm")
+    ap.add_argument("--solve", action="store_true",
+                    help="also gate the decomposed joint solve (never "
+                         "worse than monolithic at equal budget, >= 1 "
+                         "strict win, analyzer-clean) and the compile "
+                         "pipeline (visible cold-miss stall p99 cut "
+                         ">= 2x by the prefetching pool)")
     args = ap.parse_args(argv)
     with open(args.report) as f:
         report = json.load(f)
@@ -346,6 +481,8 @@ def main(argv=None) -> int:
     print(f"benchmark regression gate (tolerance "
           f"{args.tolerance * 100.0:.0f}%):")
     failures = compare(report, baseline, args.tolerance)
+    if args.solve:
+        failures += compare_solve(report)
     if args.fleet:
         with open(args.fleet) as f:
             fleet_report = json.load(f)

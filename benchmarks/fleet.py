@@ -80,7 +80,7 @@ def build_config(n_socs: int, capacity: int = 2) -> FleetConfig:
         n_socs=n_socs, capacity=capacity, requested_tiles=8,
         time_budget_s=0.5, joint_time_budget_s=1.0,
         lazy_joint_time_budget_s=0.5, incremental_time_budget_s=0.5,
-        execute=False)
+        execute=False, prefetch=True, max_workers=2)
 
 
 def build_tenants(n_socs: int, capacity: int) -> list:
@@ -355,6 +355,33 @@ def run(n_socs: int = 16, capacity: int = 2, duration_rounds: int = 60,
                                tenants, high, duration_rounds,
                                verbose=verbose)
 
+    # -- async serving arm: the same contention placement replayed with
+    # the background compile pipeline on — every SoC hosting a mix
+    # shares ONE BackgroundCompiler through the PlanCache (fleet-wide
+    # compile dedup) and each host seeds the occupancy-lattice
+    # prefetcher with its tenant set.  With the cache warm this must
+    # serve identically to the synchronous arm (gated by
+    # ``check_regression --fleet``); the compiler counters prove the
+    # pool ran clean (no failed keys).
+    async_config = dataclasses.replace(config, async_compile=True)
+    async_summary = replay_placement(async_config, graphs, cache,
+                                     contention, placements["contention"],
+                                     trace)
+    async_row = _row(async_summary)
+    async_row["compilers"] = cache.stats()["compilers"]
+    cache.stop_compilers()
+    if verbose:
+        n_comp = len(async_row["compilers"])
+        submitted = sum(c.get("submitted", 0)
+                        for c in async_row["compilers"].values())
+        dup = sum(c.get("duplicates", 0)
+                  for c in async_row["compilers"].values())
+        print(f"\n  async serving arm (shared compile pools): makespan "
+              f"{async_row['makespan_s']:.4f} s, served "
+              f"{async_row['served']}, dropped {async_row['dropped']}; "
+              f"{n_comp} shared pool(s), {submitted} submit(s), "
+              f"{dup} fleet-wide dedup bounce(s)")
+
     return {
         "socs": n_socs, "capacity": capacity, "tenants": len(tenants),
         "classes": list(CLASSES), "requests": len(trace),
@@ -365,6 +392,7 @@ def run(n_socs: int = 16, capacity: int = 2, duration_rounds: int = 60,
         "placements": results,
         "failure": fail_row,
         "failover_pod": pod_row,
+        "async_serving": async_row,
         "plan_cache": cache.stats(),
     }
 

@@ -79,7 +79,8 @@ from repro.serve.admission import Priority, RoundComposer
 from repro.serve.compiler_thread import BackgroundCompiler
 from repro.serve.engine import MultiModelEngine
 from repro.soc.carfield import carfield_patterns, carfield_soc
-from repro.soc.testbed import FORCED_L2_KIB, forced_contention_setup
+from repro.soc.testbed import (FORCED_L2_KIB, forced_contention_setup,
+                               hetero_setup)
 
 MIXES = [
     ("autoencoder", "ds_cnn"),
@@ -610,6 +611,157 @@ def run_async_first_round(rows, verbose: bool = True):
             "floor_rounds": eng.floor_rounds}
 
 
+# ---------------------------------------------------------------------------
+# Decomposed joint solve at scale: 10/16 tenants, equal budget both ways
+# ---------------------------------------------------------------------------
+
+
+DECOMPOSED_TENANT_COUNTS = (10, 16)
+
+
+def run_decomposed_scaling(verbose: bool = True,
+                           counts=DECOMPOSED_TENANT_COUNTS,
+                           joint_budget_s: float = 1.5):
+    """The joint CP's time budget stops scaling past ~10 tenants: one
+    monolithic solve over every tenant's tile variables burns the whole
+    budget exploring a space whose useful structure is per-device.  The
+    decomposed solve clusters tenants by dominant-device affinity (with
+    oversized clusters split to ``decompose_max_cluster`` members so
+    subproblem size stays bounded), solves the clusters concurrently
+    under split L2/DMA budgets, and
+    reconciles with stage-2 cuts — then both candidates are arbitrated,
+    so at EQUAL total budget the decomposed session can never ship a
+    worse plan (gated by ``check_regression --solve``) and wins outright
+    once the monolithic solve stops converging."""
+    mixes = []
+    for n in counts:
+        soc, pats, graphs = hetero_setup(n, widths=(48, 48, 48, 48),
+                                         l2_kib=64)
+        arms = {}
+        for label, dec in (("monolithic", "off"), ("decomposed", "on")):
+            t0 = time.perf_counter()
+            mc = compile_multi(
+                graphs, soc, pats, requested_tiles=8,
+                time_budget_s=0.3, max_hint_rounds=1,
+                joint_time_budget_s=joint_budget_s,
+                lazy_joint_time_budget_s=min(1.0, joint_budget_s),
+                decompose=dec, max_workers=4)
+            sess = mc.session
+            solver = sess.solver_stats()
+            arms[label] = {
+                "makespan_ms": soc.cycles_to_ms(mc.plan.makespan),
+                "plan_origin": mc.plan.origin,
+                "compile_wall_s": time.perf_counter() - t0,
+                "solver_solves": solver["solves"],
+                "solver_nodes": solver["nodes"],
+                "budget_exhausted": solver["budget_exhausted"],
+                "decomposed_solves": solver["decomposed_solves"],
+                "decomposed_fallbacks": solver["decomposed_fallbacks"],
+                "decomposed_cuts": solver["decomposed_cuts"],
+                "decomposed": solver["decomposed"],
+                "analyzer_errors": sess.analysis_stats()["errors"],
+            }
+        mono = arms["monolithic"]["makespan_ms"]
+        deco = arms["decomposed"]["makespan_ms"]
+        row = {"tenants": n, "joint_budget_s": joint_budget_s,
+               "monolithic": arms["monolithic"],
+               "decomposed": arms["decomposed"],
+               "win": bool(deco < mono - 1e-9)}
+        mixes.append(row)
+        if verbose:
+            if n == counts[0]:
+                print(f"\ndecomposed joint solve at scale (hetero SoC, "
+                      f"{joint_budget_s:.1f} s joint budget both ways):")
+                print(f"  {'tenants':>7s} {'monolithic (ms)':>16s} "
+                      f"{'decomposed (ms)':>16s} {'gain':>7s}  "
+                      f"clusters/cuts  origin")
+            st = arms["decomposed"]["decomposed"] or {}
+            gain = (1.0 - deco / mono) * 100.0 if mono else 0.0
+            print(f"  {n:7d} {mono:16.2f} {deco:16.2f} {gain:6.1f}%  "
+                  f"{st.get('clusters', '-')}/{st.get('cuts', '-'):>4}  "
+                  f"{arms['decomposed']['plan_origin']}")
+    wins = sum(1 for r in mixes if r["win"])
+    if verbose:
+        print(f"  decomposed <= monolithic at equal budget on "
+              f"{len(mixes)}/{len(mixes)} mixes; strictly better on "
+              f"{wins}")
+    return {"mixes": mixes, "wins": wins}
+
+
+# ---------------------------------------------------------------------------
+# Compile pipeline: churny trace, reactive-only vs prefetching worker pool
+# ---------------------------------------------------------------------------
+
+
+def run_compile_pipeline(verbose: bool = True, time_budget_s: float = 1.0,
+                         trace=CHURN_TRACE):
+    """Request-visible cold-miss compile latency on the churny trace,
+    reactive-only (the PR-6 behaviour: a miss enqueues its own compile,
+    which lands *after* the degraded floor round) vs the worker pool
+    with the occupancy-lattice prefetcher (every resolve also enqueues
+    the Hamming-adjacent neighbors at lower priority, so the next churn
+    step's plan is usually compiled before it is requested).
+
+    The per-round *visible stall* is the background compile wall the
+    round's occupancy itself paid (0 when the plan was already cached —
+    i.e. prefetched in an earlier round).  Reported per arm: visible
+    misses, stall p50/p99 over all rounds, and the prefetcher counters;
+    ``check_regression --solve`` gates the prefetch arm's p99 at <= half
+    the reactive arm's."""
+    soc = carfield_soc()
+    pats = carfield_patterns()
+    out = {"mix": list(PARTIAL_MIX),
+           "trace": [list(occ) for occ in trace]}
+    for label, prefetch in (("reactive", False), ("prefetch", True)):
+        graphs = [edge.ALL_MODELS[m]() for m in PARTIAL_MIX]
+        session = compile_multi(graphs, soc, pats,
+                                time_budget_s=time_budget_s).session
+        bg = BackgroundCompiler(session, start=False, max_workers=2,
+                                prefetch=prefetch)
+        stalls, visible = [], 0
+        for occ in trace:
+            ids = sorted(occ)
+            missed = session.try_plan_for(ids) is None
+            if missed:                 # the engine's reactive miss path
+                visible += 1
+                bg.submit(ids)
+            bg.observe(ids)            # every resolve feeds the lattice
+            bg.run_pending()           # pool drains between rounds
+            if missed:
+                ev = next((e for e in reversed(session.miss_events)
+                           if e["occupancy"] == tuple(ids)), None)
+                stalls.append(ev["wall_s"] * 1e3 if ev else 0.0)
+            else:
+                stalls.append(0.0)
+        out[label] = {
+            "visible_misses": visible,
+            "stall_p50_ms": _pct(stalls, 0.50),
+            "stall_p99_ms": _pct(stalls, 0.99),
+            "compiler": bg.stats(),
+            "latency": {k: session.compile_latency_stats()[k]
+                        for k in ("foreground", "background", "prefetch")},
+        }
+    react = out["reactive"]["stall_p99_ms"]
+    pre = out["prefetch"]["stall_p99_ms"]
+    out["p99_speedup"] = (react / pre) if pre else None
+    if verbose:
+        print(f"\ncompile pipeline ({' + '.join(PARTIAL_MIX)}, "
+              f"{len(trace)}-round churny trace): reactive vs "
+              f"prefetching pool")
+        print(f"  {'':10s} {'visible misses':>14s} {'stall p50':>10s} "
+              f"{'stall p99':>10s} {'prefetched':>11s}")
+        for label in ("reactive", "prefetch"):
+            r = out[label]
+            print(f"  {label:10s} {r['visible_misses']:14d} "
+                  f"{r['stall_p50_ms']:10.1f} {r['stall_p99_ms']:10.1f} "
+                  f"{r['compiler']['prefetch_compiled']:11d}")
+        sp = out["p99_speedup"]
+        print(f"  visible cold-miss p99: "
+              f"{react:.1f} ms -> {pre:.1f} ms "
+              f"({'inf' if sp is None else f'{sp:.1f}'}x; gate >= 2x)")
+    return out
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true",
@@ -627,6 +779,8 @@ def main(argv=None) -> None:
                       None)
     partial = run_partial_occupancy(verbose=True, mc=partial_mc)
     incremental = run_incremental_resolve(verbose=True)
+    decomposed = run_decomposed_scaling(verbose=True)
+    pipeline = run_compile_pipeline(verbose=True)
     slo = run_slo_trace(rows, verbose=True)
     if args.json:
         report = {
@@ -644,6 +798,8 @@ def main(argv=None) -> None:
             },
             "partial_occupancy": partial,
             "incremental_resolve": incremental,
+            "decomposed_scaling": decomposed,
+            "compile_pipeline": pipeline,
             "slo_serving": slo,
             "async_first_round": async_first,
             "analysis": analysis_summary(rows, mc),

@@ -32,6 +32,50 @@ against the old equal split so the shipped plan is never worse.  The
 demo below replays a churny trace and prints each miss's warm-start
 source and compile wall time (``session.miss_events``).
 
+Compile pipeline
+----------------
+
+Past ~10 tenants the monolithic joint CP stops converging inside its
+time budget, and at fleet scale the occupancy lattice makes solve
+*count* the bottleneck.  Three opt-in layers keep the compile pipeline
+ahead of the request stream:
+
+* **Decomposed joint solve** (``CompileRequest(decompose="auto")``,
+  :mod:`repro.core.decompose`): tenants are clustered by dominant-device
+  affinity (each fused region credited to the cheapest device offering
+  it), oversized clusters split to ``decompose_max_cluster`` members,
+  and the clusters solved concurrently under split L2/DMA budgets —
+  then reconciled with Benders-style cuts from the exact stage-2
+  ``schedule_multi`` evaluation (a cluster whose realized makespan
+  exceeds its CP relaxation gets a bigger L2 slice and an overflow cut,
+  iterated to a bounded fixpoint with an any-time incumbent).  The
+  decomposed solutions enter candidate arbitration *alongside* the
+  monolithic joint solve, so at equal total budget the session can
+  never ship a worse plan — and wins outright once the monolithic
+  solve stops converging (gated by ``check_regression --solve``).
+
+* **Worker pool + occupancy-lattice prefetcher**
+  (:class:`~repro.serve.compiler_thread.BackgroundCompiler` with
+  ``max_workers``/``prefetch``): background miss compiles drain through
+  a bounded priority pool (reactive misses always outrank speculation),
+  while the prefetcher predicts likely next occupancies — Hamming-1
+  neighbors of recently served occupancies plus external hints such as
+  a fleet placement's per-SoC tenant sets — ranked by predicted request
+  probability x staleness, so the next churn step's plan is usually
+  compiled before it is requested.
+
+* **Fleet-wide dedup**: every SoC hosting a class mix shares ONE
+  ``BackgroundCompiler`` through the fleet's ``PlanCache``
+  (``FleetConfig(async_compile=True)``), so an identical compile key
+  queued or in flight anywhere in the rack bounces every other SoC's
+  submit of the same key.
+
+``MultiModelEngine.report()["solver"]`` exposes the per-session solver
+telemetry (nodes, wall, budget exhaustion, incumbent sources, per-
+context and decomposed tallies), and ``compile_latency_stats()`` splits
+the latency percentiles by source (foreground/background/prefetch) so
+speculative compiles cannot mask a foreground regression.
+
 Serving & SLOs
 --------------
 

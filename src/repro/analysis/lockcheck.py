@@ -25,6 +25,17 @@ completes), and so is any method whose docstring contains the marker
 phrase ``"caller holds the lock"`` (the documented private-helper
 convention in ``core.deploy``).
 
+Inference has a blind spot the worker-pool state exposed: a field the
+pool mutates under the lock in only ONE method but *reads* everywhere
+(or a field whose locked write lives behind a mutating call the lint
+does not model) is silently unguarded.  A class can therefore *declare*
+its guarded fields in its docstring::
+
+    Lock-guarded: _queued, _recent, _hints
+
+Declared fields join the inferred set and are enforced in every
+non-exempt method — whether or not any locked write was seen.
+
 Run as a CI lane::
 
     PYTHONPATH=src python -m repro.analysis.lockcheck src/repro/serve
@@ -46,6 +57,7 @@ MUTATING_CALLS = {"append", "appendleft", "add", "pop", "popleft",
                   "popitem", "discard", "remove", "clear", "update",
                   "extend", "insert", "setdefault", "sort", "reverse"}
 EXEMPT_MARKER = "caller holds the lock"
+DECLARED_MARKER = "lock-guarded:"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -162,12 +174,25 @@ def _methods(cls: ast.ClassDef):
             yield node
 
 
+def _declared_guards(cls: ast.ClassDef) -> Set[str]:
+    """Fields the class docstring explicitly declares lock-guarded
+    (``Lock-guarded: f1, f2, ...`` — one or more such lines)."""
+    out: Set[str] = set()
+    for line in (ast.get_docstring(cls) or "").splitlines():
+        s = line.strip()
+        if s.lower().startswith(DECLARED_MARKER):
+            rest = s[len(DECLARED_MARKER):]
+            out |= {f.strip().rstrip(".,;") for f in rest.split(",")
+                    if f.strip()}
+    return out
+
+
 def check_class(cls: ast.ClassDef, path: str) -> List[Violation]:
     locks = _lock_attrs(cls)
     if not locks:
         return []
     scans = {}
-    guarded: Set[str] = set()
+    guarded: Set[str] = set(_declared_guards(cls))
     for m in _methods(cls):
         scan = _MethodScan(locks)
         for stmt in m.body:

@@ -85,7 +85,10 @@ def compile_multi(graphs: Sequence[Graph], soc: SoC,
                   incremental: bool = True,
                   incremental_time_budget_s: float = 1.5,
                   l2_split: str = "proportional",
-                  analysis: str = "strict"
+                  analysis: str = "strict",
+                  decompose: str = "auto",
+                  decompose_min_tenants: int = 6,
+                  max_workers: int = 2
                   ) -> MultiCompiledModel:
     """Compile N independent models into one multi-tenant co-schedule.
 
@@ -122,7 +125,17 @@ def compile_multi(graphs: Sequence[Graph], soc: SoC,
     against the equal split so it never ships a worse plan) or the legacy
     "equal"; ``analysis`` sets the static plan-analyzer mode the session
     runs over every plan before PlanStore insertion (``"strict"`` raises
-    on ERROR diagnostics, ``"warn"`` records them, ``"off"`` skips)."""
+    on ERROR diagnostics, ``"warn"`` records them, ``"off"`` skips).
+
+    ``decompose`` controls the decomposed joint solve
+    (:func:`repro.core.decompose.solve_decomposed`): ``"auto"`` engages
+    it at ``decompose_min_tenants`` or more active tenants, ``"on"``
+    always offers it, ``"off"`` never — the decomposed candidate is
+    arbitrated against the monolithic joint / best-response candidates,
+    so enabling it can only improve the shipped plan.  ``max_workers``
+    bounds both the decomposed solve's cluster-solver threads and the
+    default :class:`~repro.serve.compiler_thread.BackgroundCompiler`
+    pool size."""
     assert len(graphs) >= 1
     request = CompileRequest(graphs=list(graphs), soc=soc, patterns=patterns,
                              mode=mode, requested_tiles=requested_tiles,
@@ -134,5 +147,8 @@ def compile_multi(graphs: Sequence[Graph], soc: SoC,
                              lazy_joint_time_budget_s=lazy_joint_time_budget_s,
                              incremental=incremental,
                              incremental_time_budget_s=incremental_time_budget_s,
-                             l2_split=l2_split, analysis=analysis)
+                             l2_split=l2_split, analysis=analysis,
+                             decompose=decompose,
+                             decompose_min_tenants=decompose_min_tenants,
+                             max_workers=max_workers)
     return DeploymentSession(request).compile()

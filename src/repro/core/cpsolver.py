@@ -34,10 +34,50 @@ class Solution:
     optimal: bool
     nodes: int
     wall_s: float
+    # -- solver telemetry (PR 9): budget exhaustion is observable, not a
+    # silent fallback.  ``budget_exhausted`` is True when the search hit
+    # its node/time limit before proving optimality (== ``not optimal``
+    # for a solve that returned; kept separate so callers can log it
+    # without re-deriving).  ``incumbent_source`` names where the
+    # returned incumbent came from: "hint" / "seed" (a warm start was
+    # never improved by search) or "search" (B&B found it or improved on
+    # every start).
+    budget_exhausted: bool = False
+    incumbent_source: str = "search"
+
+    def telemetry(self) -> Tuple[int, float, bool, str]:
+        """``(nodes, wall_s, budget_exhausted, incumbent_source)``."""
+        return (self.nodes, self.wall_s, self.budget_exhausted,
+                self.incumbent_source)
 
 
 class Infeasible(Exception):
     pass
+
+
+def split_time_budget(total_s: float, weights: Sequence[float],
+                      min_frac: float = 0.10) -> List[float]:
+    """Split one wall-clock solve budget across subproblems.
+
+    The decomposed joint solve (``core.decompose``) runs one CP per
+    device cluster; each gets a share of the total budget proportional
+    to ``weights`` (typically variable counts — B&B effort scales with
+    the search space), floored at ``min_frac`` of the equal share so a
+    tiny cluster still gets enough time to prove optimality.  Degenerate
+    weights fall back to the equal split.  Shares sum to ``total_s``."""
+    n = len(weights)
+    if n == 0:
+        return []
+    if n == 1:
+        return [float(total_s)]
+    total_w = sum(max(float(w), 0.0) for w in weights)
+    if total_w <= 0.0:
+        return [float(total_s) / n] * n
+    floor = min_frac * total_s / n
+    raw = [max(float(w), 0.0) / total_w * total_s for w in weights]
+    out = [max(r, floor) for r in raw]
+    scale = total_s / sum(out)
+    return [r * scale for r in out]
 
 
 @dataclasses.dataclass
@@ -188,9 +228,11 @@ class CpModel:
         best_obj = math.inf
         dive: Optional[List[int]] = \
             list(hint) if hint is not None else None
-        starts = [hint] if hint is not None else []
-        starts.extend(seeds or [])
-        for start in starts:
+        starts: List[Tuple[str, Optional[Sequence[int]]]] = \
+            [("hint", hint)] if hint is not None else []
+        starts.extend(("seed", s) for s in (seeds or []))
+        incumbent_source = "search"
+        for source, start in starts:
             if start is None or len(start) != self.num_vars:
                 continue
             hx = self._clamp(start)
@@ -199,6 +241,7 @@ class CpModel:
                 if obj < best_obj:
                     best_x, best_obj = hx, obj
                     dive = list(start)
+                    incumbent_source = source
 
         nodes = 0
         exhausted = True
@@ -234,6 +277,7 @@ class CpModel:
                     obj = self._obj_value(x)
                     if obj < best_obj - 1e-9:
                         best_obj, best_x = obj, list(x)
+                        incumbent_source = "search"
                 continue
             i = max(free, key=lambda j: (hi[j] - lo[j]) * (impact[j] + 1e-9))
             if hint_vals is not None and lo[i] <= hint_vals[i] <= hi[i]:
@@ -263,7 +307,9 @@ class CpModel:
             raise Infeasible("no feasible solution found within limits")
         return Solution(values=best_x, objective=best_obj,
                         optimal=exhausted, nodes=nodes,
-                        wall_s=time.perf_counter() - t0)
+                        wall_s=time.perf_counter() - t0,
+                        budget_exhausted=not exhausted,
+                        incumbent_source=incumbent_source)
 
 
 class JointCpModel:
@@ -291,6 +337,7 @@ class JointCpModel:
         self._keyed: Dict[str, Tuple[Dict[int, float], float]] = {}
         self._tenant_of: List[int] = []        # var index -> tenant
         self._finalized = False
+        self.cuts = 0                          # Benders-style cuts added
 
     # -- building ------------------------------------------------------------
     def new_int(self, tenant: int, lo: int, hi: int, name: str = "") -> int:
@@ -307,6 +354,18 @@ class JointCpModel:
     def add_capacity(self, coeffs: Dict[int, float], cap: float) -> None:
         """Shared capacity: sum(coeffs * x) <= cap (spans tenants)."""
         self.model.add_le(dict(coeffs), -float(cap))
+
+    def add_cut(self, coeffs: Dict[int, float], bound: float) -> None:
+        """A Benders-style cut: ``sum(coeffs * x) <= bound``.
+
+        Structurally identical to a capacity constraint, but added *after*
+        model construction by the decomposition layer's reconciliation
+        loop (``core.decompose``) — a cluster whose stage-2 realized
+        makespan exceeded its relaxation gets its shared-resource
+        appetite bounded before the re-solve.  Counted in ``cuts`` for
+        solver telemetry."""
+        self.model.add_le(dict(coeffs), -float(bound))
+        self.cuts += 1
 
     def add_load(self, key: str, coeffs: Dict[int, float],
                  const: float = 0.0) -> None:

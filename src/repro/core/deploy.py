@@ -60,6 +60,7 @@ from typing import (Callable, Dict, FrozenSet, Hashable, List, Optional,
                     Sequence, Set, Tuple)
 
 from repro.core import cpsolver
+from repro.core.decompose import solve_decomposed
 from repro.core.ir import Graph
 from repro.core.patterns import Pattern
 from repro.core.rewrite import TiledGraph, rewrite
@@ -83,6 +84,13 @@ ASYNC_MODES = ("matcha", "matcha_nt")
 # "equal" is the blind 1/n split, "proportional" weights each tenant by
 # the linearized working set of its chosen tiling (DORY-style)
 L2_SPLITS = ("equal", "proportional")
+
+# whether the joint solve is also attempted *decomposed* (per-device-
+# cluster subproblems reconciled by Benders-style cuts, see
+# repro.core.decompose): "auto" decomposes only at or above
+# ``decompose_min_tenants`` (small mixes gain nothing from splitting),
+# "on" always attempts it, "off" never does
+DECOMPOSE_MODES = ("auto", "on", "off")
 
 # what the session does with static-analyzer diagnostics on each plan it
 # is about to insert into the PlanStore: "strict" raises on any ERROR,
@@ -259,7 +267,25 @@ class CompileRequest:
     lands in the :class:`PlanStore`: ``"strict"`` (default) raises on
     any ERROR-severity diagnostic, ``"warn"`` records diagnostics in
     :meth:`DeploymentSession.analysis_stats` but still ships the plan,
-    ``"off"`` skips the analyzer."""
+    ``"off"`` skips the analyzer.
+
+    ``decompose`` controls the decomposed joint solve
+    (:mod:`repro.core.decompose` — per-device-cluster subproblems under
+    split L2/DMA budgets, reconciled with Benders-style cuts from the
+    stage-2 evaluation): ``"auto"`` (default) attempts it only for mixes
+    of at least ``decompose_min_tenants`` tenants, ``"on"`` always,
+    ``"off"`` never.  The decomposed solutions are arbitrated as one
+    more candidate set alongside the monolithic joint solve — never a
+    replacement — so enabling decomposition cannot ship a worse plan.
+    ``decompose_cut_rounds`` bounds the reconciliation fixpoint, and
+    ``decompose_max_cluster`` caps subproblem size (oversized device
+    clusters are split into balanced sub-clusters, so per-subproblem CP
+    search stays bounded as mixes grow to dozens of tenants).
+
+    ``max_workers`` sizes the compile-side thread pools: the decomposed
+    solve's concurrent per-cluster solves, and the
+    :class:`~repro.serve.compiler_thread.BackgroundCompiler` worker pool
+    when a serving engine constructs one from this request."""
     graphs: Sequence[Graph]
     soc: SoC
     patterns: Sequence[Pattern]
@@ -278,6 +304,11 @@ class CompileRequest:
     l2_split: str = "proportional"
     store_max_entries: int = 64
     analysis: str = "strict"
+    decompose: str = "auto"
+    decompose_min_tenants: int = 6
+    decompose_cut_rounds: int = 2
+    decompose_max_cluster: int = 4
+    max_workers: int = 2
 
     def __post_init__(self) -> None:
         if self.mode not in MODES:
@@ -314,6 +345,21 @@ class CompileRequest:
         if self.analysis not in ANALYSIS_MODES:
             raise ValueError(f"unknown analysis mode {self.analysis!r}; "
                              f"expected one of {ANALYSIS_MODES}")
+        if self.decompose not in DECOMPOSE_MODES:
+            raise ValueError(f"unknown decompose mode {self.decompose!r}; "
+                             f"expected one of {DECOMPOSE_MODES}")
+        if self.decompose_min_tenants < 2:
+            raise ValueError(f"decompose_min_tenants must be >= 2: "
+                             f"{self.decompose_min_tenants}")
+        if self.decompose_cut_rounds < 0:
+            raise ValueError(f"decompose_cut_rounds must be >= 0: "
+                             f"{self.decompose_cut_rounds}")
+        if self.decompose_max_cluster < 1:
+            raise ValueError(f"decompose_max_cluster must be >= 1: "
+                             f"{self.decompose_max_cluster}")
+        if self.max_workers < 1:
+            raise ValueError(f"max_workers must be >= 1: "
+                             f"{self.max_workers}")
 
 
 # ---------------------------------------------------------------------------
@@ -380,9 +426,10 @@ def default_strategy_names(mode: str,
     tile-centric search only for full matcha, the all-or-nothing corner and
     HEFT for both asynchronous modes, a single sequential trial for the
     tvm / match ablation baselines.  The multi-tenant re-tiling strategies
-    end with ``joint-cp`` — the joint cross-tenant CP runs *after* the
-    best-response strategies so the session's two-phase fixpoint can report
-    an exact best-response incumbent for the joint solve to beat."""
+    end with ``joint-cp`` / ``decomposed-cp`` — the joint cross-tenant CPs
+    run *after* the best-response strategies so the session's two-phase
+    fixpoint can report an exact best-response incumbent for the joint
+    solves to beat."""
     if mode == "matcha":
         names = ["tile-centric", "all-or-nothing", "heft"]
     elif mode == "matcha_nt":
@@ -390,7 +437,8 @@ def default_strategy_names(mode: str,
     else:
         return ["sequential-baseline"]
     if retile_for_contention:
-        names += ["contention-retile", "complementary", "joint-cp"]
+        names += ["contention-retile", "complementary", "joint-cp",
+                  "decomposed-cp"]
     return names
 
 
@@ -573,10 +621,36 @@ class JointTilingStrategy(CandidateStrategy):
                 lambda tgs: add(tgs, "contention-retile"))
 
 
+class DecomposedTilingStrategy(CandidateStrategy):
+    """The decomposed joint solve (:mod:`repro.core.decompose`):
+    per-device-cluster subproblems under split L2/DMA budgets, solved
+    concurrently and reconciled with Benders-style cuts generated from
+    the exact stage-2 evaluation.  Contributes its combined tiling set
+    as one more candidate *alongside* the monolithic ``joint-cp``
+    solve — the session's arbitration keeps whichever evaluates better,
+    so ``decomposed <= best-response`` holds by construction.  A
+    degenerate decomposition (single device cluster, or no cluster
+    solved) contributes nothing; the monolithic joint / best-response
+    candidates already cover that case."""
+
+    name = "decomposed-cp"
+    retiles = True
+    joint = True               # second fixpoint phase, like joint-cp
+
+    def retile_sets(self, session, hints, plan, add) -> None:
+        req = session.request
+        if not req.joint_tiling or req.mode not in ASYNC_MODES:
+            return
+        tgs = session.decomposed_tilings(list(range(len(req.graphs))),
+                                         warm=list(plan.tenants))
+        if tgs is not None:
+            add(tgs)
+
+
 for _strategy in (TileCentricStrategy(), AllOrNothingStrategy(),
                   HeftStrategy(), SequentialBaselineStrategy(),
                   ContentionRetileStrategy(), ComplementaryStrategy(),
-                  JointTilingStrategy()):
+                  JointTilingStrategy(), DecomposedTilingStrategy()):
     register_strategy(_strategy)
 
 
@@ -1069,6 +1143,17 @@ class DeploymentSession:
         self.joint_fallbacks = 0       # joint solves that fell back to
         #                                best-response (budget exhausted)
         self.lazy_compiles = 0         # background submit_compile landings
+        self.decomposed_solves = 0     # successful decomposed joint solves
+        self.decomposed_fallbacks = 0  # degenerate clustering / no cluster
+        #                                solution (monolithic path engages)
+        self.decomposed_cuts = 0       # Benders-style cuts applied
+        self.decomposed_stats: Optional[Dict[str, object]] = None
+        # aggregated CP-solver telemetry: every stage-1 solve's (nodes,
+        # wall_s, budget_exhausted, incumbent_source), tallied by context
+        # ("single" / "joint" / "decomposed") — solver_stats()
+        self._solver: Dict[str, object] = {
+            "solves": 0, "nodes": 0, "wall_s": 0.0, "budget_exhausted": 0,
+            "incumbent_source": {}, "by_context": {}}
         self.incremental_hits = 0      # misses warm-started from a neighbor
         self.prop_split_wins = 0       # proportional L2 split won arbitration
         self.equal_split_wins = 0      # ... or the equal split held
@@ -1131,6 +1216,7 @@ class DeploymentSession:
                                       requested_tiles=tiles,
                                       time_budget_s=req.time_budget_s,
                                       host_tiles=spec.host_tiles)
+                self._note_solve("single", sol)
                 tg = rewrite(g, req.soc, sol)
                 plan = schedule(tg, req.soc, spec.stage1)
             except Exception:
@@ -1417,9 +1503,128 @@ class DeploymentSession:
             # must not masquerade as budget exhaustion.
             self.joint_fallbacks += 1
             return None
+        # one CpModel solve produced all N TilingSolutions — they share
+        # telemetry, so record it once
+        if sols:
+            self._note_solve("joint", sols[0])
         tgs = [rewrite(g, req.soc, s) for g, s in zip(graphs, sols)]
         self.joint_solves += 1
         return tgs
+
+    def decomposed_tilings(self, ids: Sequence[int],
+                           warm: Optional[Sequence[TiledGraph]] = None,
+                           time_budget_s: Optional[float] = None
+                           ) -> Optional[List[TiledGraph]]:
+        """The decomposed counterpart of :meth:`joint_tilings`
+        (:func:`repro.core.decompose.solve_decomposed`): per-device-
+        cluster subproblems under split L2/DMA budgets, solved
+        concurrently on up to ``request.max_workers`` threads, then
+        reconciled with Benders-style cuts generated from the exact
+        stage-2 ``schedule_multi`` evaluation.  Runs under the same
+        (clamped) budget rules as the monolithic solve; returns ``None``
+        when decomposition is disabled, the mix is below
+        ``decompose_min_tenants`` (in ``"auto"`` mode), the clustering
+        degenerates to fewer than two device clusters, or no cluster
+        produced a solution — counted in ``decomposed_fallbacks``, and
+        the monolithic / best-response candidates cover the round."""
+        req = self.request
+        if (req.decompose == "off" or req.mode not in ASYNC_MODES
+                or not req.joint_tiling):
+            return None
+        if req.decompose == "auto" and len(ids) < req.decompose_min_tenants:
+            return None
+        budget = (time_budget_s if time_budget_s is not None
+                  else req.joint_time_budget_s)
+        budget = min(budget, req.joint_time_budget_s)
+        if budget <= 0.0:
+            with self._lock:
+                self.decomposed_fallbacks += 1
+            return None
+        graphs = [req.graphs[i] for i in ids]
+        budgets = ([req.budgets[i] for i in ids]
+                   if req.budgets is not None else None)
+
+        def evaluate(sols: List[TilingSolution]
+                     ) -> Tuple[float, List[float]]:
+            tgs = [rewrite(g, req.soc, s) for g, s in zip(graphs, sols)]
+            plan = schedule_multi(tgs, req.soc, budgets=budgets,
+                                  objective=self.objective)
+            return plan.makespan, list(plan.tenant_makespans)
+
+        warm_sols = ([tg.solution for tg in warm]
+                     if warm is not None else None)
+        result = solve_decomposed(
+            graphs, req.soc, req.patterns,
+            requested_tiles=req.requested_tiles, mode=req.mode,
+            time_budget_s=budget, warm=warm_sols, evaluate=evaluate,
+            max_cut_rounds=req.decompose_cut_rounds,
+            max_cluster_size=req.decompose_max_cluster,
+            max_workers=req.max_workers)
+        if result is None:
+            with self._lock:
+                self.decomposed_fallbacks += 1
+            return None
+        # each cluster was one CpModel solve; its members share telemetry
+        for c in result.clusters:
+            if c.tenants:
+                self._note_solve("decomposed",
+                                 result.solutions[c.tenants[0]])
+        with self._lock:
+            self.decomposed_solves += 1
+            self.decomposed_cuts += result.cuts
+            self.decomposed_stats = result.stats()
+        return [rewrite(g, req.soc, s)
+                for g, s in zip(graphs, result.solutions)]
+
+    # -- solver telemetry ---------------------------------------------------
+
+    def _note_solve(self, context: str, sol: TilingSolution) -> None:
+        """Tally one stage-1 CP solve's telemetry (mirrored from
+        ``cpsolver.Solution`` onto the :class:`TilingSolution`)."""
+        with self._lock:
+            s = self._solver
+            s["solves"] += 1
+            s["nodes"] += int(sol.solver_nodes)
+            s["wall_s"] += float(sol.wall_s)
+            if sol.budget_exhausted:
+                s["budget_exhausted"] += 1
+            src = getattr(sol, "incumbent_source", "search")
+            srcs = s["incumbent_source"]
+            srcs[src] = srcs.get(src, 0) + 1
+            ctx = s["by_context"].setdefault(
+                context, {"solves": 0, "nodes": 0, "wall_s": 0.0,
+                          "budget_exhausted": 0})
+            ctx["solves"] += 1
+            ctx["nodes"] += int(sol.solver_nodes)
+            ctx["wall_s"] += float(sol.wall_s)
+            if sol.budget_exhausted:
+                ctx["budget_exhausted"] += 1
+
+    def solver_stats(self) -> Dict[str, object]:
+        """Aggregated CP-solver telemetry over every stage-1 solve this
+        session ran — total nodes / wall seconds, how many solves
+        exhausted their budget (the previously *silent* fallback
+        trigger), where incumbents came from (``hint`` / ``seed`` /
+        ``search``), split by context (``single`` compile-alone solves,
+        monolithic ``joint`` solves, ``decomposed`` per-cluster solves)
+        — plus the decomposition counters.  Surfaced as
+        ``MultiModelEngine.report()["solver"]``."""
+        with self._lock:
+            out: Dict[str, object] = {
+                "solves": self._solver["solves"],
+                "nodes": self._solver["nodes"],
+                "wall_s": self._solver["wall_s"],
+                "budget_exhausted": self._solver["budget_exhausted"],
+                "incumbent_source": dict(self._solver["incumbent_source"]),
+                "by_context": {k: dict(v) for k, v
+                               in self._solver["by_context"].items()},
+                "decomposed_solves": self.decomposed_solves,
+                "decomposed_fallbacks": self.decomposed_fallbacks,
+                "decomposed_cuts": self.decomposed_cuts,
+                "decomposed": (dict(self.decomposed_stats)
+                               if self.decomposed_stats is not None
+                               else None)}
+        return out
 
     # -- occupancy-indexed plans --------------------------------------------
 
@@ -1469,7 +1674,8 @@ class DeploymentSession:
         return self.store.peek(ids, touch=touch)
 
     def submit_compile(self, active: Sequence[int],
-                       joint_budget_s: Optional[float] = None) -> bool:
+                       joint_budget_s: Optional[float] = None,
+                       source: str = "background") -> bool:
         """Compile-and-cache the occupancy for ``active``, exactly once
         under concurrent submission (the background compiler's worker
         entry point — also safe to call inline).
@@ -1482,7 +1688,14 @@ class DeploymentSession:
         plan AND landed it in the store; False when the occupancy was
         already cached, in flight on another thread, the (always-cached)
         full house, or lost the store race to a concurrent blocking
-        ``plan_for``."""
+        ``plan_for``.
+
+        ``source`` labels the miss event for the per-origin
+        compile-latency split (:meth:`compile_latency_stats`):
+        ``"background"`` for reactive miss compiles, ``"prefetch"`` for
+        speculative occupancy-lattice prefetches."""
+        if source not in ("background", "prefetch"):
+            raise ValueError(f"unknown compile source {source!r}")
         self.compile()
         ids = self._check_active(active)
         key = frozenset(ids)
@@ -1496,7 +1709,8 @@ class DeploymentSession:
                   else self.request.lazy_joint_time_budget_s)
         landed = False
         try:
-            plan = self._compile_subset(ids, joint_budget_s=budget)
+            plan = self._compile_subset(ids, joint_budget_s=budget,
+                                        source=source)
             # a concurrent blocking plan_for may have landed first; only
             # a plan that actually entered the store counts as compiled
             landed = self.store.seed(ids, plan)
@@ -1515,7 +1729,8 @@ class DeploymentSession:
             self.plan_for(subset)
 
     def _compile_subset(self, ids: List[int],
-                        joint_budget_s: Optional[float] = None
+                        joint_budget_s: Optional[float] = None,
+                        source: str = "foreground"
                         ) -> MultiExecutionPlan:
         """Per-occupancy compile: tiling is re-decided for the subset
         instead of blindly reusing the full-house winner's tilings.
@@ -1611,6 +1826,11 @@ class DeploymentSession:
                                       time_budget_s=budget, seeds=seeds)
             if jtgs is not None:
                 offer(jtgs, "joint-cp")
+            dtgs = self.decomposed_tilings(
+                ids, warm=(warm_tgs if warm_tgs is not None else alone_tgs),
+                time_budget_s=budget)
+            if dtgs is not None:
+                offer(dtgs, "decomposed-cp")
 
         prop = self._subset_prop_budgets(ids, alt_sets, labels, budgets)
         plan = schedule_multi(full_tgs, req.soc,
@@ -1649,6 +1869,7 @@ class DeploymentSession:
                             f"tenants {ids}")
         event = {"occupancy": tuple(ids),
                  "wall_s": time.perf_counter() - t0,
+                 "source": source,
                  "warm": neighbor is not None,
                  "neighbor": (tuple(sorted(neighbor))
                               if neighbor is not None else None),
@@ -1673,7 +1894,8 @@ class DeploymentSession:
         if (budgets is not None or req.l2_split != "proportional"
                 or len(ids) < 2):
             return None
-        for label in ("joint-cp", "warm-neighbor", "compile-alone"):
+        for label in ("joint-cp", "decomposed-cp", "warm-neighbor",
+                      "compile-alone"):
             if label in labels:
                 tgs = alt_sets[labels.index(label)]
                 break
@@ -1711,9 +1933,13 @@ class DeploymentSession:
 
     def compile_latency_stats(self) -> Dict[str, object]:
         """p50/p99 wall time of the subset-miss compiles this session ran
-        (``miss_events``), overall and split by warm (neighbor-seeded)
-        vs cold (from-scratch) — the serving engine surfaces this in its
-        ``report()``."""
+        (``miss_events``), overall, split by warm (neighbor-seeded) vs
+        cold (from-scratch), and split by origin — ``foreground``
+        (blocking ``plan_for`` misses), ``background`` (reactive
+        ``submit_compile`` misses) and ``prefetch`` (speculative
+        occupancy-lattice prefetches) — so a busy prefetcher cannot mask
+        a foreground-latency regression in the blended percentiles.  The
+        serving engine surfaces this in its ``report()``."""
         with self._lock:
             events = list(self.miss_events)
 
@@ -1732,6 +1958,9 @@ class DeploymentSession:
         out = block(events)
         out["warm"] = block([e for e in events if e["warm"]])
         out["cold"] = block([e for e in events if not e["warm"]])
+        for src in ("foreground", "background", "prefetch"):
+            out[src] = block([e for e in events
+                              if e.get("source", "foreground") == src])
         with self._lock:
             out["incremental_hits"] = self.incremental_hits
             out["prop_split_wins"] = self.prop_split_wins

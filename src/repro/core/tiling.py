@@ -88,6 +88,11 @@ class TilingSolution:
     optimal: bool
     solver_nodes: int
     wall_s: float
+    # solver telemetry (PR 9), mirrored from ``cpsolver.Solution`` so the
+    # session can aggregate per-solve budget-exhaustion / incumbent
+    # provenance without holding onto raw solver objects
+    budget_exhausted: bool = False
+    incumbent_source: str = "search"
 
     def per_device_load(self) -> Dict[str, float]:
         load: Dict[str, float] = {}
@@ -385,7 +390,9 @@ def optimize_tiling(g: Graph, soc: SoC, patterns: Sequence[Pattern],
                           tiles_per_op=tiles_per_op,
                           objective=model._obj_value(values),
                           optimal=sol.optimal,
-                          solver_nodes=sol.nodes, wall_s=sol.wall_s)
+                          solver_nodes=sol.nodes, wall_s=sol.wall_s,
+                          budget_exhausted=sol.budget_exhausted,
+                          incumbent_source=sol.incumbent_source)
 
 
 def _greedy_hint(g: Graph, mvars: List[_MVar], tiles: Dict[str, int],
@@ -597,12 +604,22 @@ class JointTilingProblem:
 
     def __init__(self, graphs: Sequence[Graph], soc: SoC,
                  patterns: Sequence[Pattern], requested_tiles: int = 16,
-                 mode: str = "matcha") -> None:
+                 mode: str = "matcha", l2_budget: Optional[float] = None,
+                 dma_scale: float = 1.0) -> None:
+        """``l2_budget`` caps this problem's shared-L2 slice (default the
+        whole ``soc.l2``) and ``dma_scale`` (>= 1) inflates its DMA time
+        terms — together they let the decomposition layer
+        (``core.decompose``) build a per-device-cluster subproblem that
+        only owns its *split* of the shared resources, so concurrent
+        cluster solves cannot jointly overcommit the L2 or the DMA
+        engine."""
         assert mode in ("matcha", "matcha_nt")
+        assert dma_scale >= 1.0, f"dma_scale must be >= 1: {dma_scale}"
         self.graphs = list(graphs)
         self.soc = soc
         self.mode = mode
         self.requested_tiles = requested_tiles
+        self.dma_scale = float(dma_scale)
         self.joint = cpsolver.JointCpModel()
         self.mvars: List[List[_MVar]] = []
         self.tiles_per_op: List[Dict[str, int]] = []
@@ -656,19 +673,23 @@ class JointTilingProblem:
                         f"no pattern (wildcard missing?)")
                 self.joint.add_eq({mv.t_var: 1.0 for mv in mvs},
                                   -float(tiles[op.name]))
-            dma_const += self._planned_load_bytes(g) / soc.dma_l3_bandwidth
+            dma_const += (self._planned_load_bytes(g) * self.dma_scale
+                          / soc.dma_l3_bandwidth)
 
         # one shared-L2 capacity constraint over all tenants, with a
         # quantized overflow variable priced as swap round-trips on the
         # shared system DMA
-        cap = float(soc.l2.size)
+        cap = float(l2_budget) if l2_budget is not None \
+            else float(soc.l2.size)
+        self.l2_cap = cap
         o_hi = max(int(math.ceil(max(max_ws - cap, 0.0) / L2_QUANTUM)), 0)
         self.o_var = self.joint.new_int(-1, 0, o_hi, "l2_overflow")
         cap_coeffs[self.o_var] = -float(L2_QUANTUM)
         self.joint.add_capacity(cap_coeffs, cap)
         self._cap_coeffs = dict(cap_coeffs)
         self.joint.add_load(
-            "dma", {self.o_var: 2.0 * L2_QUANTUM / soc.dma_l3_bandwidth},
+            "dma", {self.o_var: 2.0 * L2_QUANTUM * self.dma_scale
+                    / soc.dma_l3_bandwidth},
             const=dma_const)
 
     def _planned_load_bytes(self, g: Graph) -> float:
@@ -729,9 +750,18 @@ class JointTilingProblem:
     def _set_overflow(self, hint: List[int]) -> None:
         used = sum(c * hint[v] for v, c in self._cap_coeffs.items()
                    if v != self.o_var)
-        over = max(used - float(self.soc.l2.size), 0.0)
+        over = max(used - self.l2_cap, 0.0)
         hint[self.o_var] = min(int(math.ceil(over / L2_QUANTUM)),
                                self.joint.model._hi[self.o_var])
+
+    def add_overflow_cut(self, max_quanta: int) -> None:
+        """Benders-style allocation cut from the decomposition layer:
+        bound this subproblem's L2 overflow at ``max_quanta`` quanta.  A
+        cluster whose stage-2 realized makespan exceeded its relaxation
+        was under-pricing the shared L2/DMA it spills onto; the cut
+        forces the re-solve toward tilings that live within (close to)
+        the cluster's allocation instead."""
+        self.joint.add_cut({self.o_var: 1.0}, float(max(max_quanta, 0)))
 
     def warm_start(self, solutions: Optional[Sequence[TilingSolution]]
                    ) -> Optional[List[int]]:
@@ -778,7 +808,9 @@ class JointTilingProblem:
                 mode=self.mode, assignments=assignments,
                 tiles_per_op=dict(self.tiles_per_op[i]),
                 objective=sol.objective, optimal=sol.optimal,
-                solver_nodes=sol.nodes, wall_s=sol.wall_s))
+                solver_nodes=sol.nodes, wall_s=sol.wall_s,
+                budget_exhausted=sol.budget_exhausted,
+                incumbent_source=sol.incumbent_source))
         return out
 
 

@@ -55,6 +55,7 @@ from repro.core.deploy import (CompileRequest, DeploymentSession,
                                MultiCompiledModel)
 from repro.core.ir import Graph
 from repro.serve.admission import Priority, RoundComposer
+from repro.serve.compiler_thread import BackgroundCompiler
 from repro.serve.engine import MultiModelEngine
 
 
@@ -79,6 +80,16 @@ class FleetConfig:
     execute: bool = False            # numeric execution in fleet engines
     max_batch: int = 1
     seed: int = 0
+    # background compile pipeline: with async_compile on, every SoC
+    # hosting a given class mix shares ONE BackgroundCompiler (a
+    # max_workers pool over the mix's shared session) through the
+    # PlanCache — identical compile keys dedupe fleet-wide, and misses
+    # serve the compile-alone floor instead of stalling the round.
+    # prefetch additionally compiles predicted-next occupancies
+    # speculatively (the occupancy-lattice prefetcher).
+    async_compile: bool = False
+    prefetch: bool = False
+    max_workers: int = 2
 
     def __post_init__(self) -> None:
         if self.n_socs < 1:
@@ -87,6 +98,9 @@ class FleetConfig:
             raise ValueError(f"capacity must be >= 1: {self.capacity}")
         if self.precompile not in ("all", "singles", "none"):
             raise ValueError(f"unknown precompile mode: {self.precompile}")
+        if self.max_workers < 1:
+            raise ValueError(f"max_workers must be >= 1: "
+                             f"{self.max_workers}")
 
 
 def transplant_solutions(src: DeploymentSession,
@@ -143,6 +157,10 @@ class PlanCache:
         self._mcs: Dict[Tuple[str, ...], MultiCompiledModel] = {}
         self._params: Dict[str, Any] = {}
         self._build_info: Dict[Tuple[str, ...], Dict[str, Any]] = {}
+        # one shared BackgroundCompiler per distinct mix (async_compile):
+        # every SoC hosting the mix submits into the same pool, so an
+        # identical compile key in flight anywhere dedupes fleet-wide
+        self._compilers: Dict[Tuple[str, ...], BackgroundCompiler] = {}
         self._hits = 0
         self._builds = 0
 
@@ -211,6 +229,37 @@ class PlanCache:
                                          "seeded_occupancies": seeded}
             return self._mcs[key]
 
+    def compiler_for(self, names: Sequence[str]
+                     ) -> Optional[BackgroundCompiler]:
+        """The mix's shared background compile pool (built on first use
+        over the mix's shared session, ``config.max_workers`` threads,
+        prefetcher per ``config.prefetch``).  Returns ``None`` when the
+        compiled artifact carries no session.  Sharing one compiler per
+        mix is the fleet-wide dedup: a compile key queued or in flight
+        for *any* SoC hosting the mix bounces every other SoC's submit
+        of the same key."""
+        key = self.key_for(names)
+        mc = self.mc_for(key)
+        session = getattr(mc, "session", None)
+        if session is None:
+            return None
+        with self._lock:
+            got = self._compilers.get(key)
+            if got is None:
+                got = BackgroundCompiler(
+                    session, max_workers=self.config.max_workers,
+                    prefetch=self.config.prefetch)
+                self._compilers[key] = got
+            return got
+
+    def stop_compilers(self, timeout_s: float = 30.0) -> None:
+        """Stop every mix's background compile pool (shutdown barrier
+        for benchmarks and tests)."""
+        with self._lock:
+            compilers = list(self._compilers.values())
+        for c in compilers:
+            c.stop(timeout_s=timeout_s)
+
     def build_info(self, names: Sequence[str]) -> Optional[Dict[str, Any]]:
         with self._lock:
             got = self._build_info.get(tuple(sorted(names)))
@@ -236,7 +285,9 @@ class PlanCache:
             return {"hits": self._hits, "builds": self._builds,
                     "mixes": sorted("+".join(k) for k in self._mcs),
                     "build_wall_s": {"+".join(k): round(v["wall_s"], 3)
-                                     for k, v in self._build_info.items()}}
+                                     for k, v in self._build_info.items()},
+                    "compilers": {"+".join(k): c.stats()
+                                  for k, c in self._compilers.items()}}
 
     def cycles_to_s(self, cycles: float) -> float:
         return self.soc.cycles_to_ms(cycles) / 1e3
@@ -881,10 +932,25 @@ class SoCInstance:
         if self.engine is not None:
             self.retired.append(self.engine)
             self.epoch += 1
+        compiler = (self.cache.compiler_for(key)
+                    if self.config.async_compile else None)
         eng = MultiModelEngine(mc, params_list=params,
                                composer=RoundComposer(),
                                execute=self.config.execute,
-                               max_batch=self.config.max_batch)
+                               max_batch=self.config.max_batch,
+                               async_compile=(compiler if compiler
+                                              is not None else False))
+        if compiler is not None and len(key) > 1:
+            # this SoC's tenant set seeds the occupancy-lattice
+            # prefetcher: the singleton and leave-one-out occupancies
+            # are the Hamming-1 shells around the hosted full house —
+            # the mixes serving actually dispatches as queues churn
+            n = len(key)
+            occs = [[i] for i in range(n)]
+            if n > 2:
+                occs += [[j for j in range(n) if j != i]
+                         for i in range(n)]
+            compiler.prefetch_hint(occs)
         eng.advance_clock(clock)
         self.classes, self.mc, self.engine = key, mc, eng
         return time.perf_counter() - t0
@@ -940,6 +1006,11 @@ class Fleet:
         for inst, names in zip(self.instances, placement.assignment):
             if names:
                 inst.host(names)
+
+    def stop_compilers(self, timeout_s: float = 30.0) -> None:
+        """Stop the shared per-mix background compile pools (see
+        :meth:`PlanCache.stop_compilers`)."""
+        self.cache.stop_compilers(timeout_s=timeout_s)
 
     def live(self) -> List[SoCInstance]:
         return [i for i in self.instances if not i.failed]

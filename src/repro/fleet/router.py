@@ -217,6 +217,14 @@ class FleetRouter:
         engine_rid = inst.engine.submit(class_name, priority=priority,
                                         deadline_s=deadline_s,
                                         arrival_s=arrival_s)
+        if engine_rid is not None and inst.engine.compiler is not None:
+            # the set of classes now queued on the chosen SoC is its
+            # likeliest next dispatch occupancy — hand it to the shared
+            # compiler's prefetcher so the subset plan can be ready
+            # before the round composes it
+            active = [i for i, q in enumerate(inst.engine.queues) if q]
+            if active:
+                inst.engine.compiler.prefetch_hint([active])
         with self._lock:
             rid = self._next_rid
             self._next_rid += 1

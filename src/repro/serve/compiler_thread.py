@@ -15,13 +15,28 @@ compile off the dispatch path:
     ``DeploymentSession._compile_subset`` guarantees the eventual subset
     plan will beat or tie, so serving the floor never costs more than
     1x the plan the round is waiting for);
-  * the worker thread runs
+  * a bounded **worker pool** (``max_workers`` threads, sized from
+    ``CompileRequest.max_workers`` by default) drains the queue through
     :meth:`~repro.core.deploy.DeploymentSession.submit_compile`, which
-    compiles the occupancy with the smaller
+    compiles each occupancy with the smaller
     ``CompileRequest.lazy_joint_time_budget_s`` joint budget, exactly
-    once per occupancy (concurrent misses dedupe), and lands the plan in
-    the store — the next round at that occupancy dispatches the real
-    subset co-schedule.
+    once per occupancy even under pool concurrency (the compiler's
+    queued/in-flight set and the session's own in-flight set both
+    dedupe), and lands the plan in the store — the next round at that
+    occupancy dispatches the real subset co-schedule.
+
+With ``prefetch=True`` the compiler also *predicts* likely next
+occupancies and compiles them speculatively at lower queue priority
+(the **occupancy-lattice prefetcher**): candidates are the Hamming-
+adjacent neighbors of recently observed occupancies (one tenant joins
+or leaves — how serving mixes actually churn) plus any externally
+registered hints (:meth:`prefetch_hint` — e.g. the fleet placement's
+per-SoC tenant sets), ranked by predicted request probability
+(recency-decayed neighbor counts + hint weights) times staleness (how
+long since the candidate was last attempted; already-cached occupancies
+have zero staleness and are never re-prefetched).  Reactive miss jobs
+always outrank prefetch jobs in the queue, so prefetching can only fill
+idle worker capacity, never delay a miss.
 
 For deterministic tests (and fake-clock serving simulations) construct
 with ``start=False`` and pump jobs synchronously with
@@ -31,27 +46,33 @@ with ``start=False`` and pump jobs synchronously with
 from __future__ import annotations
 
 import dataclasses
+import itertools
+import math
 import queue
 import threading
-from typing import FrozenSet, List, Optional, Sequence
+from collections import OrderedDict
+from typing import Dict, FrozenSet, List, Optional, Sequence, Tuple
 
 
 @dataclasses.dataclass(frozen=True)
 class CompileJob:
-    """One queued background compile: an occupancy to materialize."""
+    """One queued background compile: an occupancy to materialize.
+    ``source`` labels the session's miss event (``"background"`` for
+    reactive miss compiles, ``"prefetch"`` for speculative ones)."""
     occupancy: FrozenSet[int]
+    source: str = "background"
 
 
 class BackgroundCompiler:
-    """Owns the compile queue and (optionally) the worker thread.
+    """Owns the compile queue and (optionally) the worker pool.
 
     ``submit(active)`` enqueues an occupancy unless it is already cached
     or already queued/in-flight (returns whether a job was enqueued).
     ``run_pending()`` drains the queue on the caller's thread — the
-    deterministic mode tests use; with ``start=True`` (the default) a
-    daemon worker drains it continuously.  ``drain()`` blocks until
-    every submitted job has finished compiling, for shutdown barriers
-    and benchmarks that want the steady state.
+    deterministic mode tests use; with ``start=True`` (the default)
+    ``max_workers`` daemon workers drain it continuously.  ``drain()``
+    blocks until every submitted job has finished compiling, for
+    shutdown barriers and benchmarks that want the steady state.
 
     A raised compile no longer poisons its occupancy permanently (a
     transient joint-CP timeout would pin that subset to the concat floor
@@ -61,12 +82,38 @@ class BackgroundCompiler:
     — rounds, not wall time, so the deterministic fake-clock mode backs
     off too).  Only after ``max_retries + 1`` raised compiles is the
     occupancy poisoned; :meth:`clear_failed` lifts the poison (e.g.
-    after an operator fixes the underlying condition)."""
+    after an operator fixes the underlying condition).
+
+    Queue, retry and prefetcher state is shared by all pool workers and
+    declared for the concurrency lint (``repro.analysis.lockcheck``):
+
+    Lock-guarded: _queued, _failed, _attempts, _retry_after, _tick,
+    Lock-guarded: _inflight, _recent, _hints, _last_attempt
+    """
 
     def __init__(self, session, start: bool = True,
-                 max_retries: int = 2, backoff_rounds: int = 1) -> None:
+                 max_retries: int = 2, backoff_rounds: int = 1,
+                 max_workers: Optional[int] = None,
+                 prefetch: bool = False, prefetch_depth: int = 4,
+                 recent_window: int = 8) -> None:
+        if max_workers is None:
+            # duck-typed sessions (test fakes) may not carry a request
+            max_workers = getattr(getattr(session, "request", None),
+                                  "max_workers", 1)
+        if max_workers < 1:
+            raise ValueError(f"max_workers must be >= 1: {max_workers}")
         self.session = session
-        self._jobs: "queue.Queue[Optional[CompileJob]]" = queue.Queue()
+        self.max_workers = int(max_workers)
+        self.prefetch = bool(prefetch)
+        self.prefetch_depth = int(prefetch_depth)
+        self.recent_window = int(recent_window)
+        # priority queue: (priority, seq, job|None).  Reactive misses go
+        # in at priority 0.0, prefetches at 1/(1+score) in (0, 1], the
+        # stop sentinel at +inf — so misses beat prefetches and the
+        # sentinel drains everything first (stop() semantics)
+        self._jobs: "queue.PriorityQueue[Tuple[float, int, Optional[CompileJob]]]" = \
+            queue.PriorityQueue()
+        self._seq = itertools.count()
         self._lock = threading.Lock()
         self._queued: set = set()          # occupancies queued or running
         self._failed: set = set()          # poisoned: retries exhausted
@@ -75,7 +122,13 @@ class BackgroundCompiler:
         self._tick = 0                     # submit rounds seen (backoff clock)
         self._idle = threading.Condition(self._lock)
         self._inflight = 0
-        self._thread: Optional[threading.Thread] = None
+        self._threads: List[threading.Thread] = []
+        # prefetcher state (all guarded by _lock): recently observed
+        # occupancies in recency order, external hint weights, and the
+        # tick each candidate was last attempted at (its staleness clock)
+        self._recent: "OrderedDict[FrozenSet[int], None]" = OrderedDict()
+        self._hints: Dict[FrozenSet[int], float] = {}
+        self._last_attempt: Dict[FrozenSet[int], int] = {}
         self.max_retries = max_retries
         self.backoff_rounds = backoff_rounds
         self.submitted = 0
@@ -83,6 +136,8 @@ class BackgroundCompiler:
         self.duplicates = 0                # submits deduped away
         self.retries = 0                   # re-submits after a raised compile
         self.backoffs = 0                  # submits deferred by backoff
+        self.prefetch_submitted = 0        # speculative jobs enqueued
+        self.prefetch_compiled = 0         # ... that landed a plan
         self.errors: List[str] = []
         self.max_errors = 32               # errors list retention cap
         if start:
@@ -92,37 +147,44 @@ class BackgroundCompiler:
 
     @property
     def running(self) -> bool:
-        return self._thread is not None and self._thread.is_alive()
+        return any(t.is_alive() for t in self._threads)
 
     def start(self) -> None:
-        if self.running:
-            return
-        self._thread = threading.Thread(target=self._worker,
-                                        name="matcha-bg-compile",
-                                        daemon=True)
-        self._thread.start()
+        """(Re)fill the worker pool to ``max_workers`` live threads."""
+        self._threads = [t for t in self._threads if t.is_alive()]
+        for k in range(len(self._threads), self.max_workers):
+            t = threading.Thread(target=self._worker,
+                                 name=f"matcha-bg-compile-{k}",
+                                 daemon=True)
+            t.start()
+            self._threads.append(t)
 
     def stop(self, timeout_s: float = 30.0) -> None:
-        """Finish queued jobs, then stop the worker thread.  If the
-        worker is still mid-compile when the timeout expires, it stays
-        registered (``running`` remains True) so a later ``drain`` or
-        ``start`` cannot race a zombie worker on the same queue; it will
-        exit at the sentinel once the compile finishes."""
-        if not self.running:
+        """Finish queued jobs, then stop the worker pool.  Any worker
+        still mid-compile when the timeout expires stays registered
+        (``running`` remains True) so a later ``drain`` or ``start``
+        cannot race a zombie worker on the same queue; it will exit at
+        its sentinel once the compile finishes."""
+        live = [t for t in self._threads if t.is_alive()]
+        if not live:
+            self._threads = []
             return
-        self._jobs.put(None)               # sentinel: drain then exit
-        self._thread.join(timeout=timeout_s)
-        if not self._thread.is_alive():
-            self._thread = None
+        for _ in live:                     # one sentinel per live worker
+            self._jobs.put((math.inf, next(self._seq), None))
+        per_join = timeout_s / len(live)   # split the budget across joins
+        for t in live:
+            t.join(timeout=per_join)
+        self._threads = [t for t in self._threads if t.is_alive()]
 
     # -- the queue ----------------------------------------------------------
 
-    def submit(self, active: Sequence[int]) -> bool:
+    def submit(self, active: Sequence[int], source: str = "background",
+               priority: float = 0.0) -> bool:
         """Enqueue a compile for ``active`` unless the plan is already
         cached, the occupancy is already queued/in-flight, its backoff
         window after a raised compile has not elapsed, or its retries are
         exhausted (poisoned — the engine keeps serving that occupancy on
-        the compile-alone floor instead of burning the worker on a doomed
+        the compile-alone floor instead of burning a worker on a doomed
         compile every round)."""
         key = frozenset(int(a) for a in active)
         with self._lock:
@@ -140,8 +202,13 @@ class BackgroundCompiler:
                 self.retries += 1
             self._queued.add(key)
             self._inflight += 1
-            self.submitted += 1
-        self._jobs.put(CompileJob(key))
+            self._last_attempt[key] = self._tick
+            if source == "prefetch":
+                self.prefetch_submitted += 1
+            else:
+                self.submitted += 1
+        self._jobs.put((priority, next(self._seq),
+                        CompileJob(key, source=source)))
         return True
 
     def clear_failed(self) -> int:
@@ -159,12 +226,101 @@ class BackgroundCompiler:
         with self._lock:
             return self._inflight
 
+    # -- the occupancy-lattice prefetcher -----------------------------------
+
+    def observe(self, active: Sequence[int]) -> int:
+        """Record one dispatched occupancy (hit or miss) as a lattice
+        anchor, then speculatively enqueue the top-ranked uncompiled
+        neighbors (when ``prefetch`` is on).  Returns the number of
+        prefetch jobs enqueued.  The engine calls this on every resolve;
+        it is cheap — candidate generation walks at most
+        ``recent_window`` anchors' Hamming-1 neighborhoods."""
+        key = frozenset(int(a) for a in active)
+        with self._lock:
+            self._recent.pop(key, None)
+            self._recent[key] = None       # most-recent at the end
+            while len(self._recent) > self.recent_window:
+                self._recent.popitem(last=False)
+        if not self.prefetch:
+            return 0
+        return self.prefetch_now()
+
+    def prefetch_hint(self, occupancies: Sequence[Sequence[int]],
+                      weight: float = 1.0) -> None:
+        """Register externally predicted occupancies (e.g. the fleet
+        placement's per-SoC tenant sets, mapped to this session's tenant
+        indices) as standing prefetch candidates with the given
+        probability weight."""
+        with self._lock:
+            for occ in occupancies:
+                self._hints[frozenset(int(a) for a in occ)] = float(weight)
+
+    def _candidates(self) -> List[Tuple[float, FrozenSet[int]]]:
+        """Ranked prefetch candidates: Hamming-1 neighbors of the recent
+        anchors (recency-decayed) plus the standing hints, scored by
+        predicted request probability x staleness.  Caller holds the
+        lock."""
+        n = len(self.session.request.graphs)
+        universe = frozenset(range(n))
+        scores: Dict[FrozenSet[int], float] = {}
+        recents = list(self._recent)       # oldest .. newest
+        for age, occ in enumerate(reversed(recents)):   # newest first
+            w = 0.5 ** age                 # recency-decayed probability
+            for t in universe - occ:
+                nb = occ | {t}
+                scores[nb] = scores.get(nb, 0.0) + w
+            if len(occ) > 1:
+                for t in occ:
+                    nb = occ - {t}
+                    scores[nb] = scores.get(nb, 0.0) + w
+        for occ, w in self._hints.items():
+            scores[occ] = scores.get(occ, 0.0) + w
+        out: List[Tuple[float, FrozenSet[int]]] = []
+        window = max(self.recent_window, 1)
+        for occ, prob in scores.items():
+            if not occ or occ == universe:  # full house is always cached
+                continue
+            if occ in self._queued or occ in self._failed:
+                continue
+            last = self._last_attempt.get(occ)
+            staleness = (1.0 if last is None else
+                         min((self._tick - last) / window, 1.0))
+            if staleness <= 0.0:
+                continue
+            out.append((prob * staleness, occ))
+        # deterministic rank: score desc, then canonical occupancy order
+        out.sort(key=lambda so: (-so[0], sorted(so[1])))
+        return out
+
+    def prefetch_now(self, limit: Optional[int] = None) -> int:
+        """Enqueue up to ``limit`` (default ``prefetch_depth``) top-
+        ranked speculative compiles.  Cached occupancies rank zero
+        (``submit`` also bounces them, keeping exactly-once); prefetch
+        jobs carry priority ``1/(1+score)`` so reactive misses always
+        dequeue first."""
+        limit = self.prefetch_depth if limit is None else limit
+        with self._lock:
+            ranked = self._candidates()
+        enqueued = 0
+        for score, occ in ranked:
+            if enqueued >= limit:
+                break
+            if self.submit(occ, source="prefetch",
+                           priority=1.0 / (1.0 + score)):
+                enqueued += 1
+        return enqueued
+
+    # -- job execution ------------------------------------------------------
+
     def _run_job(self, job: CompileJob) -> None:
         try:
-            landed = self.session.submit_compile(job.occupancy)
+            landed = self.session.submit_compile(job.occupancy,
+                                                 source=job.source)
             with self._lock:               # success clears retry state
                 if landed:
                     self.compiled += 1
+                    if job.source == "prefetch":
+                        self.prefetch_compiled += 1
                 self._attempts.pop(job.occupancy, None)
                 self._retry_after.pop(job.occupancy, None)
         except Exception as exc:           # keep serving on compile bugs
@@ -192,7 +348,7 @@ class BackgroundCompiler:
         n = 0
         while True:
             try:
-                job = self._jobs.get_nowait()
+                _, _, job = self._jobs.get_nowait()
             except queue.Empty:
                 return n
             if job is None:
@@ -213,13 +369,13 @@ class BackgroundCompiler:
 
     def _worker(self) -> None:
         while True:
-            job = self._jobs.get()
+            _, _, job = self._jobs.get()
             if job is None:
                 return
             self._run_job(job)
 
     def stats(self) -> dict:
-        # one consistent snapshot: every counter the worker thread writes
+        # one consistent snapshot: every counter the worker threads write
         # is read under the same lock that guards the writes (reading
         # `pending` via its property here would re-take the non-reentrant
         # lock and deadlock, so `_inflight` is read directly)
@@ -229,5 +385,10 @@ class BackgroundCompiler:
                     "pending": self._inflight,
                     "retries": self.retries, "backoffs": self.backoffs,
                     "max_retries": self.max_retries,
+                    "max_workers": self.max_workers,
+                    "prefetch": self.prefetch,
+                    "prefetch_submitted": self.prefetch_submitted,
+                    "prefetch_compiled": self.prefetch_compiled,
+                    "prefetch_hints": len(self._hints),
                     "failed_occupancies": len(self._failed),
                     "errors": len(self.errors), "running": self.running}

@@ -412,6 +412,9 @@ class MultiModelEngine:
         compiles: a miss enqueues the compile and this round serves the
         compile-alone concat floor."""
         if self.compiler is not None:
+            # every dispatched occupancy (hit or miss) anchors the
+            # compiler's occupancy-lattice prefetcher
+            self.compiler.observe(ids)
             plan = self.session.try_plan_for(ids, touch=True)
             if plan is None:
                 self.compiler.submit(ids)
@@ -731,6 +734,8 @@ class MultiModelEngine:
             "solo_dispatches": self.solo_dispatches,
             "plan_store": stats,
             "joint_cp": joint,
+            "solver": (self.session.solver_stats()
+                       if self.session is not None else None),
             "compile_latency": (self.session.compile_latency_stats()
                                 if self.session is not None else None),
             "analysis": (self.session.analysis_stats()

@@ -1,0 +1,404 @@
+"""PR-9 surface: decomposed joint CP solve, the worker-pool background
+compiler with its occupancy-lattice prefetcher, ``PlanStore`` warm-start
+sidecar semantics under concurrent seed/evict, and per-solve telemetry.
+
+Concurrency tests are deterministic: thread starts are synchronized with
+``threading.Barrier`` (a timeout on the barrier is the failure signal),
+never with sleeps.  The pool test's barrier has one party per worker, so
+it *proves* two workers were mid-compile simultaneously — a single-
+threaded pool would deadlock the barrier and time out.
+"""
+
+import threading
+from types import SimpleNamespace
+
+import pytest
+
+from repro.core.decompose import cluster_by_affinity, solve_decomposed
+from repro.core.deploy import CompileRequest, DeploymentSession, PlanStore
+from repro.core.tiling import TilingSolution
+from repro.serve.compiler_thread import BackgroundCompiler
+from repro.serve.engine import MultiModelEngine
+from repro.soc.testbed import (dense_chain, gelu_chain, hetero_setup,
+                               two_acc_soc)
+
+
+def sol(objective: float = 1.0) -> TilingSolution:
+    """A minimal stand-in solution for sidecar bookkeeping tests."""
+    return TilingSolution(mode="matcha", assignments=[], tiles_per_op={},
+                          objective=objective, optimal=True,
+                          solver_nodes=0, wall_s=0.0)
+
+
+class StubSession:
+    """Duck-typed ``DeploymentSession`` for compiler unit tests: records
+    every ``submit_compile`` call (occupancy, source) in arrival order
+    and lands a sentinel plan, optionally rendezvousing on a barrier
+    first so tests can prove worker concurrency."""
+
+    def __init__(self, n: int = 4, max_workers: int = 1,
+                 barrier: "threading.Barrier | None" = None) -> None:
+        self.request = SimpleNamespace(graphs=[None] * n,
+                                       max_workers=max_workers)
+        self._plans = {}
+        self._mu = threading.Lock()
+        self.calls = []
+        self.barrier = barrier
+
+    def try_plan_for(self, active):
+        with self._mu:
+            return self._plans.get(frozenset(active))
+
+    def submit_compile(self, active, joint_budget_s=None,
+                       source="background"):
+        key = frozenset(active)
+        if self.barrier is not None:
+            self.barrier.wait(timeout=10.0)
+        with self._mu:
+            self.calls.append((tuple(sorted(key)), source))
+            if key in self._plans:
+                return False
+            self._plans[key] = object()
+            return True
+
+
+# ---------------------------------------------------------------------------
+# PlanStore: nearest_solutions tie-breaking
+# ---------------------------------------------------------------------------
+
+
+def test_nearest_solutions_exact_key_wins_at_distance_zero():
+    st = PlanStore()
+    st.seed_solutions([0], {0: sol(10.0)})
+    st.seed_solutions([0, 1], {0: sol(20.0), 1: sol(21.0)})
+    occ, sols = st.nearest_solutions([0, 1])
+    assert occ == frozenset({0, 1})
+    assert sols[0].objective == 20.0 and set(sols) == {0, 1}
+
+
+def test_nearest_solutions_superset_beats_subset_on_distance_tie():
+    st = PlanStore()
+    st.seed_solutions([0], {0: sol()})            # subset, distance 1
+    st.seed_solutions([0, 1, 2], {i: sol() for i in range(3)})  # superset, 1
+    occ, _ = st.nearest_solutions([0, 1])
+    assert occ == frozenset({0, 1, 2})
+
+
+def test_nearest_solutions_canonical_order_breaks_remaining_tie():
+    st = PlanStore()
+    st.seed_solutions([1, 2], {1: sol(), 2: sol()})
+    st.seed_solutions([0, 1], {0: sol(), 1: sol()})
+    # both are distance-1 supersets of {1}: canonical occupancy order
+    # ({0, 1} < {1, 2}) decides, independent of insertion order
+    occ, _ = st.nearest_solutions([1])
+    assert occ == frozenset({0, 1})
+
+
+def test_nearest_solutions_ignores_incomparable_occupancies():
+    st = PlanStore()
+    st.seed_solutions([0, 1], {0: sol(), 1: sol()})
+    assert st.nearest_solutions([2]) is None      # disjoint
+    assert st.nearest_solutions([1, 2]) is None   # overlapping, neither way
+
+
+# ---------------------------------------------------------------------------
+# PlanStore: sidecar under concurrent seed/evict
+# ---------------------------------------------------------------------------
+
+
+def test_sidecar_survives_concurrent_seed_and_evict():
+    """Many threads seed plans + solutions into a 2-entry store: the
+    bounded plan map must evict, the sidecar must not lose a single
+    occupancy, and every occupancy must warm-start itself (distance 0)
+    regardless of interleaving."""
+    st = PlanStore(max_entries=2)
+    n_threads, per_thread = 4, 6
+    occs = [[t * per_thread + k, t * per_thread + k + 1]
+            for t in range(n_threads) for k in range(per_thread)]
+    gate = threading.Barrier(n_threads)
+
+    def work(t: int) -> None:
+        gate.wait(timeout=10.0)
+        for occ in occs[t * per_thread:(t + 1) * per_thread]:
+            st.seed(occ, object())
+            st.seed_solutions(occ, {i: sol(float(i)) for i in occ})
+
+    threads = [threading.Thread(target=work, args=(t,))
+               for t in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=10.0)
+    assert not any(t.is_alive() for t in threads)
+
+    stats = st.stats()
+    assert stats["evictions"] >= len(occs) - st.max_entries
+    assert stats["co_plans"] <= st.max_entries
+    assert stats["solution_seeds"] == len(occs)   # sidecar never evicts
+    for occ in occs:
+        got = st.solutions(occ)
+        assert got is not None and set(got) == set(occ)
+        near = st.nearest_solutions(occ)
+        assert near is not None and near[0] == frozenset(occ)
+
+
+# ---------------------------------------------------------------------------
+# BackgroundCompiler: pool hardening
+# ---------------------------------------------------------------------------
+
+
+def test_max_workers_validation():
+    with pytest.raises(ValueError):
+        BackgroundCompiler(StubSession(), start=False, max_workers=0)
+    # defaults from the session's CompileRequest knob
+    bg = BackgroundCompiler(StubSession(max_workers=3), start=False)
+    assert bg.max_workers == 3
+
+
+def test_compile_request_knob_validation():
+    soc, pats = two_acc_soc(64, 8.0)
+    g = [dense_chain("a", [32, 32])]
+    base = dict(graphs=g, soc=soc, patterns=pats)
+    for bad in (dict(max_workers=0), dict(decompose="sometimes"),
+                dict(decompose_min_tenants=1),
+                dict(decompose_cut_rounds=-1),
+                dict(decompose_max_cluster=0)):
+        with pytest.raises(ValueError):
+            CompileRequest(**base, **bad)
+
+
+def test_exactly_once_under_concurrent_submits():
+    """Eight threads race to submit the same occupancy: exactly one
+    submit wins, exactly one compile runs."""
+    stub = StubSession(n=4)
+    bg = BackgroundCompiler(stub, start=False)
+    n_threads = 8
+    gate = threading.Barrier(n_threads)
+    wins = []
+
+    def racer() -> None:
+        gate.wait(timeout=10.0)
+        wins.append(bg.submit([0, 1]))
+
+    threads = [threading.Thread(target=racer) for _ in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=10.0)
+    assert sum(wins) == 1 and len(wins) == n_threads
+    assert bg.duplicates == n_threads - 1
+    assert bg.run_pending() == 1
+    assert stub.calls == [((0, 1), "background")]
+    assert bg.compiled == 1 and bg.pending == 0
+
+
+def test_pool_runs_workers_concurrently_exactly_once():
+    """Two queued occupancies, two workers, a two-party barrier inside
+    the stub compile: the barrier only releases if both workers are
+    mid-compile simultaneously.  Each occupancy compiles exactly once
+    fleet-wide through the shared queued/in-flight sets."""
+    rendezvous = threading.Barrier(2)
+    stub = StubSession(n=6, max_workers=2, barrier=rendezvous)
+    bg = BackgroundCompiler(stub, start=False, max_workers=2)
+    assert bg.submit([0, 1]) and bg.submit([2, 3])
+    assert bg.pending == 2
+    bg.start()
+    assert bg.drain(timeout_s=15.0)
+    bg.stop(timeout_s=10.0)
+    assert not bg.running
+    assert bg.compiled == 2 and bg.pending == 0
+    assert sorted(k for k, _ in stub.calls) == [(0, 1), (2, 3)]
+
+
+def test_reactive_miss_outranks_queued_prefetch():
+    stub = StubSession(n=4)
+    bg = BackgroundCompiler(stub, start=False)
+    assert bg.submit([0, 1], source="prefetch", priority=0.5)
+    assert bg.submit([2], source="background", priority=0.0)
+    assert bg.run_pending() == 2
+    # the later-enqueued reactive miss compiled first
+    assert stub.calls == [((2,), "background"), ((0, 1), "prefetch")]
+    assert bg.prefetch_submitted == 1 and bg.submitted == 1
+    assert bg.prefetch_compiled == 1 and bg.compiled == 2
+
+
+# ---------------------------------------------------------------------------
+# BackgroundCompiler: occupancy-lattice prefetcher
+# ---------------------------------------------------------------------------
+
+
+def test_prefetch_off_by_default():
+    bg = BackgroundCompiler(StubSession(), start=False)
+    assert bg.observe([0, 1]) == 0
+    assert bg.pending == 0 and bg.stats()["prefetch"] is False
+
+
+def test_observe_prefetches_hamming_neighbors():
+    stub = StubSession(n=3)
+    bg = BackgroundCompiler(stub, start=False, prefetch=True)
+    got = bg.observe([0, 1])
+    # neighbors of {0,1}: add -> {0,1,2} (full house, excluded),
+    # remove -> {0} and {1}
+    assert got == 2 and bg.prefetch_submitted == 2
+    assert bg.run_pending() == 2
+    assert sorted(stub.calls) == [((0,), "prefetch"), ((1,), "prefetch")]
+    assert bg.prefetch_compiled == 2
+    # now cached: a re-observation prefetches nothing new
+    assert bg.observe([0, 1]) == 0
+
+
+def test_prefetch_hint_registers_standing_candidates():
+    stub = StubSession(n=5)
+    bg = BackgroundCompiler(stub, start=False, prefetch=True)
+    bg.prefetch_hint([[0, 2], [1, 3]], weight=5.0)
+    assert bg.stats()["prefetch_hints"] == 2
+    assert bg.prefetch_now() == 2
+    assert bg.run_pending() == 2
+    assert sorted(k for k, s in stub.calls if s == "prefetch") == \
+        [(0, 2), (1, 3)]
+
+
+def test_recent_window_bounds_anchor_set():
+    bg = BackgroundCompiler(StubSession(n=8), start=False,
+                            recent_window=2)
+    for occ in ([0], [1], [2]):
+        bg.observe(occ)
+    with bg._lock:
+        assert list(bg._recent) == [frozenset({1}), frozenset({2})]
+
+
+# ---------------------------------------------------------------------------
+# Decomposed joint solve
+# ---------------------------------------------------------------------------
+
+
+def test_affinity_clustering_splits_hetero_mix():
+    soc, pats, graphs = hetero_setup(4)
+    clusters = cluster_by_affinity(graphs, soc, pats, 4)
+    assert [(c.device, c.tenants) for c in clusters] == \
+        [("dsp", [1, 3]), ("npu", [0, 2])]
+    # split budgets cover the shared L2 exactly
+    from repro.core.decompose import _split_l2
+    _split_l2(clusters, float(soc.l2.size),
+              [c.ws_bytes for c in clusters])
+    assert sum(c.l2_budget for c in clusters) == pytest.approx(
+        float(soc.l2.size))
+
+
+def test_max_cluster_size_splits_oversized_clusters():
+    """An 8-tenant mix (4 per device) with ``max_cluster_size=2`` splits
+    each device cluster into balanced contiguous sub-clusters — every
+    tenant covered exactly once, per-device membership unchanged."""
+    soc, pats, graphs = hetero_setup(8)
+    capped = cluster_by_affinity(graphs, soc, pats, 4, max_cluster_size=2)
+    assert [(c.device, c.tenants) for c in capped] == \
+        [("dsp", [1, 3]), ("dsp", [5, 7]), ("npu", [0, 2]), ("npu", [4, 6])]
+    # uncapped totals are conserved across the split
+    flat = cluster_by_affinity(graphs, soc, pats, 4)
+    for dev in ("dsp", "npu"):
+        whole = next(c for c in flat if c.device == dev)
+        parts = [c for c in capped if c.device == dev]
+        assert sum(c.ws_bytes for c in parts) == pytest.approx(
+            whole.ws_bytes)
+        assert sum(c.var_weight for c in parts) == pytest.approx(
+            whole.var_weight)
+    # homogeneous degeneracy is judged per *device*: a single-device mix
+    # stays monolithic even when the cap would chop it up
+    soc2, pats2 = two_acc_soc(64, 8.0)
+    graphs2 = [dense_chain(f"t{i}", [48, 48, 48]) for i in range(4)]
+    assert solve_decomposed(graphs2, soc2, pats2, requested_tiles=4,
+                            time_budget_s=0.5, max_cluster_size=2) is None
+
+
+def test_homogeneous_mix_degenerates_to_none():
+    """Every tenant on ``two_acc_soc`` shares a dominant device, so
+    decomposition has nothing to split and reports the fallback."""
+    soc, pats = two_acc_soc(64, 8.0)
+    graphs = [dense_chain(f"t{i}", [48, 48, 48]) for i in range(3)]
+    assert solve_decomposed(graphs, soc, pats, requested_tiles=4,
+                            time_budget_s=0.5) is None
+
+
+def test_solve_decomposed_covers_all_tenants():
+    soc, pats, graphs = hetero_setup(4)
+    res = solve_decomposed(graphs, soc, pats, requested_tiles=4,
+                           time_budget_s=1.0)
+    assert res is not None
+    assert len(res.solutions) == len(graphs)
+    assert all(s.assignments for s in res.solutions)
+    st = res.stats()
+    assert st["clusters"] == 2 and st["cluster_sizes"] == [2, 2]
+
+
+def hetero_session(decompose: str = "on", **kw) -> DeploymentSession:
+    soc, pats, graphs = hetero_setup(4)
+    return DeploymentSession(CompileRequest(
+        graphs=graphs, soc=soc, patterns=pats, requested_tiles=4,
+        time_budget_s=0.5, joint_time_budget_s=1.0,
+        lazy_joint_time_budget_s=0.5,
+        decompose=decompose, decompose_cut_rounds=0, **kw))
+
+
+def test_session_decompose_gating():
+    off = hetero_session("off")
+    assert off.decomposed_tilings([0, 1, 2, 3]) is None
+    assert off.decomposed_fallbacks == 0          # disabled, not a fallback
+    auto = hetero_session("auto")                 # default min_tenants = 6
+    assert auto.decomposed_tilings([0, 1, 2, 3]) is None
+    assert auto.decomposed_solves == 0
+
+
+def test_session_decomposed_tilings_and_telemetry():
+    sess = hetero_session("on")
+    tgs = sess.decomposed_tilings([0, 1, 2, 3])
+    assert tgs is not None and len(tgs) == 4
+    assert sess.decomposed_solves == 1 and sess.decomposed_fallbacks == 0
+    assert sess.decomposed_stats["clusters"] == 2
+    ss = sess.solver_stats()
+    assert ss["decomposed_solves"] == 1
+    assert ss["by_context"]["decomposed"]["solves"] == 2  # one per cluster
+    assert ss["nodes"] >= 0 and ss["wall_s"] > 0.0
+    assert sum(ss["incumbent_source"].values()) == ss["solves"]
+
+
+# ---------------------------------------------------------------------------
+# Solver telemetry + per-source compile latency through the engine
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def small_session() -> DeploymentSession:
+    soc, pats = two_acc_soc(64, 8.0)
+    graphs = [dense_chain("a", [48, 48, 48]),
+              dense_chain("b", [32, 32, 32]),
+              dense_chain("c", [32, 32])]
+    s = DeploymentSession(CompileRequest(
+        graphs=graphs, soc=soc, patterns=pats,
+        requested_tiles=4, time_budget_s=0.5))
+    s.compile()
+    return s
+
+
+def test_engine_report_exposes_solver_stats(small_session):
+    mc = small_session.compile()
+    eng = MultiModelEngine(mc, execute=False)
+    rep = eng.report()
+    assert rep["solver"] is not None
+    assert rep["solver"]["solves"] >= len(mc.graphs)
+    assert "single" in rep["solver"]["by_context"]
+
+
+def test_compile_latency_split_by_source(small_session):
+    sess = small_session
+    assert sess.submit_compile([0, 1], source="prefetch")
+    stats = sess.compile_latency_stats()
+    for src in ("foreground", "background", "prefetch"):
+        assert src in stats
+    assert stats["prefetch"]["count"] >= 1
+    with pytest.raises(ValueError):
+        sess.submit_compile([0, 2], source="speculative")
+
+
+def test_submit_compile_rejects_bad_source(small_session):
+    with pytest.raises(ValueError):
+        small_session.submit_compile([1, 2], source="foreground")

@@ -256,10 +256,10 @@ def test_registry_has_named_strategies():
 def test_default_strategy_names_by_mode():
     assert default_strategy_names("matcha") == \
         ["tile-centric", "all-or-nothing", "heft", "contention-retile",
-         "complementary", "joint-cp"]
+         "complementary", "joint-cp", "decomposed-cp"]
     assert default_strategy_names("matcha_nt") == \
         ["all-or-nothing", "heft", "contention-retile", "complementary",
-         "joint-cp"]
+         "joint-cp", "decomposed-cp"]
     assert default_strategy_names("matcha", retile_for_contention=False) == \
         ["tile-centric", "all-or-nothing", "heft"]
     for mode in ("tvm", "match"):

@@ -202,7 +202,7 @@ class FlakySession:
     def try_plan_for(self, key, touch=False):
         return "plan" if frozenset(key) in self.cached else None
 
-    def submit_compile(self, key):
+    def submit_compile(self, key, source="background"):
         self.calls += 1
         if self.calls <= self.fail_times:
             raise RuntimeError("transient joint-CP timeout")

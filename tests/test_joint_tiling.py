@@ -457,10 +457,14 @@ def test_objective_chain_threads_through_schedule_multi():
 def test_joint_strategy_registered_and_default():
     assert get_strategy("joint-cp").name == "joint-cp"
     assert get_strategy("joint-cp").joint
+    assert get_strategy("decomposed-cp").name == "decomposed-cp"
+    assert get_strategy("decomposed-cp").joint
     for mode in ("matcha", "matcha_nt"):
-        assert default_strategy_names(mode)[-1] == "joint-cp"
-        assert "joint-cp" not in default_strategy_names(
-            mode, retile_for_contention=False)
+        names = default_strategy_names(mode)
+        # the joint CPs run last, after the best-response strategies
+        assert names[-2:] == ["joint-cp", "decomposed-cp"]
+        off = default_strategy_names(mode, retile_for_contention=False)
+        assert "joint-cp" not in off and "decomposed-cp" not in off
 
 
 # ---------------------------------------------------------------------------

@@ -237,3 +237,48 @@ def test_lockcheck_honors_caller_holds_the_lock_marker():
         "        self.items[k] = v\n"
     )
     assert check_source(src, "snippet.py") == []
+
+
+def test_lockcheck_enforces_docstring_declared_guards():
+    """A field the class docstring declares lock-guarded is enforced
+    even when no locked write is ever seen (the inference blind spot the
+    worker-pool state exposed)."""
+    src = (
+        "import threading\n"
+        "class Pool:\n"
+        "    \"\"\"Worker pool.\n"
+        "\n"
+        "    Lock-guarded: _recent, _hints\n"
+        "    \"\"\"\n"
+        "    def __init__(self):\n"
+        "        self._lock = threading.Lock()\n"
+        "        self._recent = {}\n"
+        "        self._hints = {}\n"
+        "    def peek(self):\n"
+        "        return len(self._recent)\n"
+        "    def ok(self):\n"
+        "        with self._lock:\n"
+        "            return len(self._hints)\n"
+    )
+    vs = check_source(src, "snippet.py")
+    assert [(v.method, v.field, v.access) for v in vs] == \
+        [("peek", "_recent", "read")]
+    # without the declaration the same read is invisible to inference
+    undeclared = src.replace("    Lock-guarded: _recent, _hints\n", "")
+    assert check_source(undeclared, "snippet.py") == []
+
+
+def test_lockcheck_declared_guards_on_background_compiler():
+    """The real ``BackgroundCompiler`` declares its pool + prefetcher
+    state; corrupting one of its lock blocks must trip the lint."""
+    path = REPO / "src" / "repro" / "serve" / "compiler_thread.py"
+    src = path.read_text()
+    assert "Lock-guarded: _queued" in src
+    assert check_source(src, str(path)) == []
+    broken = src.replace("        with self._lock:\n"
+                         "            self._recent.pop(key, None)",
+                         "        if True:\n"
+                         "            self._recent.pop(key, None)")
+    assert broken != src
+    vs = check_source(broken, str(path))
+    assert any(v.field == "_recent" and v.access == "write" for v in vs)

@@ -21,7 +21,11 @@ the lane.  ``--solve`` adds the decomposed-solve and compile-pipeline
 gates (decomposed never worse than monolithic at equal budget with at
 least one strict win, prefetch pool cutting visible cold-miss stall p99
 by >= 2x); ``--fleet`` gates a ``benchmarks.fleet`` report including the
-async serving arm.  Mixes present in
+async serving arm; ``--shapes`` gates a ``benchmarks.shapes`` report
+(decode co-round strictly under the sequential floor, zero
+request-visible bucket-transition misses with the lattice prefetcher on
+and at least one without it, zero starvation, analyzer-clean).  Mixes
+present in
 only one of the two reports are listed but do not fail the gate
 (baselines refresh when the mix list changes).
 
@@ -454,6 +458,68 @@ def compare_fleet(report: dict) -> list:
     return failures
 
 
+def compare_shapes(report: dict) -> list:
+    """Gates on the shape-bucketed serving benchmark
+    (``benchmarks.shapes --json``) — absolute properties of the fresh
+    report, no baseline entries:
+
+    * the decode-bucket co-round must cost strictly less than the
+      sequential compile-alone floor (vision single + LM decode-bucket
+      single back to back) — co-scheduling decode with the shapes
+      priced at the bucket is the rework's reason to exist;
+    * with the lattice prefetcher on, the prefill-then-decode trace
+      must pay ZERO floor rounds (every bucket transition lands on a
+      warm plan), while the prefetch-off arm must pay at least one
+      (proving the trace actually exercises the miss path — otherwise
+      the zero is vacuous);
+    * no starvation events anywhere, and zero analyzer ERROR
+      diagnostics across every bucketed plan the sessions emitted."""
+    failures = []
+    co = report.get("decode_coround") or {}
+    co_ms, floor_ms = co.get("co_ms"), co.get("seq_floor_ms")
+    if co_ms is not None and floor_ms is not None:
+        ok = co_ms < floor_ms
+        mark = "ok" if ok else "REGRESSION"
+        print(f"  {'shapes decode co-round vs seq floor':40s} floor "
+              f"{floor_ms:9.3f} ms   co {co_ms:9.3f} ms "
+              f"({(1.0 - co_ms / floor_ms) * 100.0:+.1f}%)  {mark}")
+        if not ok:
+            failures.append(
+                f"shapes: decode co-round {co_ms:.3f} ms does not beat "
+                f"the sequential floor {floor_ms:.3f} ms")
+    arms = report.get("prefetch") or {}
+    on = arms.get("with_prefetch") or {}
+    off = arms.get("without_prefetch") or {}
+    got_on = on.get("floor_rounds")
+    got_off = off.get("floor_rounds")
+    if got_on is not None and got_off is not None:
+        ok = got_on == 0 and got_off >= 1
+        mark = "ok" if ok else "REGRESSION"
+        print(f"  {'shapes bucket-transition floor rounds':40s} "
+              f"prefetch {got_on:9d}   off {got_off:9d} "
+              f"(gate 0 / >= 1)  {mark}")
+        if got_on:
+            failures.append(
+                f"shapes: {got_on} request-visible bucket-transition "
+                f"floor rounds WITH lattice prefetch (expected 0)")
+        if not got_off:
+            failures.append(
+                "shapes: the prefetch-off arm paid no floor rounds — "
+                "the trace no longer exercises the transition-miss path")
+    starved = report.get("starvation_events", 0)
+    if starved:
+        failures.append(f"shapes: {starved} starvation events under "
+                        f"heterogeneous bucket round costs (expected 0)")
+    for name, arm in (("coround", report), ("with_prefetch", on),
+                      ("without_prefetch", off)):
+        errs = int((arm.get("analysis") or {}).get("errors", 0))
+        if errs:
+            failures.append(
+                f"shapes [{name}]: {errs} analyzer ERROR diagnostic(s) "
+                f"on bucketed plans (expected 0)")
+    return failures
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("report", help="fresh multi_tenant --json output")
@@ -467,6 +533,12 @@ def main(argv=None) -> int:
                          "gates placement ordering, zero drops, "
                          "migration analyzer cleanliness and the async "
                          "serving arm")
+    ap.add_argument("--shapes", default=None,
+                    help="optional benchmarks.shapes --json report; "
+                         "gates the decode co-round vs the sequential "
+                         "floor, zero bucket-transition misses under "
+                         "lattice prefetch, starvation and analyzer "
+                         "cleanliness")
     ap.add_argument("--solve", action="store_true",
                     help="also gate the decomposed joint solve (never "
                          "worse than monolithic at equal budget, >= 1 "
@@ -487,6 +559,10 @@ def main(argv=None) -> int:
         with open(args.fleet) as f:
             fleet_report = json.load(f)
         failures += compare_fleet(fleet_report)
+    if args.shapes:
+        with open(args.shapes) as f:
+            shapes_report = json.load(f)
+        failures += compare_shapes(shapes_report)
     if failures:
         print("\nFAIL:")
         for msg in failures:

@@ -1,7 +1,36 @@
-"""Batched serving example: continuous-batching engine over prefill/decode
-with greedy and temperature sampling.
+"""Co-scheduled LM + vision serving walkthrough.
 
-    PYTHONPATH=src python examples/serve_lm.py [--arch qwen3-8b]
+    PYTHONPATH=src python examples/serve_lm.py [--lm rwkv6]
+
+What this demonstrates, step by step:
+
+1.  **One engine, two kinds of tenant.**  A fixed-shape vision-style
+    graph and a shape-bucketed LM tenant (``lm_tenant`` pairs the LM's
+    default prefill graph with a ``ShapeBucketSpec`` — power-of-two
+    sequence buckets from 1, the decode shape, up to ``max_seq``) are
+    compiled into one ``DeploymentSession``.  There is no separate
+    token-loop engine for the LM: prefill and decode are ordinary
+    bucketed requests to the same ``MultiModelEngine``.
+
+2.  **Prefill, then decode, through the same queue.**  A prompt of
+    length L submits as ``submit(lm, seq_len=L)`` — the spec rounds L up
+    to its bucket — and each generated token submits as
+    ``submit(lm, seq_len=1)``.  The engine resolves every round's plan
+    at the ``(occupancy, bucket-vector)`` lattice point of the queued
+    heads, so a decode round co-schedules with the vision tenant under a
+    plan priced for seq=1, not for the prefill shape.
+
+3.  **The bucket-transition prefetch.**  The attached
+    ``BackgroundCompiler`` (deterministic no-thread mode here) watches
+    dispatched lattice points and walks one Hamming step along the
+    lattice — occupancy joins/leaves and one-rung bucket ladder moves,
+    with the step toward seq=1 weighted double.  After the first prefill
+    round it is already compiling the decode-bucket plan, so the
+    prefill->decode transition lands on a warm plan instead of a floor
+    round.
+
+Run with ``--no-prefetch`` to watch the same trace pay floor rounds at
+every bucket transition instead.
 """
 
 import argparse
@@ -15,12 +44,17 @@ from repro.launch.serve import serve
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="qwen3-8b")
-    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--lm", default="rwkv6",
+                    choices=["rwkv6", "rglru", "transformer"])
+    ap.add_argument("--prompts", type=int, default=3)
+    ap.add_argument("--decode-steps", type=int, default=6)
+    ap.add_argument("--no-prefetch", action="store_true")
     args = ap.parse_args()
-    results = serve(args.arch, n_requests=args.requests, max_new=12)
-    for rid, toks in sorted(results.items()):
-        print(f"  request {rid}: {toks}")
+    rep = serve(args.lm, n_prompts=args.prompts,
+                decode_steps=args.decode_steps,
+                prefetch=not args.no_prefetch)
+    print(f"  starvation events: {rep['starvation_events']}, "
+          f"slo attainment: {rep['slo_attainment']}")
 
 
 if __name__ == "__main__":

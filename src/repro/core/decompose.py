@@ -198,7 +198,12 @@ def _split_l2(clusters: Sequence[Cluster], l2_size: float,
     """Assign each cluster's ``l2_budget``: proportional to ``weights``
     with a ``min_frac``-of-equal-share floor (the same DORY-style rule
     as ``deploy.proportional_budgets``, over clusters instead of
-    tenants)."""
+    tenants).  The budgets must NEVER sum past ``l2_size`` — each is a
+    subproblem's shared-L2 capacity bound, and a float-ulp overshoot in
+    the rescale (``r * scale`` rounds each product independently) would
+    let the union of cluster solutions exceed the physical L2 by a few
+    bytes, making the reconciled joint plan infeasible — so any rounding
+    excess is shaved off the largest budget."""
     n = len(clusters)
     total = sum(max(w, 0.0) for w in weights)
     equal = l2_size / n
@@ -209,8 +214,12 @@ def _split_l2(clusters: Sequence[Cluster], l2_size: float,
     floor = equal * min_frac
     raw = [max(floor, max(w, 0.0) / total * l2_size) for w in weights]
     scale = l2_size / sum(raw)
-    for c, r in zip(clusters, raw):
-        c.l2_budget = r * scale
+    vals = [r * scale for r in raw]
+    excess = sum(vals) - l2_size
+    if excess > 0.0:
+        vals[max(range(n), key=lambda i: vals[i])] -= excess
+    for c, v in zip(clusters, vals):
+        c.l2_budget = v
 
 
 def _split_dma(clusters: Sequence[Cluster]) -> None:

@@ -56,14 +56,17 @@ import math
 import threading
 import time
 from collections import OrderedDict
-from typing import (Callable, Dict, FrozenSet, Hashable, List, Optional,
-                    Sequence, Set, Tuple)
+from typing import (Callable, Dict, FrozenSet, Hashable, List, Mapping,
+                    Optional, Sequence, Set, Tuple)
 
 from repro.core import cpsolver
 from repro.core.decompose import solve_decomposed
 from repro.core.ir import Graph
 from repro.core.patterns import Pattern
 from repro.core.rewrite import TiledGraph, rewrite
+from repro.core.shapes import (PlanKey, ShapeBucketSpec, StoreKey,
+                               describe_key, key_distance, key_occupancy,
+                               key_parts, key_sort, make_plan_key)
 from repro.core.schedule import (ExecutionPlan, MultiExecutionPlan,
                                  concat_plans, contention_hints,
                                  default_budgets, schedule, schedule_multi,
@@ -110,8 +113,14 @@ def proportional_budgets(l2_size: int, weights: Sequence[float],
     eviction order key off them, so every tenant keeps at least
     ``min_frac`` of its equal share — a near-zero-weight tenant must not
     be starved of resident weights.  Degenerate weights (all zero, or a
-    floor that cannot fit) fall back to the equal split.  The returned
-    split sums exactly to ``l2_size``."""
+    floor that cannot fit) fall back to the equal split, which sums to
+    *at most* ``l2_size``; every other path sums exactly to ``l2_size``.
+    The sum NEVER exceeds ``l2_size`` — a one-byte overshoot here makes
+    the joint CP's shared-L2 capacity constraint infeasible, so the
+    invariant is enforced explicitly instead of trusting float division
+    (``avail * w / total`` can round a ulp high before truncation, and
+    a blind remainder line would then push the heaviest slice below its
+    floor to compensate)."""
     n = len(weights)
     if n == 0:
         return []
@@ -126,9 +135,19 @@ def proportional_budgets(l2_size: int, weights: Sequence[float],
     if avail < 0:
         return [equal] * n
     budgets = [floor + int(avail * max(w, 0.0) / total) for w in weights]
-    # integer-truncation remainder goes to the heaviest tenant
-    k = max(range(n), key=lambda i: (weights[i], -i))
-    budgets[k] += int(l2_size) - sum(budgets)
+    excess = sum(budgets) - int(l2_size)
+    if excess > 0:
+        # float-ulp overshoot: shave the largest slices, never below floor
+        for i in sorted(range(n), key=lambda j: -budgets[j]):
+            take = min(excess, budgets[i] - floor)
+            budgets[i] -= take
+            excess -= take
+            if excess <= 0:
+                break
+    else:
+        # integer-truncation remainder goes to the heaviest tenant
+        k = max(range(n), key=lambda i: (weights[i], -i))
+        budgets[k] -= excess
     return budgets
 
 
@@ -285,7 +304,17 @@ class CompileRequest:
     ``max_workers`` sizes the compile-side thread pools: the decomposed
     solve's concurrent per-cluster solves, and the
     :class:`~repro.serve.compiler_thread.BackgroundCompiler` worker pool
-    when a serving engine constructs one from this request."""
+    when a serving engine constructs one from this request.
+
+    ``shape_buckets`` maps tenant index -> :class:`~repro.core.shapes.
+    ShapeBucketSpec` for tenants whose workload varies by sequence
+    length (the autoregressive LM tenants).  The graph registered in
+    ``graphs[i]`` must be the tenant's *default-bucket* graph (the spec's
+    ``make_graph(spec.default)`` — the session trusts this identity and
+    never rebuilds the default bucket); other buckets' graphs are built
+    lazily on the first bucketed compile and cached.  Tenants absent
+    from the mapping are fixed-shape and always key on the bare
+    occupancy."""
     graphs: Sequence[Graph]
     soc: SoC
     patterns: Sequence[Pattern]
@@ -309,6 +338,7 @@ class CompileRequest:
     decompose_cut_rounds: int = 2
     decompose_max_cluster: int = 4
     max_workers: int = 2
+    shape_buckets: Optional[Mapping[int, ShapeBucketSpec]] = None
 
     def __post_init__(self) -> None:
         if self.mode not in MODES:
@@ -360,6 +390,18 @@ class CompileRequest:
         if self.max_workers < 1:
             raise ValueError(f"max_workers must be >= 1: "
                              f"{self.max_workers}")
+        if self.shape_buckets is not None:
+            norm: Dict[int, ShapeBucketSpec] = {}
+            for t, spec in self.shape_buckets.items():
+                t = int(t)
+                if t < 0 or t >= len(self.graphs):
+                    raise ValueError(f"shape_buckets tenant {t} out of "
+                                     f"range for {len(self.graphs)} graphs")
+                if not isinstance(spec, ShapeBucketSpec):
+                    raise ValueError(f"shape_buckets[{t}] is not a "
+                                     f"ShapeBucketSpec: {spec!r}")
+                norm[t] = spec
+            self.shape_buckets = norm
 
 
 # ---------------------------------------------------------------------------
@@ -806,9 +848,10 @@ class MultiCompiledModel:
                                              anneal_iters=0)
         return self._tenant_plans[i]
 
-    def plan_for(self, active: Sequence[int]
-                 ) -> Optional[MultiExecutionPlan]:
-        """Co-schedule covering exactly the ``active`` tenants.
+    def plan_for(self, active: Sequence[int],
+                 shapes=None) -> Optional[MultiExecutionPlan]:
+        """Co-schedule covering exactly the ``active`` tenants (at the
+        optional per-tenant sequence ``shapes`` — tenant -> bucket).
 
         Routed through the session's occupancy-indexed :class:`PlanStore`:
         pre-compiled subsets hit the cache, anything else is compiled
@@ -818,25 +861,25 @@ class MultiCompiledModel:
         a session-less artifact asked for a partial occupancy (the legacy
         behaviour)."""
         ids = sorted({int(a) for a in active})
-        if ids == list(range(len(self.graphs))):
+        if not shapes and ids == list(range(len(self.graphs))):
             return self.plan
         if self.session is None:
             return None
-        return self.session.plan_for(ids)
+        return self.session.plan_for(ids, shapes=shapes)
 
-    def try_plan_for(self, active: Sequence[int], touch: bool = False
-                     ) -> Optional[MultiExecutionPlan]:
+    def try_plan_for(self, active: Sequence[int], touch: bool = False,
+                     shapes=None) -> Optional[MultiExecutionPlan]:
         """Non-blocking occupancy lookup: the cached plan or ``None`` —
         never compiles (delegates to
         :meth:`DeploymentSession.try_plan_for`, including the ``touch``
-        accounting).  On a session-less artifact only the full house
-        answers."""
+        accounting and the optional ``shapes`` buckets).  On a
+        session-less artifact only the full house answers."""
         ids = sorted({int(a) for a in active})
-        if ids == list(range(len(self.graphs))):
+        if not shapes and ids == list(range(len(self.graphs))):
             return self.plan
         if self.session is None:
             return None
-        return self.session.try_plan_for(ids, touch=touch)
+        return self.session.try_plan_for(ids, touch=touch, shapes=shapes)
 
     def store_stats(self) -> Optional[Dict[str, int]]:
         """Hit/miss/compile counters of the session's plan store (``None``
@@ -866,10 +909,21 @@ def _sets_sig(tgs: Sequence[TiledGraph]) -> tuple:
 class PlanStore:
     """Cache of compiled schedules keyed by occupancy, LRU-bounded.
 
-    Co-schedules are keyed by ``frozenset`` of active tenant indices;
-    single-tenant reference schedules (the bitwise numeric references for
+    Co-schedules are keyed by a :data:`~repro.core.shapes.StoreKey` — a
+    ``frozenset`` of active tenant indices for fixed-shape occupancies
+    (every tenant at its default bucket), or a
+    :class:`~repro.core.shapes.PlanKey` point on the (occupancy x
+    bucket-vector) product lattice when any tenant runs at a non-default
+    sequence bucket.  The two never collide (``make_plan_key``
+    canonicalizes the all-default case to the bare ``frozenset``), so
+    fixed-shape sessions see bitwise the pre-shape store.  Plain
+    iterables of tenant indices are accepted everywhere a key is and
+    normalize to the bare ``frozenset``.
+
+    Single-tenant reference schedules (the bitwise numeric references for
     re-tiled / per-occupancy tenants) are keyed by tenant index or by a
-    ``(tenant, tiling-signature)`` pair.  ``hits`` / ``misses`` /
+    ``(tenant, tiling-signature)`` /  ``(tenant, bucket,
+    tiling-signature)`` tuple.  ``hits`` / ``misses`` /
     ``compiles`` count lookups and lazy compilations across both maps —
     a miss that compiles increments both ``misses`` and ``compiles``, so
     the cache contract "miss compiles once, then hits" is assertable.
@@ -904,13 +958,13 @@ class PlanStore:
     def __init__(self, max_entries: int = 64) -> None:
         if max_entries < 1:
             raise ValueError(f"max_entries must be >= 1: {max_entries}")
-        self._co: "OrderedDict[FrozenSet[int], MultiExecutionPlan]" = \
+        self._co: "OrderedDict[StoreKey, MultiExecutionPlan]" = \
             OrderedDict()
         self._tenant: Dict[Hashable, ExecutionPlan] = {}
-        self._protected: Set[FrozenSet[int]] = set()
-        # non-evicting warm-start sidecar: occupancy -> {tenant -> solution}
-        self._solutions: Dict[FrozenSet[int], Dict[int, TilingSolution]] = {}
-        self._evicted: Set[FrozenSet[int]] = set()   # awaiting re-miss count
+        self._protected: Set[StoreKey] = set()
+        # non-evicting warm-start sidecar: store key -> {tenant -> solution}
+        self._solutions: Dict[StoreKey, Dict[int, TilingSolution]] = {}
+        self._evicted: Set[StoreKey] = set()         # awaiting re-miss count
         self._lock = threading.RLock()
         self.max_entries = max_entries
         self.hits = 0
@@ -919,34 +973,52 @@ class PlanStore:
         self.lru_evictions = 0
         self.re_misses = 0
 
+    @staticmethod
+    def _norm(active) -> StoreKey:
+        """Normalize a key argument: :class:`PlanKey` passes through, any
+        plain iterable of tenant indices becomes the bare frozenset."""
+        if isinstance(active, PlanKey):
+            return active
+        return frozenset(int(a) for a in active)
+
     def __len__(self) -> int:
         with self._lock:
             return len(self._co) + len(self._tenant)
 
     def __contains__(self, key) -> bool:
         """ints and tuples query the tenant-reference map (tuples are the
-        ``(tenant, tiling-signature)`` keys); query occupancies with a
-        list / set / frozenset, never a tuple."""
+        ``(tenant, [bucket,] tiling-signature)`` keys); query occupancies
+        with a list / set / frozenset / PlanKey, never a tuple."""
         with self._lock:
             if isinstance(key, (int, tuple)):
                 return key in self._tenant
-            return frozenset(key) in self._co
+            return self._norm(key) in self._co
 
     def has_tenant(self, key: Hashable) -> bool:
         with self._lock:
             return key in self._tenant
 
     def occupancies(self) -> List[FrozenSet[int]]:
-        """Cached co-schedule occupancies, smallest first."""
+        """Cached *fixed-shape* co-schedule occupancies (bare frozensets),
+        smallest first.  Bucketed :class:`PlanKey` entries are excluded —
+        callers (the round composer's cached-occupancy bonus) do set
+        algebra on these; the full key list is :meth:`keys`."""
         with self._lock:
-            return sorted(self._co, key=lambda s: (len(s), sorted(s)))
+            return sorted((k for k in self._co if not isinstance(k, PlanKey)),
+                          key=lambda s: (len(s), sorted(s)))
 
-    def protect(self, active: Sequence[int]) -> None:
-        """Exempt an occupancy from LRU eviction (the full house)."""
+    def keys(self) -> List[StoreKey]:
+        """Every cached co-schedule key — bare occupancies and bucketed
+        lattice points — in deterministic order."""
         with self._lock:
-            self._protected.add(frozenset(active))
+            return sorted(self._co, key=key_sort)
 
-    def peek(self, active: Sequence[int], touch: bool = False
+    def protect(self, active) -> None:
+        """Exempt a key from LRU eviction (the full house)."""
+        with self._lock:
+            self._protected.add(self._norm(active))
+
+    def peek(self, active, touch: bool = False
              ) -> Optional[MultiExecutionPlan]:
         """Non-compiling occupancy lookup: the cached co-schedule or
         ``None``.  By default a *pure read* — no counters, no LRU
@@ -955,7 +1027,7 @@ class PlanStore:
         stats nor let candidate enumeration evict dispatch-hot plans.
         The serving engine's actual dispatch probe passes ``touch=True``
         to count the lookup and refresh recency like ``co_plan`` does."""
-        key = frozenset(active)
+        key = self._norm(active)
         with self._lock:
             plan = self._co.get(key)
             if touch:
@@ -967,7 +1039,7 @@ class PlanStore:
                     self._note_re_miss(key)
             return plan
 
-    def _note_re_miss(self, key: FrozenSet[int]) -> None:
+    def _note_re_miss(self, key: StoreKey) -> None:
         """Count (once) a miss of an occupancy a prior eviction dropped —
         the eviction demonstrably forced a re-compile.  Caller holds the
         lock."""
@@ -975,7 +1047,7 @@ class PlanStore:
             self._evicted.discard(key)
             self.re_misses += 1
 
-    def _evict_lru(self, keep: Optional[FrozenSet[int]] = None) -> None:
+    def _evict_lru(self, keep: Optional[StoreKey] = None) -> None:
         """Drop LRU occupancies down to the bound; never drops protected
         occupancies or ``keep`` (the entry being inserted — evicting it
         would break 'miss compiles once, then hits'), so the bound can be
@@ -989,14 +1061,14 @@ class PlanStore:
             self.lru_evictions += 1
             self._evicted.add(victim)        # re-miss = thrash (see stats)
 
-    def seed(self, active: Sequence[int], plan: MultiExecutionPlan) -> bool:
+    def seed(self, active, plan: MultiExecutionPlan) -> bool:
         """Register an already-compiled co-schedule (no counter changes).
         First landed plan wins, like ``co_plan``: if a concurrent
         blocking compile already cached this occupancy, callers holding
         that object must keep seeing it (the engine compares plans by
         identity), so the late arrival is dropped.  Returns whether
         ``plan`` was actually inserted."""
-        key = frozenset(active)
+        key = self._norm(active)
         with self._lock:
             inserted = key not in self._co
             if inserted:
@@ -1012,10 +1084,10 @@ class PlanStore:
         with self._lock:
             self._tenant[tenant] = plan
 
-    def co_plan(self, active: Sequence[int],
+    def co_plan(self, active,
                 build: Callable[[], MultiExecutionPlan]
                 ) -> MultiExecutionPlan:
-        key = frozenset(active)
+        key = self._norm(active)
         with self._lock:
             if key in self._co:
                 self.hits += 1
@@ -1049,55 +1121,64 @@ class PlanStore:
 
     # -- warm-start solutions sidecar ---------------------------------------
 
-    def seed_solutions(self, active: Sequence[int],
+    def seed_solutions(self, active,
                        solutions: Dict[int, TilingSolution]) -> None:
         """Record the per-tenant tiling solutions a landed plan chose, in
         the non-evicting sidecar (latest landed plan wins — the sidecar
         mirrors whatever currently answers ``peek`` for this key, or last
         did before an eviction)."""
         with self._lock:
-            self._solutions[frozenset(active)] = dict(solutions)
+            self._solutions[self._norm(active)] = dict(solutions)
 
-    def solutions(self, active: Sequence[int]
-                  ) -> Optional[Dict[int, TilingSolution]]:
-        """The recorded per-tenant solutions for exactly this occupancy,
+    def solutions(self, active) -> Optional[Dict[int, TilingSolution]]:
+        """The recorded per-tenant solutions for exactly this key,
         or ``None`` — survives LRU eviction of the plan itself."""
         with self._lock:
-            got = self._solutions.get(frozenset(active))
+            got = self._solutions.get(self._norm(active))
             return dict(got) if got is not None else None
 
-    def solution_occupancies(self) -> List[FrozenSet[int]]:
-        """Occupancy keys with recorded sidecar solutions — the
-        warm-start export surface: the fleet rebalancer reads these to
-        migrate a drained SoC's tiling solutions into the destination
-        SoC's session (remapped to the destination's tenant indices),
-        so post-migration subset compiles warm-start instead of solving
-        from scratch."""
+    def solution_occupancies(self) -> List[StoreKey]:
+        """Store keys with recorded sidecar solutions — bare occupancies
+        and bucketed lattice points — the warm-start export surface: the
+        fleet rebalancer reads these to migrate a drained SoC's tiling
+        solutions into the destination SoC's session (remapped to the
+        destination's tenant indices via
+        :func:`~repro.core.shapes.remap_key`), so post-migration subset
+        compiles warm-start instead of solving from scratch."""
         with self._lock:
             return list(self._solutions.keys())
 
-    def nearest_solutions(self, active: Sequence[int]
-                          ) -> Optional[Tuple[FrozenSet[int],
+    def nearest_solutions(self, active
+                          ) -> Optional[Tuple[StoreKey,
                                               Dict[int, TilingSolution]]]:
-        """``(occupancy, {tenant -> solution})`` of the Hamming-nearest
-        recorded occupancy comparable to ``active`` — a superset or subset
-        (an unrelated occupancy's solutions reflect contention from
-        tenants that are not here and tell us nothing about the missing
-        ones).  The occupancy itself counts at distance 0: an evicted
-        plan's own solutions are the best possible warm start for its
-        re-compile.  Supersets win distance ties (they tiled every member
-        under at least this much contention); ``None`` when nothing
-        comparable is recorded."""
-        key = frozenset(active)
+        """``(key, {tenant -> solution})`` of the product-lattice-nearest
+        recorded key comparable to ``active`` — one whose occupancy is a
+        superset or subset (an unrelated occupancy's solutions reflect
+        contention from tenants that are not here and tell us nothing
+        about the missing ones).  Distance is
+        :func:`~repro.core.shapes.key_distance`: occupancy Hamming plus
+        one per shared tenant at a different bucket, so the key itself
+        counts at distance 0 — an evicted plan's own solutions are the
+        best possible warm start for its re-compile.  Occupancy
+        supersets win distance ties (they tiled every member under at
+        least this much contention); ``None`` when nothing comparable is
+        recorded.  Callers warm-starting a *bucketed* compile must check
+        each returned tenant's bucket against the neighbor key — a
+        solution tiled at another sequence bucket is not a valid tiling
+        for this one (the session substitutes that tenant's
+        bucket-alone solution)."""
+        key = self._norm(active)
+        occ = key_occupancy(key)
         best: Optional[tuple] = None
         with self._lock:
-            for occ, sols in self._solutions.items():
-                if not (occ >= key or occ <= key):
+            for cand, sols in self._solutions.items():
+                cocc = key_occupancy(cand)
+                if not (cocc >= occ or cocc <= occ):
                     continue
-                rank = (len(occ ^ key), 0 if occ >= key else 1,
-                        tuple(sorted(occ)))
+                rank = (key_distance(cand, key),
+                        0 if cocc >= occ else 1, key_sort(cand))
                 if best is None or rank < best[0]:
-                    best = (rank, occ, sols)
+                    best = (rank, cand, sols)
             if best is None:
                 return None
             return best[1], dict(best[2])
@@ -1168,7 +1249,11 @@ class DeploymentSession:
         self.analysis_findings: List[str] = []           # retained messages
         self.max_analysis_findings = 32
         self._lock = threading.RLock()
-        self._inflight: Set[FrozenSet[int]] = set()   # submit_compile dedupe
+        self._inflight: Set[StoreKey] = set()      # submit_compile dedupe
+        # lazily-built non-default-bucket artifacts: (tenant, bucket) ->
+        # graph / compile-alone artifact (first-wins under _lock)
+        self._bucket_graphs: Dict[Tuple[int, int], Graph] = {}
+        self._bucket_singles: Dict[Tuple[int, int], CompiledModel] = {}
         # the exact best-response incumbent (phase A of the fixpoint): what
         # PR 2/3 would have shipped — the bound the joint CP must beat
         self.best_response_plan: Optional[MultiExecutionPlan] = None
@@ -1466,7 +1551,8 @@ class DeploymentSession:
                       warm: Optional[Sequence[TiledGraph]] = None,
                       time_budget_s: Optional[float] = None,
                       seeds: Optional[
-                          Sequence[Sequence[TilingSolution]]] = None
+                          Sequence[Sequence[TilingSolution]]] = None,
+                      graphs: Optional[Sequence[Graph]] = None
                       ) -> Optional[List[TiledGraph]]:
         """One joint cross-tenant stage-1 solve over the tenants in ``ids``
         (the full house or any occupancy subset), warm-started from the
@@ -1480,12 +1566,18 @@ class DeploymentSession:
         letting them outspend the foreground path.  ``seeds`` re-seeds
         the solver with additional per-tenant solution lists (the
         compile-alone tilings, when ``warm`` came from a cached
-        neighbor).  Returns the coordinated per-tenant tile graphs, or
+        neighbor).  ``graphs`` overrides the per-tenant graphs (the
+        bucketed subset compile passes each tenant's graph at its
+        requested sequence bucket; default: the request's registered
+        graphs).  Returns the coordinated per-tenant tile graphs, or
         ``None`` when the solver produced nothing within the budget — the
         caller's best-response fallback then engages (counted in
         ``joint_fallbacks``)."""
         req = self.request
-        graphs = [req.graphs[i] for i in ids]
+        if graphs is None:
+            graphs = [req.graphs[i] for i in ids]
+        else:
+            graphs = list(graphs)
         budget = (time_budget_s if time_budget_s is not None
                   else req.joint_time_budget_s)
         budget = min(budget, req.joint_time_budget_s)
@@ -1638,11 +1730,105 @@ class DeploymentSession:
                              f"{n} graphs")
         return ids
 
-    def plan_for(self, active: Sequence[int]) -> MultiExecutionPlan:
+    # -- shape buckets -------------------------------------------------------
+
+    def bucket_spec(self, i: int) -> Optional[ShapeBucketSpec]:
+        """Tenant ``i``'s bucket spec, or ``None`` (fixed-shape)."""
+        sb = self.request.shape_buckets
+        return sb.get(i) if sb else None
+
+    def plan_key(self, active: Sequence[int],
+                 shapes: Optional[Mapping[int, int]] = None) -> StoreKey:
+        """Canonical :data:`StoreKey` for ``active`` at the given
+        per-tenant sequence buckets.  ``shapes`` maps tenant -> bucket
+        (values must be members of the tenant's
+        :class:`~repro.core.shapes.ShapeBucketSpec`; round raw lengths
+        with ``spec.bucket_for`` first); tenants at their default bucket
+        are dropped, so an all-default query collapses to the bare
+        occupancy frozenset and hits the fixed-shape store entries.
+
+        A :class:`~repro.core.shapes.PlanKey` passed as ``active`` is
+        already canonical and returned as-is (``shapes`` must then be
+        empty) — this lets the background compiler hand store keys it
+        mined from the lattice straight back to :meth:`try_plan_for` /
+        :meth:`submit_compile`."""
+        if isinstance(active, PlanKey):
+            if shapes:
+                raise ValueError("pass buckets inside the PlanKey, not "
+                                 "via shapes=")
+            self._check_active(active.occupancy)
+            return active
+        ids = self._check_active(active)
+        if not shapes:
+            return frozenset(ids)
+        nondefault: Dict[int, int] = {}
+        for t, b in shapes.items():
+            t, b = int(t), int(b)
+            if t not in ids:
+                raise ValueError(f"shaped tenant {t} not active: {ids}")
+            spec = self.bucket_spec(t)
+            if spec is None:
+                raise ValueError(f"tenant {t} has no shape_buckets spec")
+            if b not in spec.buckets:
+                raise ValueError(f"bucket {b} not in tenant {t}'s bucket "
+                                 f"set {spec.buckets}")
+            if b != spec.default:
+                nondefault[t] = b
+        return make_plan_key(ids, nondefault)
+
+    def bucket_graph(self, i: int, bucket: int) -> Graph:
+        """Tenant ``i``'s IR graph at ``bucket`` — the registered request
+        graph for the default bucket, else built once via the spec's
+        ``make_graph`` and cached."""
+        spec = self.bucket_spec(i)
+        if spec is None:
+            raise ValueError(f"tenant {i} has no shape_buckets spec")
+        if bucket not in spec.buckets:
+            raise ValueError(f"bucket {bucket} not in tenant {i}'s bucket "
+                             f"set {spec.buckets}")
+        if bucket == spec.default:
+            return self.request.graphs[i]
+        bkey = (i, int(bucket))
+        with self._lock:
+            got = self._bucket_graphs.get(bkey)
+        if got is not None:
+            return got
+        g = spec.make_graph(bucket)
+        g.validate()
+        with self._lock:
+            return self._bucket_graphs.setdefault(bkey, g)
+
+    def bucket_single(self, i: int, bucket: int) -> CompiledModel:
+        """Compile-alone artifact for tenant ``i`` at ``bucket`` — the
+        bucketed analogue of ``singles[i]`` (which it *is* at the default
+        bucket).  Built once on first use and cached; the engine's floor
+        rounds and per-bucket service estimates key off these, so decode
+        buckets stop being priced at the prefill graph's makespan."""
+        spec = self.bucket_spec(i)
+        if spec is not None and bucket == spec.default:
+            return self.singles[i]
+        g = self.bucket_graph(i, bucket)       # validates spec + bucket
+        bkey = (i, int(bucket))
+        with self._lock:
+            got = self._bucket_singles.get(bkey)
+        if got is not None:
+            return got
+        cm = self._compile_one(g)              # outside the lock: slow
+        with self._lock:
+            return self._bucket_singles.setdefault(bkey, cm)
+
+    def plan_for(self, active: Sequence[int],
+                 shapes: Optional[Mapping[int, int]] = None
+                 ) -> MultiExecutionPlan:
         """Validated co-schedule covering exactly the ``active`` tenants,
         from the :class:`PlanStore` (compiled lazily on the first miss).
         Tenant indices inside the returned plan are positional over
         ``sorted(set(active))``.
+
+        ``shapes`` (tenant -> sequence bucket) selects non-default shape
+        buckets for LM tenants; the resulting plan is keyed by the
+        (occupancy, bucket-vector) lattice point, so the same occupancy
+        at prefill and at decode are distinct cached plans.
 
         A miss pays the subset compile — including up to
         ``joint_time_budget_s`` of per-occupancy joint solving — on the
@@ -1652,30 +1838,40 @@ class DeploymentSession:
         push the miss to a background
         :class:`~repro.serve.compiler_thread.BackgroundCompiler`."""
         self.compile()
-        ids = self._check_active(active)
-        plan = self.store.co_plan(ids, lambda: self._compile_subset(ids))
-        self._record_solutions(ids, plan)
+        key = self.plan_key(active, shapes)
+        if isinstance(key, PlanKey):
+            plan = self.store.co_plan(
+                key, lambda: self._compile_subset_bucketed(key))
+        else:
+            ids = sorted(key)
+            plan = self.store.co_plan(ids,
+                                      lambda: self._compile_subset(ids))
+        self._record_solutions(key, plan)
         return plan
 
-    def try_plan_for(self, active: Sequence[int], touch: bool = False
+    def try_plan_for(self, active: Sequence[int], touch: bool = False,
+                     shapes: Optional[Mapping[int, int]] = None
                      ) -> Optional[MultiExecutionPlan]:
         """Non-blocking, non-compiling occupancy lookup — the serving
         engine's dispatch-path probe.  Returns the cached co-schedule for
-        exactly the ``active`` tenants (the full house always answers once
-        the session is compiled), or ``None`` on a store miss.  Thread-
-        safe; never triggers a compile, so it never stalls a round.
-        ``touch`` counts the lookup and refreshes LRU recency (pass it
-        from real dispatches, not speculative scoring probes)."""
+        exactly the ``active`` tenants at the given ``shapes`` (the
+        fixed-shape full house always answers once the session is
+        compiled), or ``None`` on a store miss.  Thread-safe; never
+        triggers a compile, so it never stalls a round.  ``touch`` counts
+        the lookup and refreshes LRU recency (pass it from real
+        dispatches, not speculative scoring probes)."""
         if self._multi is None:
             return None
-        ids = self._check_active(active)
-        if ids == list(range(len(self.request.graphs))):
+        key = self.plan_key(active, shapes)
+        if (not isinstance(key, PlanKey)
+                and sorted(key) == list(range(len(self.request.graphs)))):
             return self._multi.plan
-        return self.store.peek(ids, touch=touch)
+        return self.store.peek(key, touch=touch)
 
     def submit_compile(self, active: Sequence[int],
                        joint_budget_s: Optional[float] = None,
-                       source: str = "background") -> bool:
+                       source: str = "background",
+                       shapes: Optional[Mapping[int, int]] = None) -> bool:
         """Compile-and-cache the occupancy for ``active``, exactly once
         under concurrent submission (the background compiler's worker
         entry point — also safe to call inline).
@@ -1697,9 +1893,9 @@ class DeploymentSession:
         if source not in ("background", "prefetch"):
             raise ValueError(f"unknown compile source {source!r}")
         self.compile()
-        ids = self._check_active(active)
-        key = frozenset(ids)
-        if ids == list(range(len(self.request.graphs))):
+        key = self.plan_key(active, shapes)
+        if (not isinstance(key, PlanKey)
+                and sorted(key) == list(range(len(self.request.graphs)))):
             return False
         with self._lock:
             if key in self.store or key in self._inflight:
@@ -1709,13 +1905,18 @@ class DeploymentSession:
                   else self.request.lazy_joint_time_budget_s)
         landed = False
         try:
-            plan = self._compile_subset(ids, joint_budget_s=budget,
-                                        source=source)
+            if isinstance(key, PlanKey):
+                plan = self._compile_subset_bucketed(
+                    key, joint_budget_s=budget, source=source)
+            else:
+                plan = self._compile_subset(sorted(key),
+                                            joint_budget_s=budget,
+                                            source=source)
             # a concurrent blocking plan_for may have landed first; only
             # a plan that actually entered the store counts as compiled
-            landed = self.store.seed(ids, plan)
+            landed = self.store.seed(key, plan)
             if landed:
-                self._record_solutions(ids, plan)
+                self._record_solutions(key, plan)
                 with self._lock:
                     self.lazy_compiles += 1
         finally:
@@ -1793,16 +1994,22 @@ class DeploymentSession:
         offer(alone_tgs, "compile-alone")
 
         # incremental warm start: the nearest cached occupancy's tilings
-        neighbor: Optional[FrozenSet[int]] = None
+        neighbor: Optional[StoreKey] = None
         warm_tgs: Optional[List[TiledGraph]] = None
         if req.incremental:
             near = self.store.nearest_solutions(ids)
             if near is not None:
-                neighbor, nsols = near
-                # members the neighbor lacks (it was a strict subset)
-                # fall back to their full-house co-tiled solutions
-                warm_sols = [nsols.get(i, mc.plan.tenants[i].solution)
+                nkey, nsols = near
+                nbks = key_parts(nkey)[1]
+                # members the neighbor lacks (it was a strict subset) —
+                # or tiled at a NON-default bucket (a solution for
+                # another sequence length is not a tiling of this
+                # graph) — fall back to their full-house co-tiled
+                # solutions
+                warm_sols = [nsols[i] if i in nsols and nbks.get(i) is None
+                             else mc.plan.tenants[i].solution
                              for i in ids]
+                neighbor = nkey
                 warm_tgs = [self._rewrite_cached(i, s)
                             for i, s in zip(ids, warm_sols)]
                 offer(warm_tgs, "warm-neighbor")
@@ -1871,7 +2078,167 @@ class DeploymentSession:
                  "wall_s": time.perf_counter() - t0,
                  "source": source,
                  "warm": neighbor is not None,
-                 "neighbor": (tuple(sorted(neighbor))
+                 "neighbor": (None if neighbor is None
+                              else describe_key(neighbor)
+                              if isinstance(neighbor, PlanKey)
+                              else tuple(sorted(neighbor))),
+                 "origin": plan.origin, "makespan": plan.makespan,
+                 "split": split, "proportional_makespan": prop_ms,
+                 "equal_makespan": equal_ms}
+        with self._lock:
+            self.miss_events.append(event)
+        return plan
+
+    def _compile_subset_bucketed(self, key: PlanKey,
+                                 joint_budget_s: Optional[float] = None,
+                                 source: str = "foreground"
+                                 ) -> MultiExecutionPlan:
+        """Per-lattice-point compile: :meth:`_compile_subset` with each
+        tenant's graph materialized at its requested sequence bucket, so
+        the candidate tilings, the L2-split arbitration and the
+        sequential floor all price the actual shapes of the round.
+
+        Candidate tiling sets:
+
+          * the members' *bucket-alone* tilings (the base set — each
+            tenant compiled alone at its bucket),
+          * the product-lattice-nearest recorded key's solutions
+            (:meth:`PlanStore.nearest_solutions`), reused per tenant
+            ONLY where that key's bucket matches this one — a tiling
+            chosen for another sequence length is not a tiling of this
+            graph; mismatched tenants substitute their bucket-alone
+            solution,
+          * a fresh joint cross-tenant solve over the bucket graphs
+            (:meth:`joint_tilings` with the ``graphs`` override).
+
+        The fixed-shape path's full-house-tilings candidate is
+        deliberately absent (those tilings were derived at default
+        buckets and are shape-invalid here), and the decomposed solve is
+        skipped (it reads the request's registered graphs); the
+        compile-alone concatenation floor still guarantees a bucketed
+        round never loses to running its members back to back."""
+        req = self.request
+        t0 = time.perf_counter()
+        occ, bks = key_parts(key)
+        ids = sorted(occ)
+        graphs: List[Graph] = []
+        alones: List[CompiledModel] = []
+        for i in ids:
+            b = bks.get(i)
+            if b is None:
+                graphs.append(req.graphs[i])
+                alones.append(self.singles[i])
+            else:
+                graphs.append(self.bucket_graph(i, b))
+                alones.append(self.bucket_single(i, b))
+        base_tgs = [cm.tiled for cm in alones]
+        refs = [cm.plan for cm in alones]
+        budgets = ([req.budgets[i] for i in ids]
+                   if req.budgets is not None else None)
+        sigs = {_sets_sig(base_tgs)}
+        alt_sets: List[List[TiledGraph]] = []
+        labels: List[str] = []
+
+        def offer(tgs: List[TiledGraph], label: str) -> None:
+            sig = _sets_sig(tgs)
+            if sig not in sigs:
+                sigs.add(sig)
+                alt_sets.append(list(tgs))
+                labels.append(label)
+
+        neighbor: Optional[StoreKey] = None
+        warm_tgs: Optional[List[TiledGraph]] = None
+        if req.incremental:
+            near = self.store.nearest_solutions(key)
+            if near is not None:
+                nkey, nsols = near
+                nbks = key_parts(nkey)[1]
+                matched = 0
+                warm_sols: List[TilingSolution] = []
+                for pos, i in enumerate(ids):
+                    sol = nsols.get(i)
+                    if sol is not None and nbks.get(i) == bks.get(i):
+                        warm_sols.append(sol)
+                        matched += 1
+                    else:
+                        warm_sols.append(alones[pos].solution)
+                if matched:
+                    neighbor = nkey
+                    warm_tgs = [cm.tiled if s is cm.solution
+                                else rewrite(g, req.soc, s)
+                                for g, cm, s in zip(graphs, alones,
+                                                    warm_sols)]
+                    offer(warm_tgs, "warm-neighbor")
+                    with self._lock:
+                        self.incremental_hits += 1
+
+        if (len(ids) > 1 and req.joint_tiling and req.mode in ASYNC_MODES
+                and any(getattr(s, "joint", False)
+                        for s in self.strategies)):
+            if joint_budget_s is not None:
+                budget = joint_budget_s
+            elif warm_tgs is not None:
+                budget = req.incremental_time_budget_s
+            else:
+                budget = req.joint_time_budget_s
+            seeds = ([[cm.solution for cm in alones]]
+                     if warm_tgs is not None else None)
+            jtgs = self.joint_tilings(ids,
+                                      warm=(warm_tgs if warm_tgs is not None
+                                            else base_tgs),
+                                      time_budget_s=budget, seeds=seeds,
+                                      graphs=graphs)
+            if jtgs is not None:
+                offer(jtgs, "joint-cp")
+
+        prop = None
+        if (budgets is None and req.l2_split == "proportional"
+                and len(ids) >= 2):
+            src_tgs = base_tgs
+            for label in ("joint-cp", "warm-neighbor"):
+                if label in labels:
+                    src_tgs = alt_sets[labels.index(label)]
+                    break
+            ws = [solution_ws_bytes(g, tg.solution)
+                  for g, tg in zip(graphs, src_tgs)]
+            p = proportional_budgets(req.soc.l2.size, ws)
+            prop = p if p != default_budgets(req.soc, len(ids)) else None
+
+        plan = schedule_multi(base_tgs, req.soc,
+                              budgets=(prop if prop is not None
+                                       else budgets),
+                              singles=refs, alt_tgs=alt_sets,
+                              alt_labels=labels, objective=self.objective)
+        split = None
+        prop_ms = equal_ms = None
+        if prop is not None:
+            prop_ms = plan.makespan
+            plan_eq = schedule_multi(base_tgs, req.soc, budgets=None,
+                                     singles=refs, alt_tgs=alt_sets,
+                                     alt_labels=labels,
+                                     objective=self.objective)
+            equal_ms = plan_eq.makespan
+            if self.objective.better(plan_eq, plan):
+                plan, split = plan_eq, "equal"
+            else:
+                split = "proportional"
+            with self._lock:
+                if split == "proportional":
+                    self.prop_split_wins += 1
+                else:
+                    self.equal_split_wins += 1
+        seq_alone = concat_plans(refs, req.soc, budgets)
+        seq_alone.origin = "sequential-alone"
+        if self.objective.better(seq_alone, plan):
+            plan = seq_alone
+        self._analyze(plan, f"infeasible bucketed co-schedule for "
+                            f"{describe_key(key)}")
+        event = {"occupancy": tuple(ids),
+                 "key": describe_key(key),
+                 "wall_s": time.perf_counter() - t0,
+                 "source": source,
+                 "warm": neighbor is not None,
+                 "neighbor": (describe_key(neighbor)
                               if neighbor is not None else None),
                  "origin": plan.origin, "makespan": plan.makespan,
                  "split": split, "proportional_makespan": prop_ms,
@@ -1918,18 +2285,22 @@ class DeploymentSession:
             return mc.plan.tenants[i]
         return rewrite(self.request.graphs[i], self.request.soc, sol)
 
-    def _record_solutions(self, ids: Sequence[int],
+    def _record_solutions(self, key,
                           plan: MultiExecutionPlan) -> None:
         """Sidecar the landed plan's per-tenant tiling solutions so later
         misses can warm-start from them even after the plan itself is
-        LRU-evicted (skipped if any tenant lacks a solution)."""
+        LRU-evicted (skipped if any tenant lacks a solution).  ``key`` is
+        any :meth:`PlanStore` key form; bucketed plans record under their
+        lattice point, so the warm-start search can tell which bucket a
+        recorded solution was tiled at."""
+        key = PlanStore._norm(key)
         sols: Dict[int, TilingSolution] = {}
-        for pos, i in enumerate(ids):
+        for pos, i in enumerate(sorted(key_occupancy(key))):
             sol = getattr(plan.tenants[pos], "solution", None)
             if sol is None:
                 return
             sols[i] = sol
-        self.store.seed_solutions(ids, sols)
+        self.store.seed_solutions(key, sols)
 
     def compile_latency_stats(self) -> Dict[str, object]:
         """p50/p99 wall time of the subset-miss compiles this session ran
@@ -1974,21 +2345,28 @@ class DeploymentSession:
         mc = self.compile()
         return self.reference_plan(i, mc.plan.tenants[i])
 
-    def reference_plan(self, i: int, tg: TiledGraph) -> ExecutionPlan:
+    def reference_plan(self, i: int, tg: TiledGraph,
+                       bucket: Optional[int] = None) -> ExecutionPlan:
         """Single-model reference schedule for tenant ``i`` over exactly
         the tiled graph ``tg`` — the bitwise numerics reference for any
         occupancy's co-schedule (per-occupancy plans may tile a tenant
         differently from the full house, so references are cached per
-        ``(tenant, tiling-signature)``)."""
-        if tg is self.singles[i].tiled:
-            return self.singles[i].plan
-        key: Hashable = (i, _tiling_sig(tg))
+        ``(tenant, tiling-signature)``).  ``bucket`` scopes the cache key
+        to a sequence bucket — tiling signatures only describe device /
+        tile-range structure, so the same signature at two buckets is
+        two different schedules (key ``(tenant, bucket, signature)``)."""
+        alone = (self.singles[i] if bucket is None
+                 else self.bucket_single(i, bucket))
+        if tg is alone.tiled:
+            return alone.plan
+        key: Hashable = ((i, _tiling_sig(tg)) if bucket is None
+                         else (i, int(bucket), _tiling_sig(tg)))
         if not self.store.has_tenant(key):
             # a complementary-selection winner's tiling already has a
             # full-effort compile-alone plan in the candidate pool; seed
             # it (reuse, not a compile) instead of re-scheduling at
             # reduced effort
-            for p in self.singles[i].alt_plans.values():
+            for p in alone.alt_plans.values():
                 if p.tiled is tg:
                     self.store.seed_tenant(key, p)
                     break

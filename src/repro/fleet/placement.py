@@ -54,6 +54,7 @@ from repro.core import cpsolver
 from repro.core.deploy import (CompileRequest, DeploymentSession,
                                MultiCompiledModel)
 from repro.core.ir import Graph
+from repro.core.shapes import key_parts, remap_key
 from repro.serve.admission import Priority, RoundComposer
 from repro.serve.compiler_thread import BackgroundCompiler
 from repro.serve.engine import MultiModelEngine
@@ -116,15 +117,20 @@ def transplant_solutions(src: DeploymentSession,
     src_names = [g.name for g in src.request.graphs]
     dst_index = {g.name: i for i, g in enumerate(dst.request.graphs)}
     seeded = 0
-    for occ in src.store.solution_occupancies():
+    for key in src.store.solution_occupancies():
+        occ, _ = key_parts(key)
         names = [src_names[i] for i in occ]
         if not all(n in dst_index for n in names):
             continue
-        sols = src.store.solutions(occ)
+        sols = src.store.solutions(key)
         if not sols:
             continue
-        mapped = {dst_index[src_names[i]]: sol for i, sol in sols.items()}
-        dst.store.seed_solutions(sorted(mapped), mapped)
+        index_map = {i: dst_index[src_names[i]] for i in occ}
+        mapped = {index_map[i]: sol for i, sol in sols.items()}
+        # bucketed lattice points keep their bucket vector under the
+        # destination's tenant indexing (a solution tiled for seq=1 must
+        # never warm-start a seq=64 compile over there either)
+        dst.store.seed_solutions(remap_key(key, index_map), mapped)
         seeded += 1
     return seeded
 

@@ -138,11 +138,18 @@ class FleetRouter:
         active = sorted(set(busy) | {tenant})
         plan = inst.mc.try_plan_for(active)
         warm = plan is not None
+
+        def floor(i: int) -> float:
+            # queued tenants priced at their head's shape bucket (a
+            # decode head is orders cheaper than the prefill default)
+            q = eng.queues[i]
+            return eng._req_floor_s(q[0]) if q else eng._floor_s(i)
+
         if warm:
             round_s = self.fleet.cache.cycles_to_s(plan.makespan)
         else:
             # a cold occupancy serves the compile-alone concat floor
-            round_s = sum(eng._floor_s(i) for i in active)
+            round_s = sum(floor(i) for i in active)
         externality = 0.0
         others = sum(len(q) for i, q in enumerate(eng.queues)
                      if i != tenant)
@@ -152,7 +159,7 @@ class FleetRouter:
             base_plan = inst.mc.try_plan_for(busy)
             base_s = (self.fleet.cache.cycles_to_s(base_plan.makespan)
                       if base_plan is not None
-                      else sum(eng._floor_s(i) for i in busy))
+                      else sum(floor(i) for i in busy))
             externality = others * max(0.0, round_s - base_s)
         start = max(eng.clock_s, arrival_s)
         return start + (depth + 1) * round_s + externality, warm
@@ -211,12 +218,21 @@ class FleetRouter:
                priority: Priority = Priority.NORMAL,
                deadline_s: Optional[float] = None,
                arrival_s: float = 0.0,
+               seq_len: Optional[int] = None,
+               deadline_abs_s: Optional[float] = None,
                _requeues: int = 0) -> int:
-        """Route one request; returns the fleet-wide request id."""
+        """Route one request; returns the fleet-wide request id.
+
+        ``seq_len`` passes through to the engine's shape bucketing for
+        LM classes.  ``deadline_abs_s`` pins the deadline on the
+        absolute clock instead of relative to arrival — the requeue
+        path uses it so a migrated request's SLO never restarts."""
         inst, warm = self.pick(class_name, arrival_s)
         engine_rid = inst.engine.submit(class_name, priority=priority,
                                         deadline_s=deadline_s,
-                                        arrival_s=arrival_s)
+                                        arrival_s=arrival_s,
+                                        seq_len=seq_len,
+                                        deadline_abs_s=deadline_abs_s)
         if engine_rid is not None and inst.engine.compiler is not None:
             # the set of classes now queued on the chosen SoC is its
             # likeliest next dispatch occupancy — hand it to the shared
@@ -263,11 +279,13 @@ class FleetRouter:
         out: List[int] = []
         for name, r in sorted(items, key=lambda nr: (nr[1].submit_s,
                                                      nr[1].rid)):
-            new_dl = None
-            if r.deadline_s is not None:
-                # absolute deadline preserved; may already be negative
-                # (hopeless) — still routed, never dropped
-                new_dl = (r.submit_s + r.deadline_s) - now_s
+            # the ORIGINAL absolute deadline rides along verbatim (the
+            # engine's deadline_abs_override_s): re-deriving a relative
+            # deadline against now_s and letting the destination engine
+            # re-add its own clock drifted the SLO whenever the two
+            # engines' analytic clocks disagreed — and a second
+            # migration compounded it.  May already be in the past
+            # (hopeless) — still routed, never dropped.
             with self._lock:
                 old = self._by_engine.pop(
                     (src_soc_id, epoch_at_drain, r.rid), None)
@@ -276,8 +294,10 @@ class FleetRouter:
                 if old is not None:
                     del self.requests[old]
                 self.requeued += 1
-            rid = self.submit(name, priority=r.priority, deadline_s=new_dl,
-                              arrival_s=now_s, _requeues=prev + 1)
+            rid = self.submit(name, priority=r.priority,
+                              deadline_abs_s=r.deadline_abs_s,
+                              arrival_s=now_s, seq_len=r.seq_len,
+                              _requeues=prev + 1)
             out.append(rid)
         return out
 

@@ -27,16 +27,21 @@ compile off the dispatch path:
 
 With ``prefetch=True`` the compiler also *predicts* likely next
 occupancies and compiles them speculatively at lower queue priority
-(the **occupancy-lattice prefetcher**): candidates are the Hamming-
-adjacent neighbors of recently observed occupancies (one tenant joins
-or leaves — how serving mixes actually churn) plus any externally
-registered hints (:meth:`prefetch_hint` — e.g. the fleet placement's
-per-SoC tenant sets), ranked by predicted request probability
-(recency-decayed neighbor counts + hint weights) times staleness (how
-long since the candidate was last attempted; already-cached occupancies
-have zero staleness and are never re-prefetched).  Reactive miss jobs
-always outrank prefetch jobs in the queue, so prefetching can only fill
-idle worker capacity, never delay a miss.
+(the **shape/occupancy-lattice prefetcher**): candidates are the
+Hamming-adjacent neighbors of recently observed store keys — one tenant
+joins or leaves at the anchor's bucket vector (how serving mixes
+actually churn), and, for anchors with shape-bucketed tenants, one
+tenant steps one rung down or up its bucket ladder (down-steps weighted
+double: a tenant observed at a prefill bucket is about to decode, so
+the prefill->decode transition is the lattice edge worth paying for
+before it is demanded) — plus any externally registered hints
+(:meth:`prefetch_hint` — e.g. the fleet placement's per-SoC tenant
+sets), ranked by predicted request probability (recency-decayed
+neighbor counts + hint weights) times staleness (how long since the
+candidate was last attempted; already-cached keys have zero staleness
+and are never re-prefetched).  Reactive miss jobs always outrank
+prefetch jobs in the queue, so prefetching can only fill idle worker
+capacity, never delay a miss.
 
 For deterministic tests (and fake-clock serving simulations) construct
 with ``start=False`` and pump jobs synchronously with
@@ -51,15 +56,27 @@ import math
 import queue
 import threading
 from collections import OrderedDict
-from typing import Dict, FrozenSet, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+from repro.core.shapes import (PlanKey, StoreKey, describe_key, key_parts,
+                               key_sort, make_plan_key)
+
+
+def _norm_key(active: Union[StoreKey, Sequence[int]]) -> StoreKey:
+    """Canonical store key: a :class:`PlanKey` passes through, anything
+    else is an iterable of tenant ids (the bare-occupancy key)."""
+    if isinstance(active, PlanKey):
+        return active
+    return frozenset(int(a) for a in active)
 
 
 @dataclasses.dataclass(frozen=True)
 class CompileJob:
-    """One queued background compile: an occupancy to materialize.
+    """One queued background compile: a store key — bare occupancy or
+    ``(occupancy, bucket-vector)`` lattice point — to materialize.
     ``source`` labels the session's miss event (``"background"`` for
     reactive miss compiles, ``"prefetch"`` for speculative ones)."""
-    occupancy: FrozenSet[int]
+    occupancy: StoreKey
     source: str = "background"
 
 
@@ -124,11 +141,11 @@ class BackgroundCompiler:
         self._inflight = 0
         self._threads: List[threading.Thread] = []
         # prefetcher state (all guarded by _lock): recently observed
-        # occupancies in recency order, external hint weights, and the
+        # store keys in recency order, external hint weights, and the
         # tick each candidate was last attempted at (its staleness clock)
-        self._recent: "OrderedDict[FrozenSet[int], None]" = OrderedDict()
-        self._hints: Dict[FrozenSet[int], float] = {}
-        self._last_attempt: Dict[FrozenSet[int], int] = {}
+        self._recent: "OrderedDict[StoreKey, None]" = OrderedDict()
+        self._hints: Dict[StoreKey, float] = {}
+        self._last_attempt: Dict[StoreKey, int] = {}
         self.max_retries = max_retries
         self.backoff_rounds = backoff_rounds
         self.submitted = 0
@@ -178,15 +195,16 @@ class BackgroundCompiler:
 
     # -- the queue ----------------------------------------------------------
 
-    def submit(self, active: Sequence[int], source: str = "background",
+    def submit(self, active, source: str = "background",
                priority: float = 0.0) -> bool:
-        """Enqueue a compile for ``active`` unless the plan is already
-        cached, the occupancy is already queued/in-flight, its backoff
-        window after a raised compile has not elapsed, or its retries are
-        exhausted (poisoned — the engine keeps serving that occupancy on
-        the compile-alone floor instead of burning a worker on a doomed
-        compile every round)."""
-        key = frozenset(int(a) for a in active)
+        """Enqueue a compile for ``active`` (tenant ids, or a
+        :class:`~repro.core.shapes.PlanKey` lattice point) unless the
+        plan is already cached, the key is already queued/in-flight, its
+        backoff window after a raised compile has not elapsed, or its
+        retries are exhausted (poisoned — the engine keeps serving that
+        key on the compile-alone floor instead of burning a worker on a
+        doomed compile every round)."""
+        key = _norm_key(active)
         with self._lock:
             self._tick += 1
             if key in self._queued or key in self._failed:
@@ -228,14 +246,15 @@ class BackgroundCompiler:
 
     # -- the occupancy-lattice prefetcher -----------------------------------
 
-    def observe(self, active: Sequence[int]) -> int:
-        """Record one dispatched occupancy (hit or miss) as a lattice
+    def observe(self, active) -> int:
+        """Record one dispatched store key (hit or miss) as a lattice
         anchor, then speculatively enqueue the top-ranked uncompiled
         neighbors (when ``prefetch`` is on).  Returns the number of
         prefetch jobs enqueued.  The engine calls this on every resolve;
         it is cheap — candidate generation walks at most
-        ``recent_window`` anchors' Hamming-1 neighborhoods."""
-        key = frozenset(int(a) for a in active)
+        ``recent_window`` anchors' Hamming-1 neighborhoods (occupancy
+        joins/leaves plus one-rung bucket-ladder steps)."""
+        key = _norm_key(active)
         with self._lock:
             self._recent.pop(key, None)
             self._recent[key] = None       # most-recent at the end
@@ -247,49 +266,84 @@ class BackgroundCompiler:
 
     def prefetch_hint(self, occupancies: Sequence[Sequence[int]],
                       weight: float = 1.0) -> None:
-        """Register externally predicted occupancies (e.g. the fleet
+        """Register externally predicted store keys (e.g. the fleet
         placement's per-SoC tenant sets, mapped to this session's tenant
-        indices) as standing prefetch candidates with the given
-        probability weight."""
+        indices — bare id lists or :class:`PlanKey` lattice points) as
+        standing prefetch candidates with the given probability weight."""
         with self._lock:
             for occ in occupancies:
-                self._hints[frozenset(int(a) for a in occ)] = float(weight)
+                self._hints[_norm_key(occ)] = float(weight)
 
-    def _candidates(self) -> List[Tuple[float, FrozenSet[int]]]:
-        """Ranked prefetch candidates: Hamming-1 neighbors of the recent
-        anchors (recency-decayed) plus the standing hints, scored by
-        predicted request probability x staleness.  Caller holds the
-        lock."""
+    def _bucket_spec(self, tenant: int):
+        """The tenant's shape-bucket spec via the session (``None`` for
+        fixed-shape tenants and duck-typed test-fake sessions)."""
+        spec_of = getattr(self.session, "bucket_spec", None)
+        return spec_of(tenant) if spec_of is not None else None
+
+    def _candidates(self) -> List[Tuple[float, StoreKey]]:
+        """Ranked prefetch candidates: Hamming-1 lattice neighbors of
+        the recent anchors (recency-decayed) plus the standing hints,
+        scored by predicted request probability x staleness.
+
+        A neighbor differs from its anchor in exactly one coordinate of
+        the (occupancy x bucket-vector) product lattice: one tenant
+        joins (at its default bucket) or leaves, or one shape-bucketed
+        tenant steps one rung along its bucket ladder.  Down-steps carry
+        the anchor's full recency weight while up-steps carry half — a
+        tenant just observed at a prefill bucket is about to decode, so
+        walking toward seq=1 prefetches the prefill->decode transition
+        before the engine demands it.  Caller holds the lock."""
         n = len(self.session.request.graphs)
         universe = frozenset(range(n))
-        scores: Dict[FrozenSet[int], float] = {}
+        scores: Dict[StoreKey, float] = {}
+
+        def bump(key: StoreKey, w: float) -> None:
+            scores[key] = scores.get(key, 0.0) + w
+
         recents = list(self._recent)       # oldest .. newest
-        for age, occ in enumerate(reversed(recents)):   # newest first
+        for age, anchor in enumerate(reversed(recents)):   # newest first
             w = 0.5 ** age                 # recency-decayed probability
-            for t in universe - occ:
-                nb = occ | {t}
-                scores[nb] = scores.get(nb, 0.0) + w
+            occ, bks = key_parts(anchor)
+            for t in universe - occ:       # a tenant joins (at default)
+                bump(make_plan_key(occ | {t}, bks), w)
             if len(occ) > 1:
-                for t in occ:
-                    nb = occ - {t}
-                    scores[nb] = scores.get(nb, 0.0) + w
-        for occ, w in self._hints.items():
-            scores[occ] = scores.get(occ, 0.0) + w
-        out: List[Tuple[float, FrozenSet[int]]] = []
+                for t in occ:              # a tenant leaves
+                    bump(make_plan_key(
+                        occ - {t},
+                        {k: v for k, v in bks.items() if k != t}), w)
+            for t in sorted(occ):          # one bucket-ladder step
+                spec = self._bucket_spec(t)
+                if spec is None:
+                    continue
+                cur = bks.get(t, spec.default)
+                for nb in spec.neighbors(cur):
+                    nbks = dict(bks)
+                    if nb == spec.default:
+                        nbks.pop(t, None)
+                    else:
+                        nbks[t] = nb
+                    bump(make_plan_key(occ, nbks),
+                         w if nb < cur else w * 0.5)
+        for key, w in self._hints.items():
+            bump(key, w)
+        out: List[Tuple[float, StoreKey]] = []
         window = max(self.recent_window, 1)
-        for occ, prob in scores.items():
-            if not occ or occ == universe:  # full house is always cached
+        for key, prob in scores.items():
+            occ = key_parts(key)[0]
+            if not occ:
                 continue
-            if occ in self._queued or occ in self._failed:
+            if not isinstance(key, PlanKey) and key == universe:
+                continue                   # bare full house: always cached
+            if key in self._queued or key in self._failed:
                 continue
-            last = self._last_attempt.get(occ)
+            last = self._last_attempt.get(key)
             staleness = (1.0 if last is None else
                          min((self._tick - last) / window, 1.0))
             if staleness <= 0.0:
                 continue
-            out.append((prob * staleness, occ))
-        # deterministic rank: score desc, then canonical occupancy order
-        out.sort(key=lambda so: (-so[0], sorted(so[1])))
+            out.append((prob * staleness, key))
+        # deterministic rank: score desc, then canonical lattice order
+        out.sort(key=lambda so: (-so[0], key_sort(so[1])))
         return out
 
     def prefetch_now(self, limit: Optional[int] = None) -> int:
@@ -328,7 +382,8 @@ class BackgroundCompiler:
                 attempts = self._attempts.get(job.occupancy, 0) + 1
                 self._attempts[job.occupancy] = attempts
                 if len(self.errors) < self.max_errors:
-                    self.errors.append(f"{sorted(job.occupancy)}: {exc!r}")
+                    self.errors.append(
+                        f"{describe_key(job.occupancy)}: {exc!r}")
                 if attempts > self.max_retries:
                     self._failed.add(job.occupancy)   # retries exhausted
                     self._retry_after.pop(job.occupancy, None)

@@ -1,13 +1,7 @@
-"""Serving engines.
+"""Multi-tenant serving engine.
 
-``make_serve_steps`` returns the two jit-able pure functions the launcher
-lowers (prefill_step, decode_step); :class:`Engine` wraps them with a
-request queue, slot allocation and greedy/temperature sampling for the
-runnable examples.
-
-:class:`MultiModelEngine` is the multi-tenant counterpart at the compiled-
-plan level: it admits inference requests for N *different* models compiled
-onto one SoC (``repro.core.api.compile_multi`` / a
+:class:`MultiModelEngine` admits inference requests for N *different*
+models compiled onto one SoC (``repro.core.api.compile_multi`` / a
 ``repro.core.deploy.DeploymentSession``) and dispatches them in
 co-scheduled rounds — every round executes the plan covering exactly that
 occupancy (``plan_for(active)``, answered from the session's
@@ -15,6 +9,20 @@ occupancy-indexed plan store), including singleton occupancies, whose
 one-tenant plan is never worse than the full-house reference schedule.
 The compile-alone back-to-back fallback remains only for session-less
 artifacts.
+
+LM tenants ride the same engine since the shape-bucket rework: a request
+may carry a ``seq_len``, which the tenant's
+:class:`~repro.core.shapes.ShapeBucketSpec` rounds up to a power-of-two
+sequence bucket.  The round then resolves its plan at the
+``(occupancy, bucket-vector)`` lattice point of the dispatched heads
+(``plan_for(ids, shapes=...)``), so a prefill round and a decode round at
+the same occupancy are distinct cached plans, and every service-time
+estimate the scheduler leans on — per-request floors, backlog, EDF
+winnability, the composer's probe — is priced at the request's *bucket*,
+not at the tenant's default (prefill) graph.  This retired the old
+single-model token-loop ``Engine``: prefill and decode are submitted as
+separate bucketed requests through this engine instead (see
+``examples/serve_lm.py``).
 
 Since the SLO rework the dispatch layer is pluggable:
 
@@ -53,109 +61,14 @@ machine-independent quantities.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Mapping, Optional
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.models.api import get_model
-from repro.models.config import ModelConfig
 from repro.serve.admission import (AdmissionController, Priority,
                                    RoundComposer, RoundPlanProbe,
                                    TenantView)
 from repro.serve.compiler_thread import BackgroundCompiler
-
-
-def make_serve_steps(cfg: ModelConfig, max_seq: int
-                     ) -> Tuple[Callable, Callable]:
-    model = get_model(cfg)
-
-    def prefill_step(params, tokens):
-        return model.prefill(cfg, params, tokens, max_seq)
-
-    def decode_step(params, cache, token):
-        return model.decode_step(cfg, params, cache, token)
-
-    return prefill_step, decode_step
-
-
-@dataclasses.dataclass
-class Request:
-    rid: int
-    prompt: List[int]
-    max_new: int
-    out: List[int] = dataclasses.field(default_factory=list)
-    done: bool = False
-
-
-class Engine:
-    """Minimal continuous-batching engine over the pure step functions.
-
-    All sequences in a batch prefill together (padded), then decode in
-    lock-step; finished sequences keep decoding into a scratch slot until
-    the batch drains (the standard static-batch simplification — slot reuse
-    across batches is the continuous part)."""
-
-    def __init__(self, cfg: ModelConfig, params, max_seq: int = 512,
-                 eos: int = 0, temperature: float = 0.0, seed: int = 0):
-        self.cfg = cfg
-        self.params = params
-        self.max_seq = max_seq
-        self.eos = eos
-        self.temperature = temperature
-        self.key = jax.random.PRNGKey(seed)
-        prefill, decode = make_serve_steps(cfg, max_seq)
-        self._prefill = jax.jit(prefill)
-        self._decode = jax.jit(decode)
-        self.queue: List[Request] = []
-        self._next_rid = 0
-
-    def submit(self, prompt: List[int], max_new: int = 32) -> int:
-        rid = self._next_rid
-        self._next_rid += 1
-        self.queue.append(Request(rid, list(prompt), max_new))
-        return rid
-
-    def _sample(self, logits: jnp.ndarray) -> jnp.ndarray:
-        if self.temperature <= 0.0:
-            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        self.key, sub = jax.random.split(self.key)
-        return jax.random.categorical(
-            sub, logits / self.temperature, axis=-1).astype(jnp.int32)
-
-    def run(self, batch_size: int = 4) -> Dict[int, List[int]]:
-        """Drain the queue; returns {rid: generated tokens}."""
-        results: Dict[int, List[int]] = {}
-        while self.queue:
-            batch = self.queue[:batch_size]
-            self.queue = self.queue[batch_size:]
-            plen = max(len(r.prompt) for r in batch)
-            toks = np.zeros((len(batch), plen), np.int32)
-            for i, r in enumerate(batch):
-                toks[i, plen - len(r.prompt):] = r.prompt   # left-pad
-            logits, cache = self._prefill(self.params, jnp.asarray(toks))
-            tok = self._sample(logits)
-            steps = max(r.max_new for r in batch)
-            for _ in range(steps):
-                for i, r in enumerate(batch):
-                    if not r.done:
-                        t = int(tok[i])
-                        r.out.append(t)
-                        if t == self.eos or len(r.out) >= r.max_new:
-                            r.done = True
-                if all(r.done for r in batch):
-                    break
-                logits, cache = self._decode(self.params, cache, tok)
-                tok = self._sample(logits)
-            for r in batch:
-                results[r.rid] = r.out
-        return results
-
-
-# ---------------------------------------------------------------------------
-# Multi-tenant serving over a co-scheduled plan
-# ---------------------------------------------------------------------------
 
 
 @dataclasses.dataclass
@@ -177,9 +90,19 @@ class InferRequest:
     deadline_met: Optional[bool] = None   # None when no deadline was set
     served_on_floor: bool = False         # compile-alone floor round (async)
     edf_bypasses: int = 0                 # times an EDF pick jumped this one
+    # --- shape buckets -----------------------------------------------------
+    seq_len: Optional[int] = None         # raw sequence length, if any
+    bucket: Optional[int] = None          # resolved shape bucket, if any
+    # absolute deadline pinned at the ORIGINAL submission: a requeued /
+    # migrated request re-enters another engine with a fresh submit_s on a
+    # different analytic clock, and recomputing submit_s + deadline_s there
+    # would silently extend the SLO by the time already burned waiting
+    deadline_abs_override_s: Optional[float] = None
 
     @property
     def deadline_abs_s(self) -> Optional[float]:
+        if self.deadline_abs_override_s is not None:
+            return self.deadline_abs_override_s
         return (None if self.deadline_s is None
                 else self.submit_s + self.deadline_s)
 
@@ -292,20 +215,43 @@ class MultiModelEngine:
                 depths[r.priority] += 1
         return depths
 
+    def _resolve_bucket(self, tenant: int,
+                        seq_len: Optional[int]) -> Optional[int]:
+        """Round ``seq_len`` up to the tenant's shape bucket (``None``
+        for shapeless requests).  Requires a session-backed artifact with
+        a :class:`~repro.core.shapes.ShapeBucketSpec` for the tenant."""
+        if seq_len is None:
+            return None
+        spec = (self.session.bucket_spec(tenant)
+                if self.session is not None else None)
+        if spec is None:
+            raise ValueError(f"tenant {tenant} takes no seq_len: no "
+                             f"shape_buckets spec (session-backed "
+                             f"artifacts only)")
+        return spec.bucket_for(seq_len)
+
     def submit(self, model, inputs=None, seed: int = 0,
                priority: Priority = Priority.NORMAL,
                deadline_s: Optional[float] = None,
-               arrival_s: Optional[float] = None) -> Optional[int]:
+               arrival_s: Optional[float] = None,
+               seq_len: Optional[int] = None,
+               deadline_abs_s: Optional[float] = None) -> Optional[int]:
         """Queue one inference for ``model`` (graph name or tenant index).
 
         ``inputs`` defaults to random inputs for smoke runs (skipped when
         the engine runs with ``execute=False``).  ``deadline_s`` is
-        relative to the submission clock; ``arrival_s`` stamps an
-        open-loop arrival time (also advancing the idle clock).  Returns
-        the request id, or ``None`` when admission rejected the request
-        (recorded in ``rejected``)."""
+        relative to the submission clock; ``deadline_abs_s`` instead pins
+        the deadline on the absolute analytic clock — the fleet router
+        uses it to requeue a migrated request without restarting its SLO.
+        ``arrival_s`` stamps an open-loop arrival time (also advancing
+        the idle clock).  ``seq_len`` routes an LM tenant's request to
+        its shape bucket (prefill at the prompt length, decode at 1); the
+        bucket's compile-alone artifact is built here, at submission —
+        off the dispatch path.  Returns the request id, or ``None`` when
+        admission rejected the request (recorded in ``rejected``)."""
         tenant = self.resolve(model)
         priority = Priority(priority)
+        bucket = self._resolve_bucket(tenant, seq_len)
         if arrival_s is not None:
             self.advance_clock(arrival_s)
         submit_s = arrival_s if arrival_s is not None else self.clock_s
@@ -320,22 +266,50 @@ class MultiModelEngine:
                 InferRequest(rid, tenant, None, self._round,
                              priority=priority, deadline_s=deadline_s,
                              submit_s=submit_s,
-                             depth_at_submit=len(self.queues[tenant])))
+                             depth_at_submit=len(self.queues[tenant]),
+                             seq_len=seq_len, bucket=bucket,
+                             deadline_abs_override_s=deadline_abs_s))
             return None
-        if priority != Priority.NORMAL or deadline_s is not None:
+        if (priority != Priority.NORMAL or deadline_s is not None
+                or deadline_abs_s is not None):
             # only ADMITTED SLO traffic ends the zero-cost FIFO
             # short-circuit — a rejected request never enters a queue
             self._slo_seen = True
+        if bucket is not None:
+            # price the request's floor before it can be dispatched (and
+            # never inside a round): compile-alone at the bucket
+            self.session.bucket_single(tenant, bucket)
         if inputs is None and self.execute:
             from repro.core.runtime import init_inputs
-            inputs = init_inputs(self.compiled.graphs[tenant], seed + rid)
+            g = (self.session.bucket_graph(tenant, bucket)
+                 if bucket is not None else self.compiled.graphs[tenant])
+            inputs = init_inputs(g, seed + rid)
         req = InferRequest(rid, tenant, inputs, self._round,
                            priority=priority, deadline_s=deadline_s,
                            submit_s=submit_s,
-                           depth_at_submit=len(self.queues[tenant]))
+                           depth_at_submit=len(self.queues[tenant]),
+                           seq_len=seq_len, bucket=bucket,
+                           deadline_abs_override_s=deadline_abs_s)
         if not self.queues[tenant]:
             self._head_since[tenant] = self._steps
         self.queues[tenant].append(req)
+        if self.compiler is not None and self.compiler.prefetch:
+            # announce the bucket transition at ARRIVAL: the lattice
+            # point the next round will dispatch at (current heads'
+            # buckets) goes straight into the prefetch queue, so a
+            # prefill->decode transition compiles off-path before it is
+            # ever demanded — the lattice walk alone only reaches one
+            # rung per observed round and a decode bucket can be several
+            # rungs down.  Fires on ANY arrival while a bucketed head is
+            # queued (an unbucketed tenant joining changes the lattice
+            # point too); pure fixed-shape traffic never reaches it.
+            active = [t for t, q in enumerate(self.queues) if q]
+            shapes = {t: self.queues[t][0].bucket for t in active
+                      if self.queues[t][0].bucket is not None}
+            if shapes:
+                self.compiler.submit(
+                    self.session.plan_key(active, shapes),
+                    source="prefetch", priority=0.25)
         return rid
 
     @property
@@ -344,11 +318,14 @@ class MultiModelEngine:
 
     def backlog_s(self) -> float:
         """Analytic upper estimate of the queued work, in seconds: every
-        queued request charged its tenant's compile-alone makespan.  It
-        ignores co-scheduling overlap — a deliberate upper bound, used by
-        the fleet router's least-predicted-completion scoring."""
-        return sum(len(q) * self._floor_s(i)
-                   for i, q in enumerate(self.queues))
+        queued request charged its *bucket's* compile-alone makespan (a
+        decode request is ~2 orders cheaper than its tenant's prefill
+        default — pricing both at the default graph was the shape-blind
+        bug that made the fleet router steer decode streams away from
+        lightly loaded engines).  It ignores co-scheduling overlap — a
+        deliberate upper bound, used by the fleet router's
+        least-predicted-completion scoring."""
+        return sum(self._req_floor_s(r) for q in self.queues for r in q)
 
     def drain_pending(self) -> List[InferRequest]:
         """Remove and return every queued (not yet dispatched) request,
@@ -363,18 +340,54 @@ class MultiModelEngine:
 
     # -- round composition --------------------------------------------------
 
-    def _floor_s(self, tenant: int) -> float:
-        """Compile-alone makespan of one tenant, seconds (the concat
-        floor's per-member contribution)."""
+    def _floor_s(self, tenant: int, bucket: Optional[int] = None) -> float:
+        """Compile-alone makespan of one tenant at ``bucket`` (default
+        graph when ``None``), seconds — the concat floor's per-member
+        contribution.  The bucket artifact was compiled at submission,
+        so this lookup is cache-hit cheap on the dispatch path."""
+        if bucket is None:
+            return self._cycles_to_s(
+                self.compiled.singles[tenant].plan.makespan)
         return self._cycles_to_s(
-            self.compiled.singles[tenant].plan.makespan)
+            self.session.bucket_single(tenant, bucket).plan.makespan)
+
+    def _req_floor_s(self, r: InferRequest) -> float:
+        """One request's compile-alone service estimate, priced at its
+        shape bucket."""
+        return self._floor_s(r.tenant, r.bucket)
+
+    def _head_shapes(self, ids: List[int]
+                     ) -> Optional[Mapping[int, int]]:
+        """Bucket vector of the requests the next wave over ``ids``
+        would pop (the EDF pick per tenant) — the ``shapes=`` argument
+        for plan resolution.  ``None`` when every head is shapeless."""
+        shapes: Dict[int, int] = {}
+        for i in ids:
+            q = self.queues[i]
+            if not q:
+                continue
+            r = q[self._edf_index(i)]
+            if r.bucket is not None:
+                shapes[i] = r.bucket
+        return shapes or None
 
     def _probe(self) -> RoundPlanProbe:
-        try_plan = (self.session.try_plan_for
-                    if self.session is not None else None)
+        heads = {i: self.queues[i][self._edf_index(i)]
+                 for i in range(self.n_tenants) if self.queues[i]}
+        if self.session is not None:
+            buckets = {i: r.bucket for i, r in heads.items()
+                       if r.bucket is not None}
+
+            def try_plan(ids, touch: bool = False):
+                sh = {i: buckets[i] for i in ids if i in buckets}
+                return self.session.try_plan_for(ids, touch=touch,
+                                                 shapes=sh or None)
+        else:
+            try_plan = None
         return RoundPlanProbe(
             try_plan=try_plan, cycles_to_s=self._cycles_to_s,
-            floors_s={i: self._floor_s(i)
+            floors_s={i: (self._req_floor_s(heads[i]) if i in heads
+                          else self._floor_s(i))
                       for i in range(self.n_tenants)})
 
     def _compose_round(self, active: List[int]) -> List[int]:
@@ -391,7 +404,7 @@ class MultiModelEngine:
                             wait_rounds=self._round
                             - self.queues[i][0].submit_round,
                             depth=len(self.queues[i]),
-                            floor_s=self._floor_s(i),
+                            floor_s=self._req_floor_s(self.queues[i][0]),
                             head_tenure_rounds=self._steps
                             - self._head_since[i],
                             queue=tuple((r.priority, r.deadline_abs_s,
@@ -406,20 +419,22 @@ class MultiModelEngine:
 
     # -- dispatch -----------------------------------------------------------
 
-    def _resolve_plan(self, ids: List[int]):
-        """The round's occupancy plan, or ``None`` for a floor/fallback
-        round.  With a background compiler attached the lookup never
-        compiles: a miss enqueues the compile and this round serves the
-        compile-alone concat floor."""
+    def _resolve_plan(self, ids: List[int],
+                      shapes: Optional[Mapping[int, int]] = None):
+        """The round's occupancy plan at the given bucket vector, or
+        ``None`` for a floor/fallback round.  With a background compiler
+        attached the lookup never compiles: a miss enqueues the compile
+        and this round serves the compile-alone concat floor."""
         if self.compiler is not None:
-            # every dispatched occupancy (hit or miss) anchors the
-            # compiler's occupancy-lattice prefetcher
-            self.compiler.observe(ids)
-            plan = self.session.try_plan_for(ids, touch=True)
+            # every dispatched lattice point (hit or miss) anchors the
+            # compiler's shape/occupancy-lattice prefetcher
+            key = self.session.plan_key(ids, shapes)
+            self.compiler.observe(key)
+            plan = self.session.try_plan_for(key, touch=True)
             if plan is None:
-                self.compiler.submit(ids)
+                self.compiler.submit(key)
             return plan, plan is None          # floor round on miss
-        return self.compiled.plan_for(ids), False
+        return self.compiled.plan_for(ids, shapes=shapes), False
 
     def _param_dma_in_cycles(self, plan) -> float:
         """DMA cycles this plan spends loading parameter tensors — the
@@ -472,14 +487,16 @@ class MultiModelEngine:
         the reorder from trading attainment or boundedness away:
 
           * a deadline that cannot be met even if served immediately
-            (absolute deadline before ``clock_s`` plus the tenant's
-            compile-alone floor) earns no jump — EDF never delays a
-            winnable request for a lost cause;
+            (absolute deadline before ``clock_s`` plus the *request's
+            bucket* compile-alone floor — a decode request stays
+            winnable far later than a prefill one) earns no jump — EDF
+            never delays a winnable request for a lost cause;
           * a jump may not predictably kill a bypassed request's
             deadline: every deadline-carrying request it would jump
-            must survive one extra wave of delay (``clock_s + 2 *
-            floor``) — the composer's deadline-protection rule applied
-            inside the queue — unless that deadline is already sealed;
+            must survive one extra wave of delay (``clock_s + 2 *`` its
+            own bucket floor) — the composer's deadline-protection rule
+            applied inside the queue — unless that deadline is already
+            sealed;
           * a request bypassed ``starvation_rounds`` times blocks any
             further jump over it, so the structural wait bound
             stretches by at most the recorded ``edf_bypasses`` (see
@@ -488,15 +505,13 @@ class MultiModelEngine:
         q = self.queues[tenant]
         if self.composer is None or not self._slo_seen or len(q) <= 1:
             return 0
-        floor = self._floor_s(tenant)
-        winnable_after = self.clock_s + floor
-        safe_after = self.clock_s + 2.0 * floor
         cls = q[0].priority
         limit = self.composer.config.starvation_rounds
 
         def key(r: InferRequest, i: int):
             dl = r.deadline_abs_s
-            winnable = dl is not None and dl >= winnable_after
+            winnable = (dl is not None
+                        and dl >= self.clock_s + self._req_floor_s(r))
             return (dl if winnable else float("inf"), i)
 
         best_i, best_key = 0, key(q[0], 0)
@@ -505,8 +520,11 @@ class MultiModelEngine:
             if prev.edf_bypasses >= limit:
                 break                      # bypass budget exhausted ahead
             pdl = prev.deadline_abs_s
-            if pdl is not None and winnable_after <= pdl < safe_after:
-                break                      # jump would endanger a winnable
+            if pdl is not None:
+                pfloor = self._req_floor_s(prev)
+                if (self.clock_s + pfloor <= pdl
+                        < self.clock_s + 2.0 * pfloor):
+                    break                  # jump would endanger a winnable
             r = q[i]
             if r.priority != cls:
                 continue
@@ -538,8 +556,11 @@ class MultiModelEngine:
         r.finish_s = finish_s
         r.e2e_latency_ms = (finish_s - r.submit_s) * 1e3
         r.served_on_floor = floor
-        if r.deadline_s is not None:
-            r.deadline_met = finish_s <= r.submit_s + r.deadline_s
+        dl = r.deadline_abs_s
+        if dl is not None:
+            # via deadline_abs_s, NOT submit_s + deadline_s: a migrated
+            # request's override keeps the original SLO across engines
+            r.deadline_met = finish_s <= dl
         self.results[r.rid] = out
         self.done[r.rid] = r
         completed.append(r.rid)
@@ -551,7 +572,9 @@ class MultiModelEngine:
         from repro.core.runtime import execute_multi_plan, execute_plan
         self._round += 1
         round_start = self.clock_s
-        plan, floor = self._resolve_plan(ids)
+        # the bucket vector of the heads this wave pops — resolved BEFORE
+        # popping, so the plan lookup and the pop see the same EDF picks
+        plan, floor = self._resolve_plan(ids, self._head_shapes(ids))
         if plan is not None:
             # positions in the occupancy plan follow sorted tenant ids,
             # which is the order ``ids`` arrives in
@@ -597,8 +620,12 @@ class MultiModelEngine:
         round_offset = 0.0
         for i in ids:
             r = self._pop_head(i)
-            splan = (self.compiled.singles[i].plan if floor
-                     else self.compiled.tenant_plan(i))
+            if floor:
+                splan = (self.session.bucket_single(i, r.bucket).plan
+                         if r.bucket is not None
+                         else self.compiled.singles[i].plan)
+            else:
+                splan = self.compiled.tenant_plan(i)
             out = (execute_plan(splan, r.inputs, self.params[i])
                    if self.execute else None)
             self.solo_dispatches += 1

@@ -360,3 +360,57 @@ def test_transplant_solutions_remaps_by_name(exec_fleet):
     assert transplant_solutions(src, dst) >= 1
     a_dst = [g.name for g in dst.request.graphs].index("a")
     assert dst.store.solutions([a_dst]) is not None
+
+
+# ---------------------------------------------------------------------------
+# (e) cross-clock SLO preservation on requeue
+# ---------------------------------------------------------------------------
+
+
+def test_requeue_preserves_absolute_deadline_across_clocks():
+    """Satellite regression: a deadlined request migrated between
+    engines whose analytic clocks disagree must keep its ORIGINAL
+    absolute deadline.  The old requeue path re-derived a relative
+    deadline against the rebalance timestamp and let the destination
+    engine re-anchor it on its own clock — every clock disagreement
+    drifted the SLO, and a second migration compounded it."""
+    fleet = Fleet(_config(), _graphs())
+    fleet.apply_placement(Placement(
+        assignment=[("a", "b"), ("a",), ()], method="manual"))
+    router = FleetRouter(fleet)
+    reb = FleetRebalancer(fleet, router)
+    src = fleet.hosts_of("b")[0]
+    # advance the source engine's clock well past any survivor's
+    for _ in range(4):
+        router.submit("b", arrival_s=0.0)
+    src.engine.run()
+    now = src.engine.clock_s
+    assert now > 0.0
+    dst_before = fleet.hosts_of("a")[-1]
+    assert dst_before.soc_id != src.soc_id
+    assert dst_before.engine.clock_s < now      # the clocks disagree
+    # a deadlined request queues on the advanced-clock engine
+    router.submit("b", deadline_s=5.0, arrival_s=now)
+    b_idx = list(src.classes).index("b")
+    queued = src.engine.queues[b_idx][0]
+    abs0 = queued.deadline_abs_s
+    assert abs0 == pytest.approx(now + 5.0)
+    # fail the source: "b" re-hosts on a survivor, the queued request
+    # requeues through the router with its absolute deadline verbatim
+    reb.fail(src.soc_id, at_s=now)
+    new_host = fleet.hosts_of("b")[0]
+    assert new_host.soc_id != src.soc_id
+    new_idx = list(new_host.classes).index("b")
+    migrated = new_host.engine.queues[new_idx][0]
+    assert migrated.deadline_abs_override_s == pytest.approx(abs0)
+    assert migrated.deadline_abs_s == pytest.approx(abs0)
+    # the override is load-bearing: the destination could NOT have
+    # reconstructed abs0 from its own clock and a relative deadline
+    assert migrated.deadline_s is None
+    assert migrated.submit_s + 5.0 != pytest.approx(abs0) or \
+        migrated.submit_s == pytest.approx(now)
+    # ... and the SLO verdict is judged against the original deadline
+    new_host.engine.run()
+    done = new_host.engine.done[migrated.rid]
+    assert done.deadline_met == (done.finish_s <= abs0)
+    assert router.audit()["dropped"] == 0

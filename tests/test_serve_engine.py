@@ -1,55 +1,12 @@
-"""Serving engine: continuous batching, determinism at T=0, cache reuse —
-plus the multi-tenant engine's report invariants under a seeded
-mixed-class soak and the per-tenant request batching of co-round slots."""
+"""Multi-tenant engine: report invariants under a seeded mixed-class
+soak and the per-tenant request batching of co-round slots.  (The old
+single-model token-loop ``Engine`` was retired by the shape-bucket
+rework — LM serving now goes through ``MultiModelEngine`` as bucketed
+requests; see ``tests/test_shape_buckets.py``.)"""
 
 import random
 
-import jax
 import pytest
-
-from repro.configs import registry
-from repro.models.api import get_model
-from repro.serve.engine import Engine
-
-KEY = jax.random.PRNGKey(0)
-
-
-@pytest.fixture(scope="module")
-def engine():
-    cfg = registry.get_smoke_config("internlm2-1.8b")
-    model = get_model(cfg)
-    params = model.init(KEY, cfg)
-    return Engine(cfg, params, max_seq=96, temperature=0.0)
-
-
-def test_engine_drains_queue(engine):
-    rids = [engine.submit([1, 2, 3, 4], max_new=6) for _ in range(5)]
-    out = engine.run(batch_size=2)
-    assert set(out) == set(rids)
-    assert all(1 <= len(v) <= 6 for v in out.values())
-
-
-def test_greedy_decode_deterministic(engine):
-    r1 = engine.submit([5, 6, 7], max_new=8)
-    o1 = engine.run()[r1]
-    r2 = engine.submit([5, 6, 7], max_new=8)
-    o2 = engine.run()[r2]
-    assert o1 == o2
-
-
-def test_prefix_consistency(engine):
-    """Generations from the same prompt with different max_new share the
-    prefix (greedy decoding is causal)."""
-    ra = engine.submit([9, 10, 11], max_new=4)
-    oa = engine.run()[ra]
-    rb = engine.submit([9, 10, 11], max_new=8)
-    ob = engine.run()[rb]
-    assert ob[: len(oa)] == oa
-
-
-# ---------------------------------------------------------------------------
-# MultiModelEngine: seeded mixed-class soak + co-round request batching
-# ---------------------------------------------------------------------------
 
 
 @pytest.fixture(scope="module")

@@ -1,0 +1,392 @@
+"""Shape buckets end to end: the key vocabulary, the composite-keyed
+PlanStore, the session's bucketed plan lattice, the engine's mixed
+prefill/decode rounds, and the lattice prefetcher's decode transition.
+
+Also home to two satellite regression tests of the bugfix PR that
+introduced buckets:
+
+  * ``proportional_budgets`` may never sum past ``l2_size`` (a one-byte
+    overshoot makes the joint CP's shared-L2 constraint infeasible) —
+    property-tested over random weight vectors;
+  * the PlanStore's composite (occupancy x bucket-vector) keys must
+    keep the LRU honest: protected entries survive any pressure, the
+    solutions sidecar answers distance-0 self-matches after eviction,
+    and ``re_misses`` counts thrash per composite key, not per
+    occupancy.
+"""
+
+import random
+
+import pytest
+
+from repro.core.shapes import (PlanKey, ShapeBucketSpec, describe_key,
+                               key_distance, key_sort, make_plan_key,
+                               pow2_buckets, remap_key)
+
+MAX_SEQ = 32
+
+
+# ---------------------------------------------------------------------------
+# vocabulary: specs and keys
+# ---------------------------------------------------------------------------
+
+
+def _spec(lo=1, hi=MAX_SEQ, default=None):
+    return ShapeBucketSpec(buckets=pow2_buckets(lo, hi),
+                           make_graph=lambda s: None, default=default)
+
+
+def test_bucket_spec_validation_and_rounding():
+    spec = _spec()
+    assert spec.buckets == (1, 2, 4, 8, 16, 32)
+    assert spec.default == 32                       # prefill-heaviest
+    assert spec.bucket_for(1) == 1                  # decode
+    assert spec.bucket_for(3) == 4                  # round up
+    assert spec.bucket_for(32) == 32
+    assert spec.bucket_for(1000) == 32              # clamped
+    assert spec.neighbors(1) == (2,)
+    assert spec.neighbors(8) == (4, 16)
+    assert spec.neighbors(32) == (16,)
+    with pytest.raises(ValueError):
+        spec.bucket_for(0)
+    with pytest.raises(ValueError):
+        spec.neighbors(3)                           # not a bucket
+    with pytest.raises(ValueError):
+        ShapeBucketSpec(buckets=(4, 2), make_graph=lambda s: None)
+    with pytest.raises(ValueError):
+        ShapeBucketSpec(buckets=(3,), make_graph=lambda s: None)
+    with pytest.raises(ValueError):
+        ShapeBucketSpec(buckets=(2, 4), make_graph=lambda s: None,
+                        default=8)
+
+
+def test_plan_key_canonicalization():
+    # all-default collapses to the bare frozenset — bitwise the
+    # pre-shape key, so fixed-shape stores never see a PlanKey
+    assert make_plan_key([0, 1]) == frozenset({0, 1})
+    assert make_plan_key([1, 0], {}) == frozenset({0, 1})
+    k = make_plan_key([0, 1], {1: 4})
+    assert isinstance(k, PlanKey)
+    assert k.occupancy == frozenset({0, 1})
+    assert k.bucket_of(1) == 4 and k.bucket_of(0) is None
+    # PlanKey never collides with the bare key at the same occupancy
+    assert k != frozenset({0, 1})
+    assert hash(k) != hash(frozenset({0, 1})) or k != frozenset({0, 1})
+    with pytest.raises(ValueError):
+        PlanKey(frozenset({0, 1}), ())              # bucket-less
+    with pytest.raises(ValueError):
+        make_plan_key([0], {1: 4})                  # tenant not active
+    with pytest.raises(ValueError):
+        make_plan_key([0, 1], {1: 0})               # bucket < 1
+
+
+def test_key_distance_and_order_on_the_product_lattice():
+    bare = make_plan_key([0, 1])
+    dec = make_plan_key([0, 1], {1: 1})
+    pre = make_plan_key([0, 1], {1: 4})
+    solo = make_plan_key([1], {1: 1})
+    assert key_distance(bare, bare) == 0
+    assert key_distance(dec, dec) == 0
+    assert key_distance(bare, dec) == 1             # one bucket move
+    assert key_distance(dec, pre) == 1              # ladder rung
+    assert key_distance(dec, solo) == 1             # occupancy leave
+    assert key_distance(bare, solo) == 2            # leave + bucket
+    # deterministic total order: bare sorts before bucketed at the
+    # same occupancy, smaller occupancies first
+    keys = sorted([pre, bare, solo, dec], key=key_sort)
+    assert keys == [solo, bare, dec, pre]
+    # remap under a tenant re-indexing keeps the bucket vector
+    rm = remap_key(dec, {0: 5, 1: 3})
+    assert rm == make_plan_key([3, 5], {3: 1})
+    # bare keys describe exactly like the pre-shape occupancy string
+    assert describe_key(bare) == str(sorted({0, 1}))
+    assert "t1:1" in describe_key(dec)
+
+
+def test_proportional_budgets_never_overshoot_l2():
+    """Satellite: floor + proportional share + remainder must sum to at
+    most ``l2_size`` for ANY weights — the old rescale could round a ulp
+    high and push the joint CP infeasible."""
+    from repro.core.deploy import proportional_budgets
+    rng = random.Random(7)
+    for trial in range(500):
+        n = rng.randint(1, 8)
+        l2 = rng.choice([64, 1024, 65536, 2 ** 20, 7 * 11 * 13])
+        kind = trial % 5
+        if kind == 0:
+            weights = [rng.random() for _ in range(n)]
+        elif kind == 1:
+            weights = [rng.random() * 1e9 for _ in range(n)]
+        elif kind == 2:
+            weights = [0.0] * n                     # degenerate: equal
+        elif kind == 3:
+            weights = [rng.choice([0.0, 1e-12, 1.0]) for _ in range(n)]
+        else:
+            weights = [rng.random() * rng.choice([1e-9, 1.0, 1e6])
+                       for _ in range(n)]
+        budgets = proportional_budgets(l2, weights)
+        assert len(budgets) == n
+        assert sum(budgets) <= l2, (l2, weights, budgets)
+        assert all(b >= 1 for b in budgets), (l2, weights, budgets)
+        # non-degenerate splits use the whole budget
+        if n > 1 and sum(w for w in weights if w > 0.0) > 0.0:
+            equal = l2 // n
+            floor = max(int(equal * 0.125), 1)
+            if l2 - n * floor >= 0:
+                assert sum(budgets) == l2, (l2, weights, budgets)
+                assert all(b >= floor for b in budgets)
+
+
+# ---------------------------------------------------------------------------
+# PlanStore: composite keys
+# ---------------------------------------------------------------------------
+
+
+def _fake_plan():
+    class P:                                        # identity is enough
+        pass
+    return P()
+
+
+def test_store_composite_keys_lru_and_sidecar():
+    """Satellite: the (occupancy x bucket) key space is much larger than
+    the occupancy space, so LRU pressure arrives sooner — protected
+    entries must still never evict, the sidecar must self-match at
+    distance 0 after its plan is evicted, and re_misses must count per
+    composite key."""
+    from repro.core.deploy import PlanStore
+    store = PlanStore(max_entries=4)
+    full = frozenset({0, 1})
+    store.protect(full)
+    store.seed(full, _fake_plan())
+    # flood the store with bucketed lattice points at ONE occupancy
+    keys = [make_plan_key([0, 1], {1: b}) for b in (1, 2, 4, 8, 16)]
+    for k in keys:
+        store.seed(k, _fake_plan())
+        store.seed_solutions(k, {0: f"sol0@{k}", 1: f"sol1@{k}"})
+    # bound respected, protected bare key survived the flood
+    assert store.stats()["co_plans"] <= 4
+    assert store.peek(full) is not None
+    assert store.stats()["evictions"] >= 2
+    # the evicted lattice points are gone; the freshest are present
+    assert store.peek(keys[0]) is None
+    assert store.peek(keys[-1]) is not None
+    # sidecar never evicts: the evicted key's own solutions still answer
+    # at distance 0 (an evicted plan's own solutions are the best warm
+    # start for its re-compile)
+    near = store.nearest_solutions(keys[0])
+    assert near is not None
+    nkey, sols = near
+    assert nkey == keys[0]
+    assert key_distance(nkey, keys[0]) == 0
+    assert sols[1] == f"sol1@{keys[0]}"
+    # re-miss accounting is per composite key: touching the evicted
+    # decode point counts exactly one re-miss; a different bucket at the
+    # same occupancy does not double-count it
+    before = store.stats()["re_misses"]
+    assert store.peek(keys[0], touch=True) is None
+    assert store.stats()["re_misses"] == before + 1
+    assert store.peek(keys[0], touch=True) is None
+    assert store.stats()["re_misses"] == before + 1     # counted once
+    # bare vs bucketed keys never collide
+    store.seed(make_plan_key([2, 3]), _fake_plan())
+    assert store.peek(make_plan_key([2, 3], {3: 2})) is None
+
+
+def test_store_protected_entries_survive_any_pressure():
+    from repro.core.deploy import PlanStore
+    store = PlanStore(max_entries=2)
+    protected = [frozenset({0, 1}), make_plan_key([0, 1], {1: 1})]
+    for k in protected:
+        store.protect(k)
+        store.seed(k, _fake_plan())
+    for b in (2, 4, 8, 16, 32):
+        store.seed(make_plan_key([0, 1], {1: b}), _fake_plan())
+    for k in protected:
+        assert store.peek(k) is not None, k
+    assert store.stats()["evictions"] >= 4
+
+
+# ---------------------------------------------------------------------------
+# session + engine fixtures (compiled once per module — CP solves)
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def lm_session():
+    from repro.core.deploy import CompileRequest, DeploymentSession
+    from repro.models.lm_graphs import lm_tenant
+    from repro.soc.testbed import dense_chain, two_acc_soc
+    soc, pats = two_acc_soc(512, 8.0)
+    lm_graph, lm_spec = lm_tenant("rwkv6", max_seq=MAX_SEQ, d=64, ffn=128)
+    session = DeploymentSession(CompileRequest(
+        graphs=[dense_chain("vision", [64, 64, 64]), lm_graph],
+        soc=soc, patterns=pats, requested_tiles=4, time_budget_s=0.5,
+        joint_time_budget_s=1.0, lazy_joint_time_budget_s=0.5,
+        incremental_time_budget_s=0.5, shape_buckets={1: lm_spec}))
+    session.compile()
+    return session
+
+
+def test_session_bucketed_plan_lattice(lm_session):
+    s = lm_session
+    # plan_key canonicalizes: default bucket drops out, PlanKey passes
+    # through (and refuses a second shapes argument)
+    assert s.plan_key([0, 1]) == frozenset({0, 1})
+    assert s.plan_key([0, 1], {1: MAX_SEQ}) == frozenset({0, 1})
+    k = s.plan_key([0, 1], {1: 1})
+    assert isinstance(k, PlanKey)
+    assert s.plan_key(k) is k
+    with pytest.raises(ValueError):
+        s.plan_key(k, {1: 2})
+    with pytest.raises(ValueError):
+        s.plan_key([0, 1], {0: 4})          # vision has no bucket spec
+    with pytest.raises(ValueError):
+        s.plan_key([0, 1], {1: 3})          # not a bucket of the spec
+
+    # the decode lattice point compiles to a distinct, cheaper plan
+    full = s.plan_for([0, 1])
+    dec = s.plan_for([0, 1], shapes={1: 1})
+    assert dec is not full
+    assert dec.makespan < full.makespan
+    # cached: same object on re-query, also via the PlanKey spelling
+    assert s.plan_for([0, 1], shapes={1: 1}) is dec
+    assert s.plan_for(k) is dec
+    assert s.try_plan_for([0, 1], shapes={1: 1}) is dec
+
+    # bucket singles price the floor at the bucket, not the prefill graph
+    dec_single = s.bucket_single(1, 1)
+    pre_single = s.bucket_single(1, MAX_SEQ)
+    assert pre_single is s.compile().singles[1]     # default identity
+    assert dec_single.plan.makespan < pre_single.plan.makespan
+
+    # the decode co-round beats the sequential (compile-alone) floor —
+    # the ISSUE's headline acceptance property
+    floor = (s.compile().singles[0].plan.makespan
+             + dec_single.plan.makespan)
+    assert dec.makespan < floor
+
+
+def test_session_bucketed_plans_are_analyzer_clean(lm_session):
+    s = lm_session
+    s.plan_for([0, 1], shapes={1: 1})
+    s.plan_for([1], shapes={1: 2})
+    stats = s.analysis_stats()
+    assert stats["errors"] == 0
+
+
+# ---------------------------------------------------------------------------
+# engine: mixed prefill/decode rounds
+# ---------------------------------------------------------------------------
+
+
+def _engine(lm_session, prefetch=True, **kw):
+    from repro.serve.compiler_thread import BackgroundCompiler
+    from repro.serve.engine import MultiModelEngine
+    compiler = BackgroundCompiler(lm_session, start=False,
+                                  prefetch=prefetch)
+    eng = MultiModelEngine(lm_session.compile(), execute=False,
+                           async_compile=compiler, **kw)
+    return eng, compiler
+
+
+def test_engine_buckets_requests_and_prices_floors(lm_session):
+    eng, _ = _engine(lm_session)
+    rid_pre = eng.submit(1, seq_len=30)             # rounds up to 32
+    rid_dec = eng.submit(1, seq_len=1)
+    pre_req = eng.queues[1][0]
+    dec_req = eng.queues[1][1]
+    assert pre_req.rid == rid_pre and pre_req.bucket == MAX_SEQ
+    assert dec_req.rid == rid_dec and dec_req.bucket == 1
+    # per-request floors are priced at the request's bucket
+    assert eng._req_floor_s(dec_req) < eng._req_floor_s(pre_req)
+    # backlog sums per-bucket estimates (satellite: was per-tenant
+    # default-graph makespans for every queued request)
+    assert eng.backlog_s() == pytest.approx(
+        eng._req_floor_s(pre_req) + eng._req_floor_s(dec_req))
+    with pytest.raises(ValueError):
+        eng.submit(0, seq_len=16)                   # vision has no spec
+    eng.run()
+    assert all(r.deadline_met is not False for r in eng.done.values())
+
+
+def test_engine_decode_corounds_and_edf_under_mixed_buckets(lm_session):
+    """Decode requests co-schedule with the vision tenant under the
+    decode-bucket plan, and EDF winnability uses per-request bucket
+    floors: a decode request with a deadline only it can win must
+    dispatch before an earlier-queued prefill whose floor overshoots."""
+    from repro.serve.admission import RoundComposer
+    eng, compiler = _engine(lm_session, composer=RoundComposer())
+    dec_floor = eng._floor_s(1, 1)
+    pre_floor = eng._floor_s(1, MAX_SEQ)
+    assert dec_floor < pre_floor
+    # prefill first into the queue (no deadline), decode second with a
+    # winnable deadline — EDF serves winnable deadlines before
+    # deadline-less FIFO order, so the decode bypasses the prefill
+    eng.submit(1, seq_len=MAX_SEQ)
+    rid = eng.submit(1, seq_len=1,
+                     deadline_s=2.0 * (dec_floor + pre_floor))
+    eng.submit(0)
+    compiler.run_pending()
+    eng.step()
+    assert rid in eng.done
+    assert eng.done[rid].deadline_met is True
+    eng.run()
+    rep = eng.report()
+    assert rep["starvation_events"] == 0
+    assert rep["served"] == 3
+
+
+def _fresh_session():
+    from repro.core.deploy import CompileRequest, DeploymentSession
+    from repro.models.lm_graphs import lm_tenant
+    from repro.soc.testbed import dense_chain, two_acc_soc
+    soc, pats = two_acc_soc(512, 8.0)
+    lm_graph, lm_spec = lm_tenant("rwkv6", max_seq=MAX_SEQ, d=64, ffn=128)
+    session = DeploymentSession(CompileRequest(
+        graphs=[dense_chain("vision", [64, 64, 64]), lm_graph],
+        soc=soc, patterns=pats, requested_tiles=4, time_budget_s=0.5,
+        joint_time_budget_s=1.0, lazy_joint_time_budget_s=0.5,
+        incremental_time_budget_s=0.5, shape_buckets={1: lm_spec}))
+    session.compile()
+    return session
+
+
+def test_engine_prefetch_covers_decode_transition():
+    """The prefill->decode bucket transition lands on a warm plan when
+    the prefetcher runs between arrival and dispatch; without it the
+    same trace pays floor rounds.  Each arm gets a FRESH session — a
+    shared store would leak the warm arm's compiled lattice points into
+    the cold arm."""
+    def trace(prefetch):
+        eng, compiler = _engine(_fresh_session(), prefetch=prefetch)
+        for step in range(5):
+            eng.submit(1, seq_len=MAX_SEQ if step == 0 else 1)
+            eng.submit(0)
+            compiler.run_pending()
+            eng.step()
+        eng.run()
+        return eng.report()
+
+    warm = trace(prefetch=True)
+    cold = trace(prefetch=False)
+    assert warm["served"] == cold["served"] == 10
+    assert warm["floor_rounds"] == 0
+    assert cold["floor_rounds"] >= 1
+    assert warm["async_compiler"]["prefetch_compiled"] >= 1
+    assert warm["starvation_events"] == cold["starvation_events"] == 0
+
+
+def test_compiler_walks_the_bucket_ladder(lm_session):
+    """Observing a dispatched lattice point enqueues its one-rung bucket
+    neighbors (decode-ward rung weighted double) alongside the occupancy
+    joins/leaves."""
+    from repro.serve.compiler_thread import BackgroundCompiler
+    compiler = BackgroundCompiler(lm_session, start=False, prefetch=True)
+    key = lm_session.plan_key([0, 1], {1: 4})
+    compiler.observe(key)
+    compiler.run_pending()
+    hinted = lm_session.store.keys()
+    # both ladder rungs of t1@4 at this occupancy were compiled
+    assert make_plan_key([0, 1], {1: 2}) in hinted
+    assert make_plan_key([0, 1], {1: 8}) in hinted
